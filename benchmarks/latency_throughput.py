@@ -1,0 +1,63 @@
+"""Paper Fig. 28: latency-throughput of MultiPaxos vs Compartmentalized
+MultiPaxos vs the unreplicated state machine, batched and unbatched.
+
+Engine: exact MVA over the calibrated demand tables (one anchor:
+MultiPaxos unbatched = 25k cmd/s), cross-checked by the event-driven DES.
+Reported `derived` fields: peak throughputs + speedups vs the paper's
+measured numbers.
+"""
+import time
+
+import numpy as np
+
+from repro.core.analytical import (
+    PAPER_COMPARTMENTALIZED_BATCHED,
+    PAPER_COMPARTMENTALIZED_UNBATCHED,
+    PAPER_MULTIPAXOS_UNBATCHED,
+    PAPER_UNREPLICATED_UNBATCHED,
+    calibrate_alpha,
+    compartmentalized_model,
+    multipaxos_model,
+    unreplicated_model,
+)
+from repro.core.simulator import des_throughput, mva_curve, mva_curves_batch
+
+
+def run():
+    alpha = calibrate_alpha(PAPER_MULTIPAXOS_UNBATCHED)
+    mp = multipaxos_model(f=1)
+    cmp_u = compartmentalized_model(f=1, n_proxy_leaders=10, grid_rows=2,
+                                    grid_cols=2, n_replicas=4)
+    unrep = unreplicated_model()
+    mp_b = compartmentalized_model(f=1, n_proxy_leaders=2, grid_rows=3,
+                                   grid_cols=1, n_replicas=3, batch_size=100)
+    cmp_b = compartmentalized_model(f=1, n_proxy_leaders=3, grid_rows=2,
+                                    grid_cols=2, n_replicas=2, batch_size=100,
+                                    n_batchers=2, n_unbatchers=3)
+
+    t0 = time.perf_counter()
+    models = [mp, cmp_u, unrep, cmp_b]
+    _, xs, rs = mva_curves_batch(models, alpha, n_clients_max=512)
+    sweep_us = (time.perf_counter() - t0) * 1e6
+
+    peaks = xs.max(axis=1)
+    des_x, _ = des_throughput(cmp_u, alpha, n_clients=128, n_commands=20_000)
+
+    rows = [
+        ("fig28/mva_sweep_4models_512clients", sweep_us,
+         f"jax-MVA full latency-throughput sweep"),
+        ("fig28/multipaxos_unbatched_peak", 0.0,
+         f"{peaks[0]:.0f} cmd/s (paper 25k; calibration anchor)"),
+        ("fig28/compartmentalized_unbatched_peak", 0.0,
+         f"{peaks[1]:.0f} cmd/s = {peaks[1]/peaks[0]:.2f}x "
+         f"(paper 150k = 6x; structural model, msg counts only)"),
+        ("fig28/unreplicated_peak", 0.0,
+         f"{peaks[2]:.0f} cmd/s (paper 250k; model underpredicts - "
+         f"per-msg cost on a bare server is below the protocol-node cost)"),
+        ("fig28/compartmentalized_batched_peak", 0.0,
+         f"{peaks[3]:.0f} cmd/s (paper 800k)"),
+        ("fig28/des_cross_check_cmp_unbatched", 0.0,
+         f"DES {des_x:.0f} vs MVA {peaks[1]:.0f} cmd/s "
+         f"({100*abs(des_x-peaks[1])/peaks[1]:.1f}% apart)"),
+    ]
+    return rows

@@ -1,0 +1,45 @@
+"""Paper Figs. 30 + 31: read scalability vs number of replicas, and the
+closed-form law T = n*alpha / (n*f_w + f_r).
+
+Checks the two counterintuitive paper claims:
+  (1) 1% -> 2% writes halves large-n peak throughput;
+  (2) throughput is bounded by alpha/f_w regardless of replica count.
+"""
+import time
+
+from repro.core.analytical import (
+    PAPER_MULTIPAXOS_UNBATCHED,
+    calibrate_alpha,
+    compartmentalized_model,
+    read_scalability_law,
+)
+
+
+def run():
+    alpha = calibrate_alpha(PAPER_MULTIPAXOS_UNBATCHED)
+    t0 = time.perf_counter()
+    rows = []
+    for frac_read in (0.0, 0.6, 0.9, 1.0):
+        peaks = []
+        for n in (2, 3, 4, 5, 6):
+            m = compartmentalized_model(f=1, n_proxy_leaders=10, grid_rows=4,
+                                        grid_cols=4, n_replicas=n)
+            peaks.append(m.peak_throughput(alpha, f_write=1.0 - frac_read))
+        scale = peaks[-1] / peaks[0]
+        rows.append((f"fig30/reads_{int(frac_read*100)}pct", 0.0,
+                     f"n=2..6 -> {[f'{p:.0f}' for p in peaks]} "
+                     f"(x{scale:.2f} from 2 to 6 replicas)"))
+
+    # closed-form law (Fig 31), alpha_repl = 100k as in the paper's plot
+    a = 100_000.0
+    t1 = read_scalability_law(100_000, 0.01, a)
+    t2 = read_scalability_law(100_000, 0.02, a)
+    rows.append(("fig31/law_1pct_vs_2pct_writes", 0.0,
+                 f"T(1%w)={t1:.0f}, T(2%w)={t2:.0f}, ratio={t1/t2:.2f} "
+                 f"(paper: ratio 2 - small write increases halve throughput)"))
+    rows.append(("fig31/asymptote_50pct_writes", 0.0,
+                 f"T(n=10^5, 50%w)={read_scalability_law(1e5, .5, a):.0f} "
+                 f"<= alpha/f_w = {a/0.5:.0f}"))
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    rows.insert(0, ("fig30/eval", us, "per-point model eval"))
+    return rows

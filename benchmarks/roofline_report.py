@@ -1,0 +1,39 @@
+"""Roofline readout from the dry-run artifacts (results/dryrun/*.json).
+
+Summarises the three terms per cell and names the three hillclimb targets.
+(The full per-cell table is written to EXPERIMENTS.md by
+``python -m repro.roofline.report``.)
+"""
+from pathlib import Path
+
+from repro.roofline.analysis import load_cells, pick_hillclimb_cells
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run():
+    if not RESULTS.exists():
+        return [("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun --all --mesh both` first")]
+    cells = load_cells(str(RESULTS))
+    ok = [c for c in cells if c.status == "ok"]
+    if not ok:
+        return [("roofline/empty", 0.0, "no successful dry-run cells yet")]
+    rows = [("roofline/cells_ok", 0.0,
+             f"{len(ok)} ok / {sum(c.status=='skipped' for c in cells)} "
+             f"skipped / {sum(c.status=='error' for c in cells)} errors")]
+    by_dom = {}
+    for c in ok:
+        by_dom.setdefault(c.dominant, []).append(c)
+    for dom, cs in sorted(by_dom.items()):
+        rows.append((f"roofline/dominant_{dom}", 0.0,
+                     f"{len(cs)} cells; worst MFU_est "
+                     f"{min(x.mfu_est for x in cs):.3f}"))
+    singles = [c for c in ok if c.mesh == "single"]
+    if singles:
+        picks = pick_hillclimb_cells(cells)
+        for k, c in picks.items():
+            rows.append((f"roofline/hillclimb_{k}", 0.0,
+                         f"{c.arch} x {c.shape} ({c.dominant}-bound, "
+                         f"MFU_est {c.mfu_est:.3f})"))
+    return rows

@@ -1,0 +1,62 @@
+"""Benchmark harness - one module per paper table/figure.
+
+  fig28  latency-throughput (MultiPaxos / Compartmentalized / unreplicated)
+  fig29  compartmentalization ablation staircase (+ batched variant)
+  fig30/31  read scalability + closed-form law
+  fig32  weakly consistent reads
+  fig33  skew tolerance vs CRAQ
+  msgcount  measured per-role message counts (validates the demand tables)
+  roofline  dry-run roofline readout (40 cells x 2 meshes)
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (
+    ablation,
+    latency_throughput,
+    protocol_messages,
+    read_scalability,
+    roofline_report,
+    skew,
+    weak_reads,
+)
+
+MODULES = [
+    ("fig28", latency_throughput),
+    ("fig29", ablation),
+    ("fig30_31", read_scalability),
+    ("fig32", weak_reads),
+    ("fig33", skew),
+    ("msgcount", protocol_messages),
+    ("roofline", roofline_report),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in MODULES:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.run()
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{label}/ERROR,0.0,\"{e!r}\"")
+            traceback.print_exc(file=sys.stderr)
+            continue
+        wall_us = (time.perf_counter() - t0) * 1e6
+        for name, us, derived in rows:
+            d = str(derived).replace('"', "'")
+            print(f'{name},{us:.1f},"{d}"')
+        print(f"{label}/total,{wall_us:.1f},\"module wall time\"")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

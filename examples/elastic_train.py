@@ -1,0 +1,52 @@
+"""End-to-end fault-tolerant training driver (the assignment's training
+example): train a small LM for a few hundred steps with RSM-coordinated
+step commits, grid checkpoints, a simulated crash + recovery, a straggler,
+and an elastic rescale.
+
+  PYTHONPATH=src python examples/elastic_train.py
+"""
+import tempfile
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import Trainer
+
+cfg = get_config("granite-3-2b").smoke()
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+
+trainer = Trainer(
+    cfg, ckpt_dir,
+    opt_cfg=AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=200),
+    data_cfg=DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                        global_batch=8, seed=0),
+    n_virtual_workers=4, ckpt_every=20)
+
+print(f"training {cfg.name}: {cfg.n_params():,} params, "
+      f"4 virtual DP workers, grid checkpoints at {ckpt_dir}")
+
+losses = []
+for step in range(120):
+    straggler = 3 if step == 40 else None        # worker 3 hangs at step 40
+    m = trainer.run_step(straggler=straggler)
+    losses.append(m["ce"])
+    if step == 40:
+        print(f"  step 40: straggler worker/3 noop-filled; "
+              f"commit frontier {trainer.coord.view.committed_step}")
+    if step == 60:
+        print("  step 60: simulating full job crash...")
+        restored = trainer.crash_and_recover()
+        print(f"  recovered from committed checkpoint at step {restored} "
+              f"(grid store, one row read)")
+    if step == 80:
+        trainer.scale_workers(6)
+        print(f"  step 80: elastic scale-up to 6 workers "
+              f"(generation {trainer.coord.view.generation}; deterministic "
+              f"data pipeline needs no handoff)")
+    if step % 20 == 0:
+        print(f"step {m['step']:4d} ce={m['ce']:.4f} "
+              f"committed={trainer.coord.view.committed_step}")
+
+print(f"\nloss: first5={sum(losses[:5])/5:.4f} last5={sum(losses[-5:])/5:.4f}")
+assert sum(losses[-5:]) < sum(losses[:5]), "loss should decrease"
+print("done - loss decreased through a straggler, a crash and a rescale.")

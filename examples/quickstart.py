@@ -1,0 +1,37 @@
+"""Quickstart: a linearizable replicated KV store on compartmentalized
+MultiPaxos, in ~40 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import full_compartmentalized
+from repro.core.linearizability import check_linearizable, check_slot_order
+
+# 10 proxy leaders, a 2x2 acceptor grid, 4 replicas (the paper's deployment)
+dep = full_compartmentalized(f=1, n_clients=3, state_machine="kv")
+
+# three concurrent clients
+dep.clients[0].run_ops([("put", "lang", "jax"), ("get", "lang")])
+dep.clients[1].run_ops([("put", "paper", "compartmentalization"),
+                        ("get", "paper")])
+dep.clients[2].run_ops([("get", "lang"), ("put", "lang", "pallas"),
+                        ("get", "lang")])
+dep.run_to_quiescence()
+
+for i, c in enumerate(dep.clients):
+    print(f"client {i} results: {c.results}")
+
+# every replica executed the same log
+states = [r.sm.snapshot() for r in dep.replicas]
+assert all(s == states[0] for s in states), "replica divergence!"
+print(f"replicas in sync: {states[0]}")
+
+# the recorded history is linearizable (exhaustive check)
+assert check_slot_order(dep.history) == []
+assert check_linearizable(dep.history, "kv")
+print(f"history of {len(dep.history)} ops verified linearizable")
+
+# message-count economics (the paper's core claim)
+leader = dep.leaders[0]
+n_writes = 4
+print(f"leader handled ~{(leader.msgs_sent + leader.msgs_received)} msgs "
+      f"for {n_writes} writes (2/cmd; vanilla MultiPaxos needs 3f+4=7/cmd)")

@@ -1,0 +1,45 @@
+"""Serve a small LM through the compartmentalized fleet: weight updates are
+writes through the replicated log; inference requests are leaderless reads
+with watermark consistency (paper sections 3.4/3.6 with inference as the
+read op).
+
+  PYTHONPATH=src python examples/serve_replicated.py
+"""
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.server import ServingDeployment
+
+cfg = get_config("granite-3-2b").smoke()
+params = init_params(cfg, jax.random.key(0))
+
+# --- fleet: 3 model replicas behind a 2x2 acceptor grid -------------------
+fleet = ServingDeployment(cfg, n_replicas=3, n_clients=2,
+                          consistency="linearizable")
+v = fleet.push_weights(params)
+print(f"weights v{v} committed through the log")
+
+for i in range(6):
+    version, toks = fleet.infer([1 + i, 2, 3], max_new=4, client=i % 2)
+    print(f"request {i}: served at {version}, tokens={list(toks)}")
+
+print(f"replica read loads: {fleet.replica_loads()} (spread, no leader)")
+
+# --- a weight update mid-stream -------------------------------------------
+params2 = init_params(cfg, jax.random.key(7))
+fleet.push_weights(params2)
+version, _ = fleet.infer([1, 2, 3], max_new=2)
+assert version == "v2", "linearizable read must see the committed update"
+print(f"post-update read served at {version} (read-your-committed-writes)")
+
+# --- continuous batching on one replica ------------------------------------
+cb = ContinuousBatcher(cfg, params, n_slots=3, max_len=32)
+reqs = [Request(rid=i, prompt=[1, 2, 3, 4], max_new=3) for i in range(8)]
+for r in reqs:
+    cb.submit(r)
+cb.run_until_drained()
+print(f"continuous batching: 8 requests over 3 slots, "
+      f"mean occupancy {cb.mean_occupancy:.2f}, "
+      f"outputs ok: {all(len(r.out) == 3 for r in reqs)}")

@@ -1,0 +1,188 @@
+"""Grid-quorum checkpoint store - compartmentalization 2 applied to
+checkpoint I/O.
+
+Storage nodes form an ``r x w`` grid (paper section 3.2).  A checkpoint is
+split into per-leaf shards; shard ``i`` is assigned to column ``i % w`` and
+written to **every row of that column** (a write quorum).  A restore picks
+any **row** (a read quorum): every row intersects every column, so one row
+holds at least one replica of every shard.
+
+Consequences (mirroring the paper's acceptor-load argument):
+  * each storage node absorbs ~1/w of checkpoint write bytes -> scale write
+    bandwidth by adding columns;
+  * each node serves ~1/r of restore reads -> scale restore/validation
+    bandwidth by adding rows;
+  * any f < r node failures per column leave a live replica; any f < w
+    column outages still leave recovery via other rows' copies of other
+    columns... (grid tolerates one full row AND one full column loss).
+
+Saves are asynchronous (background thread) with crc32 integrity; the
+manifest is the unit the training coordinator orders through the RSM log
+(CKPT_COMMIT) - control path carries manifests, data path carries tensor
+bytes (the S-Paxos split).
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+import zlib
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclass
+class Manifest:
+    step: int
+    leaves: Dict[str, dict]   # name -> {column, shape, dtype, crc32, bytes}
+    treedef_repr: str
+    created_at: float
+
+    def to_json(self) -> str:
+        return json.dumps({"step": self.step, "leaves": self.leaves,
+                           "treedef_repr": self.treedef_repr,
+                           "created_at": self.created_at})
+
+    @staticmethod
+    def from_json(s: str) -> "Manifest":
+        d = json.loads(s)
+        return Manifest(step=d["step"], leaves=d["leaves"],
+                        treedef_repr=d["treedef_repr"],
+                        created_at=d["created_at"])
+
+
+def _leaf_names(tree) -> Tuple[List[str], List[Any], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, jax.tree_util.tree_structure(tree)
+
+
+class GridCheckpointStore:
+    def __init__(self, base_dir: str, rows: int = 2, cols: int = 2) -> None:
+        self.base = Path(base_dir)
+        self.rows, self.cols = rows, cols
+        self.dead: Set[Tuple[int, int]] = set()
+        self.write_bytes_per_node: Dict[Tuple[int, int], int] = {}
+        for r in range(rows):
+            for c in range(cols):
+                self._node_dir(r, c).mkdir(parents=True, exist_ok=True)
+        self._async_threads: List[threading.Thread] = []
+
+    # -- fault injection ------------------------------------------------------
+    def fail_node(self, row: int, col: int) -> None:
+        self.dead.add((row, col))
+
+    def recover_node(self, row: int, col: int) -> None:
+        self.dead.discard((row, col))
+
+    def _node_dir(self, row: int, col: int) -> Path:
+        return self.base / f"node_r{row}_c{col}"
+
+    # -- save -------------------------------------------------------------------
+    def save(self, step: int, tree) -> Manifest:
+        names, leaves, treedef = _leaf_names(tree)
+        manifest_leaves: Dict[str, dict] = {}
+        for i, (name, leaf) in enumerate(zip(names, leaves)):
+            # bf16 has no numpy dtype: store as a uint16 view
+            dtype_str = str(leaf.dtype)
+            if dtype_str == "bfloat16":
+                arr = np.asarray(jax.numpy.asarray(leaf).view(np.uint16))
+            else:
+                arr = np.asarray(leaf)
+            data = arr.tobytes()
+            col = i % self.cols
+            crc = zlib.crc32(data)
+            fname = f"step{step}_{i:05d}.bin"
+            for row in range(self.rows):  # write quorum = the whole column
+                if (row, col) in self.dead:
+                    continue
+                path = self._node_dir(row, col) / fname
+                path.write_bytes(data)
+                key = (row, col)
+                self.write_bytes_per_node[key] = (
+                    self.write_bytes_per_node.get(key, 0) + len(data))
+            manifest_leaves[name] = {
+                "index": i, "column": col, "shape": list(arr.shape),
+                "dtype": dtype_str, "crc32": crc, "bytes": len(data),
+                "file": fname,
+            }
+        manifest = Manifest(step=step, leaves=manifest_leaves,
+                            treedef_repr=str(treedef), created_at=time.time())
+        (self.base / f"manifest_step{step}.json").write_text(manifest.to_json())
+        return manifest
+
+    def save_async(self, step: int, tree) -> threading.Thread:
+        """Snapshot to host first (cheap), then write in the background -
+        training continues while bytes hit 'storage'."""
+        host_tree = jax.tree.map(np.asarray, jax.device_get(tree))
+        t = threading.Thread(target=self.save, args=(step, host_tree),
+                             daemon=True)
+        t.start()
+        self._async_threads.append(t)
+        return t
+
+    def wait(self) -> None:
+        for t in self._async_threads:
+            t.join()
+        self._async_threads.clear()
+
+    # -- restore ----------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = sorted(int(p.stem.split("step")[1])
+                       for p in self.base.glob("manifest_step*.json"))
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like_tree) -> Any:
+        """Read one live row (read quorum); per leaf fall back across rows of
+        its column if a node is dead or the payload is corrupt."""
+        manifest = Manifest.from_json(
+            (self.base / f"manifest_step{step}.json").read_text())
+        names, leaves, treedef = _leaf_names(like_tree)
+        out_leaves = []
+        # pick a starting row that is maximally alive
+        row_order = sorted(range(self.rows),
+                           key=lambda r: sum((r, c) in self.dead
+                                             for c in range(self.cols)))
+        for name, like in zip(names, leaves):
+            meta = manifest.leaves[name]
+            col = meta["column"]
+            data = None
+            for row in row_order:
+                if (row, col) in self.dead:
+                    continue
+                path = self._node_dir(row, col) / meta["file"]
+                if not path.exists():
+                    continue
+                blob = path.read_bytes()
+                if zlib.crc32(blob) != meta["crc32"]:
+                    continue  # bit rot: try the next replica
+                data = blob
+                break
+            if data is None:
+                raise IOError(
+                    f"no intact replica of {name} (column {col}) - more than "
+                    f"f failures in that column")
+            dtype = meta["dtype"]
+            if dtype == "bfloat16":
+                arr = np.frombuffer(data, np.uint16).reshape(meta["shape"])
+                leaf = jax.numpy.asarray(arr).view(jax.numpy.bfloat16)
+            else:
+                arr = np.frombuffer(data, np.dtype(dtype)).reshape(meta["shape"])
+                leaf = jax.numpy.asarray(arr)
+            out_leaves.append(leaf)
+        return jax.tree_util.tree_unflatten(treedef, out_leaves)
+
+    # -- accounting ---------------------------------------------------------------
+    def write_load_fractions(self) -> Dict[str, float]:
+        total = sum(self.write_bytes_per_node.values())
+        if not total:
+            return {}
+        return {f"r{r}c{c}": b / total
+                for (r, c), b in sorted(self.write_bytes_per_node.items())}

@@ -1,0 +1,58 @@
+"""Compartmentalized state machine replication - the paper's contribution.
+
+Correctness plane (deterministic, message-level):
+  protocols.CompartmentalizedMultiPaxos / vanilla_multipaxos /
+  UnreplicatedStateMachine, mencius.MenciusDeployment,
+  spaxos.SPaxosDeployment, craq.CraqDeployment
+  + linearizability checkers.
+
+Performance plane (JAX, calibrated on the paper's anchors):
+  analytical.* demand tables + bottleneck law, simulator.mva_curve /
+  fluid_throughput / des_throughput.
+"""
+from .analytical import (
+    DeploymentModel,
+    Station,
+    ablation_steps,
+    calibrate_alpha,
+    compartmentalized_model,
+    craq_model,
+    mixed_workload_speedup,
+    multipaxos_model,
+    read_scalability_law,
+    unreplicated_model,
+)
+from .cluster import Network, Node
+from .craq import CraqDeployment
+from .history import History, Operation
+from .linearizability import (
+    check_linearizable,
+    check_register_reads,
+    check_slot_order,
+)
+from .mencius import MenciusDeployment
+from .messages import Command, noop_command
+from .protocols import (
+    CompartmentalizedMultiPaxos,
+    DeploymentConfig,
+    UnreplicatedStateMachine,
+    full_compartmentalized,
+    vanilla_multipaxos,
+)
+from .quorums import GridQuorums, MajorityQuorums
+from .simulator import des_throughput, fluid_throughput, mva_curve, mva_curves_batch
+from .spaxos import SPaxosDeployment
+from .statemachine import AppendLog, KVStore, Register, make_state_machine
+
+__all__ = [
+    "AppendLog", "Command", "CompartmentalizedMultiPaxos", "CraqDeployment",
+    "DeploymentConfig", "DeploymentModel", "GridQuorums", "History", "KVStore",
+    "MajorityQuorums", "MenciusDeployment", "Network", "Node", "Operation",
+    "Register", "SPaxosDeployment", "Station", "UnreplicatedStateMachine",
+    "ablation_steps", "calibrate_alpha", "check_linearizable",
+    "check_register_reads", "check_slot_order", "compartmentalized_model",
+    "craq_model", "des_throughput", "fluid_throughput", "full_compartmentalized",
+    "make_state_machine", "mixed_workload_speedup", "multipaxos_model",
+    "mva_curve", "mva_curves_batch", "noop_command", "read_scalability_law",
+    "unreplicated_model", "vanilla_multipaxos",
+]

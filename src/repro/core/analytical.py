@@ -1,0 +1,293 @@
+"""Analytical performance models for the paper's evaluation (section 8).
+
+The unit of cost is one *message* handled (sent or received) by a node; a
+node processes messages at rate ``alpha`` msgs/sec.  Each protocol deployment
+is reduced to a table of **per-server service demands** (expected messages a
+single server of each component class handles per command).  Peak throughput
+is the bottleneck law
+
+    T_peak = alpha / max_k d_k                     (commands / sec)
+
+and the identity of ``argmax_k d_k`` is the *bottleneck component* - the
+quantity the ablation study (paper Fig. 29) tracks as compartmentalizations
+are applied one by one.
+
+The model is deliberately parameter-light: ``alpha`` is calibrated on a
+single anchor (vanilla MultiPaxos = 25k cmd/s, paper Fig. 28) and everything
+else is *predicted*.  ``EXPERIMENTS.md`` reports predictions vs the paper's
+measurements, including where the structural model underpredicts (it captures
+message counts, not JVM/Netty implementation effects).
+
+Also here: the paper's closed-form read-scalability law (section 8.3)
+
+    T(n) = n * alpha / (n * f_w + f_r)
+
+and the CRAQ skew model backing Fig. 33.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+# Paper anchor points (commands/sec), Fig. 28.
+PAPER_MULTIPAXOS_UNBATCHED = 25_000.0
+PAPER_COMPARTMENTALIZED_UNBATCHED = 150_000.0
+PAPER_UNREPLICATED_UNBATCHED = 250_000.0
+PAPER_MULTIPAXOS_BATCHED = 200_000.0
+PAPER_COMPARTMENTALIZED_BATCHED = 800_000.0
+PAPER_UNREPLICATED_BATCHED = 1_000_000.0
+
+
+@dataclass(frozen=True)
+class Station:
+    """A component class: ``servers`` identical nodes, each with per-command
+    service demand ``demand_write``/``demand_read`` (message units *per
+    server*, i.e. already divided by fan-out across the class)."""
+
+    name: str
+    servers: int
+    demand_write: float
+    demand_read: float = 0.0
+
+    def demand(self, f_write: float) -> float:
+        return f_write * self.demand_write + (1.0 - f_write) * self.demand_read
+
+
+@dataclass(frozen=True)
+class DeploymentModel:
+    name: str
+    stations: Tuple[Station, ...]
+
+    def demands(self, f_write: float = 1.0) -> Dict[str, float]:
+        return {s.name: s.demand(f_write) for s in self.stations}
+
+    def bottleneck(self, f_write: float = 1.0) -> Tuple[str, float]:
+        ds = self.demands(f_write)
+        name = max(ds, key=ds.get)  # type: ignore[arg-type]
+        return name, ds[name]
+
+    def peak_throughput(self, alpha: float, f_write: float = 1.0) -> float:
+        _, d = self.bottleneck(f_write)
+        return alpha / d if d > 0 else math.inf
+
+    def total_machines(self) -> int:
+        return sum(s.servers for s in self.stations)
+
+
+# ---------------------------------------------------------------------------
+# Deployment demand tables
+# ---------------------------------------------------------------------------
+
+
+def multipaxos_model(f: int = 1, thrifty: bool = True) -> DeploymentModel:
+    """Vanilla MultiPaxos: 2f+1 machines, each proposer+acceptor+replica.
+
+    All messages are counted (no colocation discount), matching the paper's
+    own accounting (leader sends/receives >= 3f+4 messages per command).
+    """
+    n = 2 * f + 1
+    n_repl = n  # every machine is a replica
+    quorum = f + 1
+    contacted = quorum if thrifty else n
+    # leader machine: client recv + p2a send + p2b recv + chosen send + its
+    # replica-role share of replies
+    leader = 1 + contacted + quorum + n_repl + 1.0 / n_repl
+    # acceptor role on a non-leader machine: thrifty quorum includes it with
+    # probability contacted/n; replica role: chosen recv + reply share
+    follower = 2.0 * contacted / n + 1 + 1.0 / n_repl
+    return DeploymentModel(
+        name=f"multipaxos(f={f})",
+        stations=(
+            Station("leader", 1, leader, leader),  # MP reads go through leader
+            Station("follower", n - 1, follower, follower),
+        ),
+    )
+
+
+def compartmentalized_model(
+    f: int = 1,
+    n_proxy_leaders: int = 10,
+    grid_rows: int = 2,
+    grid_cols: int = 2,
+    n_replicas: int = 4,
+    batch_size: int = 1,
+    n_batchers: int = 0,
+    n_unbatchers: int = 0,
+) -> DeploymentModel:
+    """Compartmentalized MultiPaxos (paper sections 3-4).
+
+    grid: write quorum = column (``grid_rows`` members), read quorum = row
+    (``grid_cols`` members).  ``batch_size=1`` means unbatched.
+    """
+    r, w = grid_rows, grid_cols
+    n_acc = r * w
+    B = float(batch_size)
+    col = r  # write-quorum size
+    row = w  # read-quorum size
+
+    stations: List[Station] = []
+    if n_batchers > 0:
+        # per cmd: recv 1 + send 1/B (write batch to leader); reads also get
+        # prereads amortized over the batch: (2*row + 1)/B
+        d_w = (1 + 1 / B) / n_batchers
+        d_r = (1 + (2 * row + 1) / B) / n_batchers
+        stations.append(Station("batcher", n_batchers, d_w, d_r))
+        leader_w = 2.0 / B
+    else:
+        leader_w = 2.0
+    stations.append(Station("leader", 1, leader_w, 0.0))
+
+    # proxy leader: recv p2a + send p2a to column + recv p2b from column +
+    # send chosen to replicas
+    proxy_per_batch = 1 + col + col + n_replicas
+    stations.append(
+        Station("proxy", max(n_proxy_leaders, 1),
+                proxy_per_batch / B / max(n_proxy_leaders, 1), 0.0))
+
+    # acceptor: writes hit one column (2 msgs each member) -> 2/w per write;
+    # reads hit one row (2 msgs each member) -> 2/r per read
+    stations.append(Station("acceptor", n_acc, 2.0 / w / B, 2.0 / r / B))
+
+    # replica: every replica receives+executes every write; one replica
+    # executes each read; replies owned round-robin (writes) / direct (reads)
+    reply_cost = (1 / B) if n_unbatchers > 0 else 1.0
+    d_repl_w = 1.0 / B + reply_cost / n_replicas
+    d_repl_r = (1.0 / B + reply_cost) / n_replicas
+    stations.append(Station("replica", n_replicas, d_repl_w, d_repl_r))
+
+    if n_unbatchers > 0:
+        d_ub = (1 / B + 1) / n_unbatchers
+        stations.append(Station("unbatcher", n_unbatchers, d_ub, d_ub))
+
+    return DeploymentModel(
+        name=(f"compartmentalized(f={f},p={n_proxy_leaders},grid={r}x{w},"
+              f"n={n_replicas},B={batch_size})"),
+        stations=tuple(stations),
+    )
+
+
+def unreplicated_model(batch_size: int = 1, n_batchers: int = 0,
+                       n_unbatchers: int = 0) -> DeploymentModel:
+    B = float(batch_size)
+    stations = [Station("server", 1, 2.0 / B, 2.0 / B)]
+    if n_batchers:
+        stations.append(Station("batcher", n_batchers, (1 + 1 / B) / n_batchers,
+                                (1 + 1 / B) / n_batchers))
+    if n_unbatchers:
+        stations.append(Station("unbatcher", n_unbatchers, (1 / B + 1) / n_unbatchers,
+                                (1 / B + 1) / n_unbatchers))
+    return DeploymentModel(name=f"unreplicated(B={batch_size})",
+                           stations=tuple(stations))
+
+
+def craq_model(n_nodes: int, skew_p: float, f_write: float,
+               alpha: float, commit_latency_cmds: float = 8.0) -> float:
+    """CRAQ peak throughput under the paper's skew workload (section 8.4).
+
+    With probability ``skew_p`` an op targets hot key 0; otherwise a uniform
+    cold key.  A read of a *dirty* key is forwarded to the tail.  The hot
+    key is dirty whenever one of its writes is in flight; with write arrival
+    rate ``lam_w_hot`` and commit time ``C`` the dirty probability is
+    ``1 - exp(-lam_w_hot * C)`` (M/G/inf busy indicator).
+
+    ``commit_latency_cmds`` expresses chain-commit latency in units of mean
+    per-command service times (2 hops per node each way).
+
+    Solves for the fixed point T where the bottleneck node saturates.
+    """
+    k = n_nodes
+
+    def station_demands(T: float) -> List[float]:
+        lam_w_hot = T * f_write * skew_p
+        C = commit_latency_cmds * (2.0 * k) / alpha
+        dirty = 1.0 - math.exp(-lam_w_hot * C)
+        f_read = 1.0 - f_write
+        # every node: writes cost 4 msgs (fwd recv/send + ack recv/send);
+        # head also takes client recv + reply send
+        demands = []
+        for i in range(k):
+            d = f_write * 4.0
+            if i == 0:
+                d += f_write * 2.0
+            # reads: uniformly addressed; clean served locally (2 msgs)
+            p_fwd = skew_p * dirty
+            d += f_read * ((1.0 - p_fwd) * 2.0 / k + p_fwd * (1.0 / k))
+            if i == k - 1:  # tail: all forwarded reads + its own share
+                d += f_read * p_fwd * 2.0
+            demands.append(d)
+        return demands
+
+    # fixed-point iteration on T
+    T = alpha / 4.0
+    for _ in range(200):
+        d = max(station_demands(T))
+        T_new = alpha / d
+        if abs(T_new - T) < 1e-6 * alpha:
+            T = T_new
+            break
+        T = 0.5 * T + 0.5 * T_new
+    return T
+
+
+# ---------------------------------------------------------------------------
+# Calibration + the paper's closed-form law
+# ---------------------------------------------------------------------------
+
+
+def calibrate_alpha(anchor_throughput: float = PAPER_MULTIPAXOS_UNBATCHED,
+                    model: Optional[DeploymentModel] = None,
+                    f_write: float = 1.0) -> float:
+    """alpha such that ``model`` peaks at ``anchor_throughput``."""
+    model = model or multipaxos_model()
+    _, d = model.bottleneck(f_write)
+    return anchor_throughput * d
+
+
+def read_scalability_law(n_replicas: float, f_write: float,
+                         alpha_replica: float) -> float:
+    """Paper section 8.3:  T = n*alpha / (n*f_w + f_r)."""
+    f_read = 1.0 - f_write
+    return n_replicas * alpha_replica / (n_replicas * f_write + f_read)
+
+
+def ablation_steps(f: int = 1) -> List[Tuple[str, DeploymentModel]]:
+    """The paper's Fig. 29a sequence: decouple, then scale each bottleneck."""
+    return [
+        ("multipaxos", multipaxos_model(f=f)),
+        ("decoupled (2 proxies, 3 acc, 2 repl)",
+         compartmentalized_model(f=f, n_proxy_leaders=2, grid_rows=3, grid_cols=1,
+                                 n_replicas=2)),
+        ("3 proxy leaders",
+         compartmentalized_model(f=f, n_proxy_leaders=3, grid_rows=3, grid_cols=1,
+                                 n_replicas=2)),
+        ("5 proxy leaders",
+         compartmentalized_model(f=f, n_proxy_leaders=5, grid_rows=3, grid_cols=1,
+                                 n_replicas=2)),
+        ("7 proxy leaders",
+         compartmentalized_model(f=f, n_proxy_leaders=7, grid_rows=3, grid_cols=1,
+                                 n_replicas=2)),
+        ("3 replicas",
+         compartmentalized_model(f=f, n_proxy_leaders=7, grid_rows=3, grid_cols=1,
+                                 n_replicas=3)),
+        ("10 proxy leaders",
+         compartmentalized_model(f=f, n_proxy_leaders=10, grid_rows=3, grid_cols=1,
+                                 n_replicas=3)),
+        ("paper deployment (10 proxies, 2x2 grid, 4 replicas)",
+         compartmentalized_model(f=f, n_proxy_leaders=10, grid_rows=2, grid_cols=2,
+                                 n_replicas=4)),
+    ]
+
+
+def mixed_workload_speedup(f_write: float, alpha: float,
+                           n_replicas: int = 6) -> Tuple[float, float, float]:
+    """(T_multipaxos, T_compartmentalized, speedup) for a read/write mix.
+
+    MultiPaxos treats reads as writes (no read path); compartmentalized
+    MultiPaxos serves reads from single replicas (the 16x headline claim is a
+    90% read workload, paper section 10)."""
+    mp = multipaxos_model(f=1).peak_throughput(alpha, f_write=1.0)
+    cmp_model = compartmentalized_model(f=1, n_proxy_leaders=10, grid_rows=4,
+                                        grid_cols=4, n_replicas=n_replicas)
+    cm = cmp_model.peak_throughput(alpha, f_write=f_write)
+    return mp, cm, cm / mp

@@ -1,0 +1,152 @@
+"""Compartmentalized Mencius (paper section 6).
+
+Mencius round-robin partitions the log across ``m`` leaders: leader ``i``
+owns slots ``{k : k % m == i}``.  A leader that lags fills its vacant slots
+with noops ("skip") so replicas can keep executing in prefix order.  The
+compartmentalized deployment (paper Fig. 24) reuses the MultiPaxos roles:
+proxy leaders, acceptor grids, scaled replicas, and the leaderless read path.
+
+Skips are implemented with ``Phase2aRange`` - a single message that votes for
+noops in every owner-owned slot of ``[start, stop)`` - standing in for the
+Coordinated Paxos sub-protocol the paper references.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from .cluster import Network, Node
+from .history import History
+from .messages import (
+    Batch,
+    ClientRequest,
+    NextSlotAnnounce,
+    Phase2a,
+    Phase2aRange,
+)
+from .protocols import BaseDeployment, DeploymentConfig
+from .quorums import GridQuorums, MajorityQuorums, QuorumSystem
+from .roles import Acceptor, Client, ProxyLeader, Replica
+from .statemachine import make_state_machine
+
+
+class MenciusLeader(Node):
+    """One of ``m`` Mencius leaders; sequences only its owned slots."""
+
+    def __init__(
+        self,
+        addr: str,
+        leader_id: int,
+        n_leaders: int,
+        peers: Sequence[str],
+        proxies: Sequence[str],
+        seed: int = 0,
+    ) -> None:
+        super().__init__(addr)
+        self.leader_id = leader_id
+        self.n_leaders = n_leaders
+        self.peers = [p for p in peers if p != addr]
+        self.proxies = list(proxies)
+        self.rng = random.Random(seed * 48271 + leader_id)
+        # next owned slot = next_round * m + leader_id
+        self.next_round = 0
+        self._proxy_rr = 0
+        self.ballot = 0  # every lane starts at ballot 0 (lane = leader_id)
+        self.skips_issued = 0
+
+    @property
+    def next_slot(self) -> int:
+        return self.next_round * self.n_leaders + self.leader_id
+
+    def _send_to_proxy(self, msg: Any) -> None:
+        proxy = self.proxies[self._proxy_rr % len(self.proxies)]
+        self._proxy_rr += 1
+        self.send(proxy, msg)
+
+    def _announce(self) -> None:
+        for p in self.peers:
+            self.send(p, NextSlotAnnounce(leader_id=self.leader_id,
+                                          next_slot=self.next_slot))
+
+    def on_message(self, src: str, msg: Any) -> None:
+        if isinstance(msg, (ClientRequest, Batch)):
+            value = msg.command if isinstance(msg, ClientRequest) else msg
+            slot = self.next_slot
+            self.next_round += 1
+            self._send_to_proxy(Phase2a(slot=slot, ballot=self.ballot, value=value,
+                                        leader_id=self.leader_id))
+            self._announce()
+        elif isinstance(msg, NextSlotAnnounce):
+            # Lagging? fill every owned vacant slot below the peer's frontier
+            # with noops so replicas are not stalled by our holes.
+            if msg.next_slot > self.next_slot:
+                start = self.next_slot
+                stop = msg.next_slot
+                self._send_to_proxy(Phase2aRange(ballot=self.ballot,
+                                                 owner=self.leader_id,
+                                                 start=start, stop=stop,
+                                                 n_leaders=self.n_leaders))
+                self.skips_issued += 1
+                # advance frontier past the filled range
+                while self.next_slot < stop:
+                    self.next_round += 1
+
+
+class MenciusDeployment(BaseDeployment):
+    """Compartmentalized Mencius: m leaders + proxies + grid + replicas."""
+
+    def __init__(
+        self,
+        n_leaders: int = 3,
+        f: int = 1,
+        n_proxy_leaders: int = 4,
+        grid: Optional[Tuple[int, int]] = (2, 2),
+        n_replicas: int = 3,
+        n_clients: int = 3,
+        state_machine: str = "kv",
+        consistency: str = "linearizable",
+        seed: int = 0,
+    ) -> None:
+        self.net = Network(seed=seed)
+        self.history = History()
+        self.n_leaders = n_leaders
+
+        if grid is not None:
+            self.quorums: QuorumSystem = GridQuorums(rows=grid[0], cols=grid[1])
+        else:
+            self.quorums = MajorityQuorums(f=f)
+        self.quorums.validate()
+
+        self.acceptor_addrs = [f"acceptor/{i}" for i in range(self.quorums.n)]
+        self.replica_addrs = [f"replica/{i}" for i in range(n_replicas)]
+        self.proxy_addrs = [f"proxy/{i}" for i in range(n_proxy_leaders)]
+        self.leader_addrs = [f"leader/{i}" for i in range(n_leaders)]
+
+        self.acceptors = [Acceptor(a, i) for i, a in enumerate(self.acceptor_addrs)]
+        self.replicas = [
+            Replica(addr, i, n_replicas, make_state_machine(state_machine), seed=seed)
+            for i, addr in enumerate(self.replica_addrs)
+        ]
+        self.proxies = [
+            ProxyLeader(addr, self.acceptor_addrs, self.quorums, self.replica_addrs,
+                        seed=seed)
+            for addr in self.proxy_addrs
+        ]
+        self.leaders = [
+            MenciusLeader(addr, i, n_leaders, self.leader_addrs, self.proxy_addrs,
+                          seed=seed)
+            for i, addr in enumerate(self.leader_addrs)
+        ]
+        # client i talks to leader i % m (paper: any leader)
+        self.clients = [
+            Client(f"client/{i}", i, self.leader_addrs[i % n_leaders],
+                   self.acceptor_addrs, self.quorums, self.replica_addrs,
+                   consistency=consistency, history=self.history, seed=seed)
+            for i in range(n_clients)
+        ]
+        for group in (self.acceptors, self.replicas, self.proxies, self.leaders,
+                      self.clients):
+            self.net.add_nodes(group)
+
+    def total_skips(self) -> int:
+        return sum(l.skips_issued for l in self.leaders)

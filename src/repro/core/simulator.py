@@ -1,0 +1,182 @@
+"""JAX performance simulators for the protocol deployments.
+
+Two engines, both deterministic:
+
+* :func:`mva_curve` - exact Mean Value Analysis of the closed queueing
+  network induced by a deployment's demand table (N closed-loop clients, one
+  outstanding command each - exactly the paper's benchmark setup).  Written
+  as a ``jax.lax.scan`` over the client count and ``vmap``-able over
+  deployments, so one jitted call sweeps a whole latency-throughput figure
+  (paper Fig. 28).
+
+* :func:`fluid_curve` - a slot-stepped fluid simulation of the same network
+  (service-rate-limited token buckets per station).  Independent dynamics
+  from MVA; used as a cross-check and for transient experiments (e.g. what
+  happens when a component is scaled mid-run).
+
+Service demands come from :mod:`repro.core.analytical`; time units are
+``1/alpha`` (one message's processing time).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .analytical import DeploymentModel
+
+
+def demand_vector(model: DeploymentModel, f_write: float = 1.0) -> np.ndarray:
+    """Per-station service demand of one command (units of 1/alpha)."""
+    return np.array([s.demand(f_write) for s in model.stations], dtype=np.float64)
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _mva_scan(demands: jnp.ndarray, think: jnp.ndarray, n_max: int):
+    """Exact single-class MVA.
+
+    demands: [K] per-station demand (already per-server / load-balanced).
+    Returns (X[n_max], R[n_max]) for N = 1..n_max.
+    """
+
+    def step(q, n):
+        r_k = demands * (1.0 + q)          # residence time per station
+        r = jnp.sum(r_k)
+        x = n / (think + r)                # closed-loop throughput
+        q_new = x * r_k                    # Little's law per station
+        return q_new, (x, r)
+
+    q0 = jnp.zeros_like(demands)
+    _, (xs, rs) = jax.lax.scan(step, q0, jnp.arange(1, n_max + 1, dtype=demands.dtype))
+    return xs, rs
+
+
+def mva_curve(model: DeploymentModel, alpha: float, n_clients_max: int = 512,
+              f_write: float = 1.0, think: float = 0.0
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(clients, throughput cmds/s, median-ish latency seconds) curves."""
+    d = jnp.asarray(demand_vector(model, f_write) / alpha)
+    xs, rs = _mva_scan(d, jnp.asarray(think), n_clients_max)
+    clients = np.arange(1, n_clients_max + 1)
+    return clients, np.asarray(xs), np.asarray(rs)
+
+
+def mva_curves_batch(models: Sequence[DeploymentModel], alpha: float,
+                     n_clients_max: int = 512, f_write: float = 1.0
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """vmapped MVA over several deployments (padded to a common station
+    count).  Returns (clients, X[m, N], R[m, N])."""
+    ds = [demand_vector(m, f_write) / alpha for m in models]
+    k = max(len(d) for d in ds)
+    padded = np.stack([np.pad(d, (0, k - len(d))) for d in ds])
+    xs, rs = jax.vmap(lambda d: _mva_scan(d, jnp.asarray(0.0), n_clients_max))(
+        jnp.asarray(padded))
+    return np.arange(1, n_clients_max + 1), np.asarray(xs), np.asarray(rs)
+
+
+# ---------------------------------------------------------------------------
+# Fluid (slot-stepped) simulation
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _fluid_scan(demands: jnp.ndarray, n_clients: jnp.ndarray, dt: jnp.ndarray,
+                n_steps: int):
+    """Pipeline fluid model.
+
+    State: q[K] work queued at each station (in commands), plus a pool of
+    clients with one outstanding command each.  Commands flow client ->
+    station 0 -> ... -> station K-1 -> client.  Each station drains at rate
+    1/demand_k per unit time (aggregate, demand already per-server).
+    """
+    k = demands.shape[0]
+
+    def step(state, _):
+        q, done = state
+        # per-station service rate in commands per unit time
+        rate = jnp.where(demands > 0, 1.0 / jnp.maximum(demands, 1e-12), jnp.inf)
+        served = jnp.minimum(q, rate * dt)
+        q = q - served
+        # completions at last station return to the client pool and re-enter
+        # station 0 instantly (closed loop, zero think time)
+        inflow = jnp.concatenate([served[-1:], served[:-1]])
+        q = q + inflow
+        done = done + served[-1]
+        return (q, done), served[-1]
+
+    q0 = jnp.zeros((k,)).at[0].set(n_clients)
+    (qf, done), flows = jax.lax.scan(step, (q0, jnp.asarray(0.0)), None,
+                                     length=n_steps)
+    return done, flows
+
+
+def fluid_throughput(model: DeploymentModel, alpha: float, n_clients: int,
+                     f_write: float = 1.0, sim_time: float = 1.0,
+                     n_steps: int = 2000) -> float:
+    """Steady-state throughput (cmds/s) of the fluid pipeline."""
+    d = demand_vector(model, f_write) / alpha
+    dt = sim_time / n_steps
+    done, flows = _fluid_scan(jnp.asarray(d), jnp.asarray(float(n_clients)),
+                              jnp.asarray(dt), n_steps)
+    # measure over the second half (post-transient)
+    half = n_steps // 2
+    return float(np.asarray(flows)[half:].sum() / (dt * (n_steps - half)))
+
+
+# ---------------------------------------------------------------------------
+# Discrete-event cross-validation (numpy; exact FIFO multi-server queues)
+# ---------------------------------------------------------------------------
+
+
+def des_throughput(model: DeploymentModel, alpha: float, n_clients: int,
+                   f_write: float = 1.0, n_commands: int = 20_000,
+                   seed: int = 0, deterministic_service: bool = True
+                   ) -> Tuple[float, float]:
+    """Event-driven simulation of the closed network.  Returns
+    (throughput cmds/s, mean latency s).  Cross-validates MVA/fluid."""
+    import heapq
+
+    rng = np.random.default_rng(seed)
+    demands = demand_vector(model, f_write) / alpha  # seconds per station
+    k = len(demands)
+    servers = np.array([s.servers for s in model.stations])
+    # each station: per-server demand d means one server finishes a command
+    # in d*servers... demands are already per-server shares of the command;
+    # total work per command at station = d * servers, split across servers.
+    work = demands * servers
+
+    free_at = [np.zeros(s) for s in servers]  # next-free time per server
+    events: List[Tuple[float, int, int, int]] = []  # (time, seq, cmd, stage)
+    seq = 0
+    for c in range(n_clients):
+        heapq.heappush(events, (0.0, seq, c, 0))
+        seq += 1
+    start = np.zeros(n_clients)
+    done = 0
+    total_latency = 0.0
+    t = 0.0
+    while done < n_commands and events:
+        t, _, cmd, stage = heapq.heappop(events)
+        if stage == 0:
+            start[cmd] = t
+        if stage == k:
+            done += 1
+            total_latency += t - start[cmd]
+            heapq.heappush(events, (t, seq, cmd, 0))
+            seq += 1
+            continue
+        svc = work[stage]
+        if not deterministic_service:
+            svc = rng.exponential(svc)
+        i = int(np.argmin(free_at[stage]))
+        begin = max(t, free_at[stage][i])
+        finish = begin + svc
+        free_at[stage][i] = finish
+        heapq.heappush(events, (finish, seq, cmd, stage + 1))
+        seq += 1
+    throughput = done / t if t > 0 else 0.0
+    return throughput, total_latency / max(done, 1)

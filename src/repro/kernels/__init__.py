@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the data plane's compute hot spots.
+
+The paper itself is protocol-level (no kernel contribution); these kernels
+are the perf-critical compute layers of the training/serving substrate:
+
+  flash_attention  - training forward (causal, GQA)
+  decode_attention - split-KV flash-decode (the single-chip block of the
+                     distributed sequence-sharded decode)
+  rglru_scan       - RG-LRU linear recurrence (RecurrentGemma)
+  rwkv6_scan       - RWKV-6 WKV chunked recurrence
+
+Each ships with ``ops.py`` (jitted wrapper, backend dispatch) and ``ref.py``
+(pure-jnp oracle); validated in interpret mode on CPU.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""Split-KV flash-decode as a Pallas TPU kernel.
+
+One query token (per sequence) attends to a long KV cache.  The cache is
+split along the sequence axis; each grid step computes a partial
+(max, sum, weighted-value) triple over its split, merged online in VMEM
+scratch - FlashDecoding adapted to the TPU's sequential grid (no atomics:
+the kv-split axis is the innermost grid dimension).
+
+This kernel is also the single-chip building block of the *distributed*
+split-KV decode in ``repro.runtime.collectives``: each model-axis shard
+runs it over its sequence shard and the partials are merged with a psum
+(log-sum-exp) - the sharding scheme that lets 4-10 KV-head GQA models use a
+16-wide model axis (heads alone don't divide it).
+
+Grid: (B, H_kv, n_splits); all `group` query heads of a kv head are
+processed together (block rows = group, MXU-friendly when group >= 8).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_k: int, n_splits: int, group: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (group, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (block_k, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # mask positions beyond the cache length
+    k_pos = si * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (group, block_k), 1)
+    valid = k_pos < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (alpha * acc_ref[...]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(si == n_splits - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 cache_len: jnp.ndarray, *, block_k: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, d) one token per sequence; caches: (B, H_kv, S_max, d);
+    cache_len: (B,) int32.  Returns (B, H, d)."""
+    B, H, D = q.shape
+    H_kv, S_max = k_cache.shape[1], k_cache.shape[2]
+    group = H // H_kv
+    scale = 1.0 / math.sqrt(D)
+    block_k = min(block_k, S_max)
+    assert S_max % block_k == 0, (S_max, block_k)
+    n_splits = S_max // block_k
+
+    qg = q.reshape(B, H_kv, group, D)
+    kernel = functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                               n_splits=n_splits, group=group)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H_kv, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), lambda b, h, si: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, si: (b, h, si, 0)),
+            pl.BlockSpec((1,), lambda b, h, si: (b,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), lambda b, h, si: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H_kv, group, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_cache, v_cache, cache_len.astype(jnp.int32))
+    return out.reshape(B, H, D)

@@ -1,0 +1,80 @@
+"""Jitted wrappers with backend dispatch for the Pallas kernels.
+
+On TPU the Pallas path runs compiled; everywhere else (this CPU container,
+debugging) the same kernel body executes under ``interpret=True``, or the
+caller can force the jnp reference.  Model code calls these wrappers; the
+dry-run lowers the jnp path (CPU backend), which is what the roofline reads
+- the kernels are the TPU fast path validated by tests/test_kernels*.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import flash_decode as _flash_decode
+from .flash_attention import flash_attention as _flash_attention
+from .rglru_scan import rglru_scan as _rglru_scan
+from .rwkv6_scan import wkv6 as _wkv6
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_heads_dim(x, multiple: int = 128):
+    d = x.shape[-1]
+    pad = (-d) % multiple
+    if pad == 0:
+        return x, d
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths), d
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True,
+                    use_pallas: Optional[bool] = None):
+    """q: (B, H, S, d); k/v: (B, H_kv, S, d)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not _on_tpu():
+        # CPU fast path for tests that don't exercise the kernel body
+        return ref.ref_attention(q, k, v, causal=causal)
+    qp, d0 = _pad_heads_dim(q)
+    kp, _ = _pad_heads_dim(k)
+    vp, _ = _pad_heads_dim(v)
+    out = _flash_attention(qp, kp, vp, causal=causal,
+                           interpret=not _on_tpu())
+    return out[..., :d0]
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def flash_decode(q, k_cache, v_cache, cache_len,
+                 use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not _on_tpu():
+        return ref.ref_decode(q, k_cache, v_cache, cache_len)
+    return _flash_decode(q, k_cache, v_cache, cache_len,
+                         interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def rglru_scan(x, a, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not _on_tpu():
+        return ref.ref_rglru(x, a)
+    return _rglru_scan(x, a, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def wkv6(r, k, v, logw, u, use_pallas: Optional[bool] = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not _on_tpu():
+        return ref.ref_wkv6(r, k, v, logw, u)
+    return _wkv6(r, k, v, logw, u, interpret=not _on_tpu())

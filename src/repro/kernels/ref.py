@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are small, obviously-correct implementations (full-softmax attention,
+serial scans); the model code's chunked paths are themselves tested against
+these same oracles, so kernels and models share one ground truth.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: (B, H, S, d); k/v: (B, H_kv, S, d).  Full-softmax reference."""
+    B, H, S, D = q.shape
+    H_kv = k.shape[1]
+    group = H // H_kv
+    qg = q.reshape(B, H_kv, group, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def ref_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+               cache_len: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, H, d); caches: (B, H_kv, S, d); cache_len: (B,)."""
+    B, H, D = q.shape
+    H_kv, S = k_cache.shape[1], k_cache.shape[2]
+    group = H // H_kv
+    qg = q.reshape(B, H_kv, group, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    valid = jnp.arange(S)[None, :] < cache_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def ref_rglru(x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Serial h_t = a_t h_{t-1} + x_t.  x/a: (B, S, D)."""
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(h, inp):
+        a_t, x_t = inp
+        h = a_t * h + x_t
+        return h, h
+
+    h0 = jnp.zeros_like(xf[:, 0])
+    _, hs = jax.lax.scan(step, h0, (af.swapaxes(0, 1), xf.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1).astype(x.dtype)
+
+
+def ref_wkv6(r, k, v, logw, u):
+    """Serial RWKV-6 recurrence.  r/k/v/logw: (B, H, S, d); u: (H, d)."""
+    B, H, S, D = k.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lw = logw.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lw_t)[..., None] * s + kv
+        return s, y
+
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, lw))
+    _, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype)

@@ -1,0 +1,94 @@
+"""RWKV-6 WKV recurrence as a Pallas TPU kernel (chunked / GLA form).
+
+Per (batch, head), the state S in R^{dk x dv} is carried in VMEM scratch
+across sequence chunks (innermost sequential grid dim).  Each chunk does
+three MXU contractions (intra-chunk scores, intra-chunk output, state
+update) plus VPU exponentials - the same math as
+``repro.models.rwkv6.wkv6_chunked`` (the oracle), with the same log-domain
+recentering so f32 never overflows.
+
+Layout: head_dim=64 pairs two heads per 128-lane register on real TPUs; we
+keep one head per grid step for clarity (the d=64 tiles still map to the
+MXU's 128x128 with 2x padding - noted as future work in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                 chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (chunk, dk)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)      # (chunk, dv)
+    lw = lw_ref[0, 0].astype(jnp.float32)    # (chunk, dk)
+    u = u_ref[0].astype(jnp.float32)         # (dk,)
+
+    cum = jnp.cumsum(lw, axis=0)             # inclusive
+    cume = cum - lw                          # exclusive
+    total = cum[-1]                          # (dk,)
+
+    # intra-chunk, recentered at theta = total/2 (bounded exponents)
+    theta = 0.5 * total[None, :]
+    q_in = r * jnp.exp(cume - theta)
+    k_in = k * jnp.exp(theta - cum)
+    scores = jax.lax.dot_general(q_in, k_in, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    i_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(i_idx > j_idx, scores, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=1, keepdims=True)  # (chunk, 1)
+
+    y = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + diag * v
+    # inter-chunk: y += (r * exp(cume)) @ S
+    y = y + jax.lax.dot_general(r * jnp.exp(cume), s_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = y.astype(o_ref.dtype)
+
+    # state update: S = exp(total) * S + (k * exp(total - cum))^T @ v
+    k_carry = k * jnp.exp(total[None, :] - cum)
+    s_ref[...] = (jnp.exp(total)[:, None] * s_ref[...]
+                  + jax.lax.dot_general(k_carry, v, (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, logw: jnp.ndarray,
+         u: jnp.ndarray, *, chunk: int = 32, interpret: bool = False
+         ) -> jnp.ndarray:
+    """r/k/v: (B, H, S, d); logw: (B, H, S, d) f32 (clamped >= -5);
+    u: (H, d).  Returns y: (B, H, S, d)."""
+    B, H, S, D = k.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, D), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, D), lambda b, h, ci: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, D), lambda b, h, ci: (b, h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), r.dtype),
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

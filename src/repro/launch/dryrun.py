@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and record memory / cost / collective statistics.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialisation, and the production meshes need 512 placeholder host devices.
+Tests and benchmarks must NOT import this module (they see 1 device).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all          # every cell
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Each cell writes ``results/dryrun/<arch>__<shape>__<mesh>[__tag].json`` with
+compile status, ``compiled.memory_analysis()``, ``compiled.cost_analysis()``
+and per-collective byte counts parsed from the partitioned HLO - the inputs
+to the roofline analysis (EXPERIMENTS.md section Roofline).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, all_configs, get_config, skip_reason
+from repro.configs.shapes import ShapeSpec
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo import collective_stats
+from repro.runtime.sharding import ShardingPolicy
+from repro.runtime.steps import (
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # some backends don't implement it
+        return {"error": repr(e)}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(ma, attr):
+            out[attr] = int(getattr(ma, attr))
+    if not out:
+        out["repr"] = repr(ma)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:
+        return {"error": repr(e)}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+def _jit_for(cfg, shape, policy):
+    specs = input_specs(cfg, shape)
+    if shape.kind == "train":
+        fn = make_train_step(cfg)
+        p_sh = policy.params_shardings(specs["params"])
+        o_sh = policy.opt_state_shardings(specs["params"])
+        b_sh = policy.batch_shardings(specs["batch"])
+        jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, None),
+                         donate_argnums=(0, 1))
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        p_sh = policy.params_shardings(specs["params"])
+        b_sh = policy.batch_shardings(specs["batch"])
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh))
+        args = (specs["params"], specs["batch"])
+    else:  # decode
+        fn = make_serve_step(cfg)
+        p_sh = policy.params_shardings(specs["params"])
+        c_sh = policy.cache_shardings(specs["caches"])
+        t_sh = policy.batch_shardings(specs["token"])
+        jitted = jax.jit(fn, in_shardings=(p_sh, c_sh, t_sh),
+                         out_shardings=(t_sh, None, c_sh),
+                         donate_argnums=(1,))
+        args = (specs["params"], specs["caches"], specs["token"])
+    return jitted, args
+
+
+def _compile_once(cfg, shape, mesh, policy_kwargs):
+    from repro.runtime.mesh_context import use_mesh
+    policy = ShardingPolicy(cfg, mesh, **(policy_kwargs or {}))
+    jitted, args = _jit_for(cfg, shape, policy)
+    t0 = time.time()
+    with mesh, use_mesh(mesh):
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    return compiled, dt
+
+
+def _reduced_depths(cfg) -> tuple:
+    """Two reduced layer counts (L_a, L_b) preserving the segment pattern.
+
+    (2, 4) periods rather than (1, 2): the slope is extrapolated ~n_layers
+    times, and single-period models see boundary fusion (first/last layer
+    fusing with embed/head) that biases the slope; 2->4 amortizes it
+    (validated against a full unroll in EXPERIMENTS.md - within ~5%)."""
+    prefix = cfg.moe_layer_start
+    period = len(cfg.block_pattern)
+    return prefix + 2 * period, prefix + 4 * period
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             policy_kwargs: dict | None = None, tag: str = "",
+             verbose: bool = True, cfg_overrides: dict | None = None) -> dict:
+    """One dry-run cell, three compiles:
+
+    1. *production pass*: full depth, scanned layers (the deployment path) -
+       proves the cell lowers+compiles on the mesh; records memory analysis
+       and the steady-state collective schedule.
+    2./3. *accounting passes*: reduced depths (1 and 2 pattern periods),
+       scans fully unrolled.  XLA cost analysis counts while bodies once, so
+       unrolled reduced-depth compiles + affine extrapolation in layer count
+       give exact per-cell FLOPs / bytes / collective bytes:
+           total(L) = intercept + slope * L,
+       fitted from the two depths (layer costs are identical across depth).
+    """
+    cfg0 = get_config(arch)
+    cfg0 = dataclasses.replace(cfg0, **(cfg_overrides or {}))
+    shape: ShapeSpec = SHAPES[shape_name]
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "kind": shape.kind, "tag": tag,
+                    "policy": dict(policy_kwargs or {})}
+
+    reason = skip_reason(cfg0, shape_name)
+    if reason:
+        record.update(status="skipped", skip_reason=reason)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    record["n_devices"] = int(mesh.devices.size)
+    try:
+        # -- pass 1: production (scanned, full depth) ---------------------
+        compiled, dt = _compile_once(cfg0, shape, mesh, policy_kwargs)
+        record.update(
+            status="ok",
+            compile_seconds=round(dt, 2),
+            memory_analysis=_memory_analysis_dict(compiled),
+            scheduled_collectives=collective_stats(compiled.as_text()),
+        )
+
+        # -- passes 2+3: unrolled accounting at reduced depths -------------
+        L_a, L_b = _reduced_depths(cfg0)
+        L_a, L_b = min(L_a, cfg0.n_layers), min(L_b, cfg0.n_layers)
+        acct = {}
+        for L in {L_a, L_b}:
+            cfg_r = dataclasses.replace(
+                cfg0, n_layers=L, unroll=True,
+                q_block=min(2048, cfg0.q_block * 8))
+            c_r, dt_r = _compile_once(cfg_r, shape, mesh, policy_kwargs)
+            acct[L] = {
+                "cost": _cost_analysis_dict(c_r),
+                "collectives": collective_stats(c_r.as_text()),
+                "compile_seconds": round(dt_r, 2),
+            }
+        record["accounting_depths"] = sorted(acct)
+        record["accounting"] = {str(k): v for k, v in acct.items()}
+
+        # affine extrapolation to the true depth
+        L = cfg0.n_layers
+        if L_b > L_a:
+            ca, cb = acct[L_a]["cost"], acct[L_b]["cost"]
+            extr = {}
+            for key in set(ca) & set(cb):
+                slope = (cb[key] - ca[key]) / (L_b - L_a)
+                extr[key] = ca[key] + slope * (L - L_a)
+            coll_a, coll_b = acct[L_a]["collectives"], acct[L_b]["collectives"]
+            coll = {}
+            for op in set(coll_a) | set(coll_b):
+                a = coll_a.get(op, {"count": 0, "bytes": 0})
+                b = coll_b.get(op, {"count": 0, "bytes": 0})
+                coll[op] = {
+                    f: a[f] + (b[f] - a[f]) / (L_b - L_a) * (L - L_a)
+                    for f in ("count", "bytes")}
+        else:  # model already at 1-2 periods (whisper): exact
+            extr = acct[L_a]["cost"]
+            coll = acct[L_a]["collectives"]
+        record["cost_analysis"] = extr
+        record["collectives"] = coll
+
+        if verbose:
+            ma = record["memory_analysis"]
+            fl = extr.get("flops", 0)
+            cb_total = sum(v["bytes"] for v in coll.values())
+            print(f"[ok] {arch} x {shape_name} x {mesh_kind}"
+                  f" compile={dt:.1f}s flops/dev={fl:.3e}"
+                  f" coll_bytes/dev={cb_total:.3e}"
+                  f" args={ma.get('argument_size_in_bytes', 0)/2**30:.2f}GiB"
+                  f" temp={ma.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    except Exception as e:
+        record.update(status="error", error=repr(e),
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[ERROR] {arch} x {shape_name} x {mesh_kind}: {e!r}")
+    return record
+
+
+def save_record(record: dict, out_dir: Path = RESULTS_DIR) -> Path:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"__{record['tag']}" if record.get("tag") else ""
+    path = out_dir / (f"{record['arch']}__{record['shape']}"
+                      f"__{record['mesh']}{tag}.json")
+    path.write_text(json.dumps(record, indent=1, default=str))
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every cell")
+    ap.add_argument("--tag", default="", help="policy-variant tag for output")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--flat-qkv", action="store_true",
+                    help="shard q/k/v on flat head*dim even if heads don't divide")
+    ap.add_argument("--kv-dtype", default="",
+                    help="KV-cache dtype override (e.g. int8)")
+    ap.add_argument("--pad-heads", type=int, default=0,
+                    help="zero-pad attention heads to this count (exact "
+                         "math: padded w_o rows are zero); makes head-wise "
+                         "TP divide the model axis")
+    ap.add_argument("--pad-kv-heads", type=int, default=0)
+    ap.add_argument("--fsdp", action="store_true",
+                    help="FSDP over the model axis (params gathered per use)")
+    ap.add_argument("--seq-dp", action="store_true",
+                    help="context parallelism: sequence dim over the pod axis "
+                         "when the batch can't use it")
+    ap.add_argument("--remat-policy", default="",
+                    choices=["", "full", "dots"])
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing entirely")
+    ap.add_argument("--moe-impl", default="",
+                    choices=["", "gshard", "dense", "a2a"])
+    ap.add_argument("--dp-only", action="store_true",
+                    help="pure data parallelism: replicate params, batch over "
+                         "(pod,data,model); pair with --zero1")
+    ap.add_argument("--no-seq-cache", action="store_true",
+                    help="disable sequence sharding of decode caches")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose result JSON already exists")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    policy_kwargs = {}
+    if args.zero1:
+        policy_kwargs["zero1"] = True
+    if args.flat_qkv:
+        policy_kwargs["shard_qkv_by_flat_dim"] = True
+    if args.no_seq_cache:
+        policy_kwargs["seq_shard_cache"] = False
+    if args.dp_only:
+        policy_kwargs["dp_only"] = True
+    if args.fsdp:
+        policy_kwargs["fsdp"] = True
+    if args.seq_dp:
+        policy_kwargs["seq_dp"] = True
+    cfg_overrides = {}
+    if args.kv_dtype:
+        cfg_overrides["cache_dtype"] = args.kv_dtype
+    if args.remat_policy:
+        cfg_overrides["remat_policy"] = args.remat_policy
+    if args.no_remat:
+        cfg_overrides["remat"] = False
+    if args.moe_impl:
+        cfg_overrides["moe_impl"] = args.moe_impl
+    if args.pad_heads:
+        base = get_config(args.arch) if args.arch else None
+        cfg_overrides["n_heads"] = args.pad_heads
+        cfg_overrides["n_kv_heads"] = args.pad_kv_heads or args.pad_heads
+        if base is not None:
+            cfg_overrides["d_head"] = base.head_dim
+    cfg_overrides = cfg_overrides or None
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        archs = sorted(all_configs())
+        shapes = list(SHAPES)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        archs, shapes = [args.arch], [args.shape]
+
+    out_dir = Path(args.out)
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                tag = f"__{args.tag}" if args.tag else ""
+                existing = out_dir / f"{arch}__{shape}__{mesh_kind}{tag}.json"
+                if args.resume and existing.exists():
+                    rec = json.loads(existing.read_text())
+                    if rec.get("status") in ("ok", "skipped"):
+                        n_ok += rec["status"] == "ok"
+                        n_skip += rec["status"] == "skipped"
+                        continue
+                rec = run_cell(arch, shape, mesh_kind,
+                               policy_kwargs=policy_kwargs, tag=args.tag,
+                               cfg_overrides=cfg_overrides)
+                save_record(rec, out_dir)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+                # one process runs ~80 cells: drop compiled executables and
+                # tracing caches or memory accumulates into swap thrash
+                jax.clear_caches()
+                import gc
+                gc.collect()
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

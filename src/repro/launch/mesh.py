@@ -1,0 +1,43 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+``xla_force_host_platform_device_count=512`` before any jax import and then
+calls it.
+
+Mesh axes:
+  single-pod : (data=16, model=16)            - 256 chips (one v5e pod slice)
+  multi-pod  : (pod=2, data=16, model=16)     - 512 chips across 2 pods
+
+Axis roles (see repro.runtime.sharding):
+  "pod"   - outermost data parallelism; gradient reduction across pods rides
+            this axis (optionally int8-compressed - the S-Paxos control/data
+            decoupling), or it becomes the pipeline axis when pp=2.
+  "data"  - in-pod data parallelism (batch) + ZeRO-1 optimizer sharding.
+  "model" - tensor/expert parallelism (heads, ffn, experts, vocab) and the
+            sequence axis of decode KV caches.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for unit tests (requires forced host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """All axes that carry batch parallelism."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis(mesh) -> str:
+    return "model"

@@ -1,0 +1,88 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Layer-level probe for EXPERIMENTS.md §Perf Cell D iteration 2.
+
+Compiles one qwen3-moe MoE layer (fwd + bwd) at the train_4k cell's true
+per-shard token counts on the production 16x16 mesh, in both formulations:
+
+  * ``gshard``: the automatic-SPMD one-hot dispatch (the baseline path),
+    with tokens sharded over (data x model) and experts over model - the
+    layout measured in Cell D iteration 1;
+  * ``a2a``: the explicit shard_map all-to-all dispatch
+    (runtime/moe_a2a.py).
+
+Reports per-layer collective bytes + flops for each; the cell-level totals
+in EXPERIMENTS.md scale by the 48 MoE layers.
+
+  PYTHONPATH=src python -m repro.launch.moe_a2a_probe
+"""
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.launch.mesh import make_production_mesh
+from repro.models.moe import apply_moe_gshard, init_moe
+from repro.roofline.hlo import collective_stats
+from repro.runtime.moe_a2a import make_moe_a2a
+
+
+def main() -> None:
+    cfg = get_config("qwen3-moe-30b-a3b")
+    moe = cfg.moe
+    mesh = make_production_mesh()  # (data=16, model=16)
+    d = cfg.d_model
+    # train_4k: 1,048,576 global tokens
+    B, S = 256, 4096
+
+    params = jax.eval_shape(
+        lambda: init_moe(jax.random.key(0), d, moe, cfg.mlp_kind, cfg.dtype()))
+    x_spec = jax.ShapeDtypeStruct((B, S, d), cfg.cdtype())
+
+    def param_shardings():
+        def assign(path, leaf):
+            pstr = "/".join(str(getattr(q, "key", q)) for q in path)
+            if "experts" in pstr:
+                return NamedSharding(mesh, P(*(("model",)
+                                               + (None,) * (leaf.ndim - 1))))
+            return NamedSharding(mesh, P(*((None,) * leaf.ndim)))
+        return jax.tree_util.tree_map_with_path(assign, params)
+
+    x_sh = NamedSharding(mesh, P(("data", "model"), None, None))
+
+    results = {}
+    for name in ("gshard", "a2a"):
+        if name == "gshard":
+            def loss_fn(p, x):
+                out, aux = apply_moe_gshard(p, x, moe, cfg.mlp_kind)
+                return jnp.sum(out.astype(jnp.float32)) + aux
+        else:
+            layer = make_moe_a2a(mesh, moe, cfg.mlp_kind, d)
+
+            def loss_fn(p, x):
+                out, aux = layer(p, x)
+                return jnp.sum(out.astype(jnp.float32)) + aux
+
+        step = jax.jit(jax.grad(loss_fn), in_shardings=(param_shardings(),
+                                                        x_sh))
+        with mesh:
+            compiled = step.lower(params, x_spec).compile()
+        stats = collective_stats(compiled.as_text())
+        cost = compiled.cost_analysis() or {}
+        total = sum(v["bytes"] for v in stats.values())
+        results[name] = (total, stats, float(cost.get("flops", 0.0)))
+        print(f"{name:7s} per-layer collective bytes/dev = {total:.3e}  "
+              f"flops/dev = {results[name][2]:.3e}")
+        for op, v in sorted(stats.items()):
+            print(f"         {op}: n={v['count']} bytes={v['bytes']:.3e}")
+
+    g, a = results["gshard"][0], results["a2a"][0]
+    print(f"\nper-layer dispatch traffic: gshard {g:.3e} B -> a2a {a:.3e} B "
+          f"({g / max(a, 1):.1f}x reduction)")
+    print(f"cell-level (x48 layers): {48*g/50e9:.2f}s -> {48*a/50e9:.2f}s "
+          f"collective term")
+
+
+if __name__ == "__main__":
+    main()

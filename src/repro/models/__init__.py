@@ -1,0 +1,13 @@
+"""Pure-JAX model zoo for the assigned architectures."""
+from .model import (
+    build_segments,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = ["build_segments", "decode_step", "forward", "init_cache",
+           "init_params", "loss_fn", "prefill"]

@@ -1,0 +1,199 @@
+"""Shared layer primitives for the model zoo.
+
+Everything is functional: ``init_*`` builds a params pytree (nested dicts of
+jnp arrays), ``apply`` functions consume (params, inputs).  Dtype policy:
+parameters in ``param_dtype`` (bf16 for the production configs), activations
+in ``compute_dtype``, normalization statistics and softmax in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def init_layernorm(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(d_head: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, d_head, 2, dtype=np.float64) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10_000.0
+               ) -> jnp.ndarray:
+    """x: (..., S, H, d_head); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d_head, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., :, None, :]  # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions_3d: jnp.ndarray,
+                sections: Tuple[int, int, int] = (16, 24, 24),
+                theta: float = 1_000_000.0) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE [arXiv:2409.12191].
+
+    The d_head/2 frequency dims are split into (temporal, height, width)
+    sections; each section rotates by its own position stream.
+
+    x: (B, S, H, d_head); positions_3d: (3, B, S).  For pure text all three
+    streams are the ordinary position index.
+    """
+    d_head = x.shape[-1]
+    assert sum(sections) == d_head // 2, (sections, d_head)
+    freqs = jnp.asarray(rope_frequencies(d_head, theta), jnp.float32)  # (d/2,)
+    # per-frequency-dim section id: 0 -> t, 1 -> h, 2 -> w
+    sec_id = np.concatenate([np.full(s, i) for i, s in enumerate(sections)])
+    pos = positions_3d.astype(jnp.float32)  # (3, B, S)
+    pos_per_dim = jnp.take(pos, jnp.asarray(sec_id), axis=0)  # (d/2, B, S)
+    angles = jnp.einsum("dbs,d->bsd", pos_per_dim, freqs)  # (B, S, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(batch: int, seq: int, offset=0) -> jnp.ndarray:
+    """(3, B, S) positions for text-only inputs (t = h = w = index)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    return jnp.broadcast_to(pos[None], (3, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    # plain 2-matrix MLP (gelu / relu / squared_relu)
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    elif kind == "squared_relu":  # Nemotron-4 [arXiv:2402.16819]
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    elif kind == "relu":
+        h = jax.nn.relu(x @ params["w_up"])
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype,
+                   tied: bool = False) -> dict:
+    k1, k2 = jax.random.split(key)
+    params = {"tokens": embed_init(k1, vocab, d_model, dtype)}
+    if not tied:
+        params["unembed"] = dense_init(k2, d_model, vocab, dtype)
+    return params
+
+
+def embed_tokens(params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["tokens"], tokens, axis=0)
+
+
+def unembed(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "unembed" in params:
+        return x @ params["unembed"]
+    return x @ params["tokens"].T.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean next-token CE.  logits (B, S, V) - computed in f32; labels (B, S).
+
+    Written as logsumexp - gather so it stays correct when V is sharded
+    (XLA inserts the cross-partition reduction for the logsumexp)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    # one-hot contraction (shard-friendly; avoids take_along_axis gather)
+    label_logit = jnp.sum(
+        logits * jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32),
+        axis=-1)
+    nll = lse - label_logit
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,554 @@
+"""Model assembly: configs -> params -> train / prefill / decode fns.
+
+Layers are grouped into **segments**: maximal runs of a repeating layer
+signature, each executed as one ``lax.scan`` over stacked parameters (with
+optional remat).  This keeps compiled HLO size O(pattern) instead of
+O(n_layers) - an 80-layer model compiles one scanned body - which is what
+makes the 40-cell dry-run tractable and the roofline honest (no unrolled
+duplication).
+
+Heterogeneous stacks are handled by the segment splitter:
+  * uniform decoders (most archs)          -> 1 segment
+  * deepseek-moe (dense layer 0, MoE rest) -> [1-layer segment, 27-layer scan]
+  * recurrentgemma (rglru,rglru,attn)x8+2  -> [3-layer-pattern scan x8, 2-layer scan]
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # avoid circular import (configs.base imports models.moe)
+    from repro.configs.base import ModelConfig
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import rwkv6 as rwkv_lib
+from .layers import (
+    embed_tokens,
+    init_embedding,
+    init_layernorm,
+    init_mlp,
+    init_rmsnorm,
+    layernorm,
+    rmsnorm,
+    softmax_cross_entropy,
+    text_mrope_positions,
+    unembed,
+)
+
+LayerSig = Tuple[str, str]  # (mixer, channel): ("attn", "mlp"), ...
+
+
+@dataclass(frozen=True)
+class Segment:
+    pattern: Tuple[LayerSig, ...]
+    repeats: int
+
+
+# ---------------------------------------------------------------------------
+# segment construction
+# ---------------------------------------------------------------------------
+
+
+def layer_signatures(cfg: ModelConfig) -> List[LayerSig]:
+    return [(t, cfg.channel_kind(i)) for i, t in enumerate(cfg.layer_types())]
+
+
+def split_segments(sigs: List[LayerSig]) -> List[Segment]:
+    segments: List[Segment] = []
+    i = 0
+    while i < len(sigs):
+        rest = sigs[i:]
+        q_best, reps_best = len(rest), 1
+        for q in range(1, len(rest) + 1):
+            reps = len(rest) // q
+            if reps >= 2 and all(rest[j] == rest[j % q] for j in range(reps * q)):
+                q_best, reps_best = q, reps
+                break
+        if reps_best == 1 and len(rest) > 1:
+            # no repeating prefix: emit the leading run of identical sigs
+            r = 1
+            while r < len(rest) and rest[r] == rest[0]:
+                r += 1
+            q_best, reps_best = 1, r
+        segments.append(Segment(pattern=tuple(rest[:q_best]), repeats=reps_best))
+        i += q_best * reps_best
+    return segments
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    return split_segments(layer_signatures(cfg))
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+
+def _init_norm(cfg: ModelConfig, dtype) -> dict:
+    return (init_rmsnorm(cfg.d_model, dtype) if cfg.norm == "rmsnorm"
+            else init_layernorm(cfg.d_model, dtype))
+
+
+def _norm(cfg: ModelConfig, params: dict, x):
+    return rmsnorm(params, x) if cfg.norm == "rmsnorm" else layernorm(params, x)
+
+
+def init_layer(cfg: ModelConfig, sig: LayerSig, key) -> dict:
+    mixer, channel = sig
+    dtype = cfg.dtype()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params: Dict[str, Any] = {"ln1": _init_norm(cfg, dtype)}
+    if mixer in ("attn", "local_attn", "enc_attn"):
+        params["attn"] = attn_lib.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype,
+            qkv_bias=cfg.qkv_bias)
+    elif mixer == "xattn":
+        params["attn"] = attn_lib.init_attention(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype,
+            qkv_bias=cfg.qkv_bias)
+        params["ln_x"] = _init_norm(cfg, dtype)
+        params["xattn"] = attn_lib.init_attention(
+            k4, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, dtype,
+            qkv_bias=cfg.qkv_bias)
+    elif mixer == "rglru":
+        params["rec"] = rglru_lib.init_rglru_block(
+            k1, cfg.d_model, cfg.rnn_width, cfg.conv_width, dtype)
+    elif mixer == "rwkv6":
+        params["tm"] = rwkv_lib.init_rwkv6_time_mix(
+            k1, cfg.d_model, cfg.n_heads, dtype)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+
+    params["ln2"] = _init_norm(cfg, dtype)
+    if channel == "mlp":
+        ff = cfg.d_ff_dense or cfg.d_ff
+        params["mlp"] = init_mlp(k2, cfg.d_model, ff, cfg.mlp_kind, dtype)
+    elif channel == "moe":
+        params["moe"] = moe_lib.init_moe(k2, cfg.d_model, cfg.moe,
+                                         cfg.mlp_kind, dtype)
+    elif channel == "rwkv_cm":
+        params["cm"] = rwkv_lib.init_rwkv6_channel_mix(
+            k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        raise ValueError(f"unknown channel {channel!r}")
+    return params
+
+
+def init_segment(cfg: ModelConfig, seg: Segment, key) -> Tuple[dict, ...]:
+    """Returns a tuple (per pattern position) of stacked (repeats, ...) params."""
+    out = []
+    for pos, sig in enumerate(seg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pos), seg.repeats)
+        stacked = jax.vmap(lambda k: init_layer(cfg, sig, k))(keys)
+        out.append(stacked)
+    return tuple(out)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cfg.dtype()
+    ke, kd, kenc = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ke, cfg.vocab_size, cfg.d_model, dtype,
+                                tied=cfg.tie_embeddings),
+        "final_norm": _init_norm(cfg, dtype),
+    }
+    segs = build_segments(cfg)
+    params["segments"] = [init_segment(cfg, s, jax.random.fold_in(kd, i))
+                          for i, s in enumerate(segs)]
+    if cfg.is_encoder_decoder:
+        enc_sigs = [("enc_attn", "mlp")] * cfg.n_encoder_layers
+        enc_segs = split_segments(enc_sigs)
+        params["enc_segments"] = [
+            init_segment(cfg, s, jax.random.fold_in(kenc, i))
+            for i, s in enumerate(enc_segs)]
+        params["enc_final_norm"] = _init_norm(cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sinusoidal positions (whisper-style absolute)
+# ---------------------------------------------------------------------------
+
+
+def sinusoid_positions(seq: int, dim: int, offset=0) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32) + offset
+    inv = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (math.log(10_000.0) / dim))
+    ang = pos[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[None]
+
+
+# ---------------------------------------------------------------------------
+# block application (full-sequence mode: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def apply_block_seq(cfg: ModelConfig, sig: LayerSig, params: dict,
+                    x: jnp.ndarray, positions, ctx: Optional[jnp.ndarray],
+                    collect_cache: bool, cache_len: Optional[int] = None
+                    ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Full-sequence block.  Returns (x, cache_entry|None, aux_loss)."""
+    mixer, channel = sig
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, params["ln1"], x)
+    cache_entry = None
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               d_head=cfg.head_dim, rope_mode=cfg.rope_mode,
+               rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+               q_block=cfg.q_block)
+
+    if mixer in ("attn", "local_attn", "enc_attn", "xattn"):
+        window = cfg.attn_window if mixer == "local_attn" else None
+        causal = mixer != "enc_attn"
+        B, S, _ = x.shape
+        q, k, v = attn_lib.qkv_project(params["attn"], h, cfg.n_heads,
+                                       cfg.n_kv_heads, cfg.head_dim)
+        q, k = attn_lib._rope_qk(q, k, positions, cfg.rope_mode,
+                                 cfg.rope_theta, cfg.mrope_sections)
+        out = attn_lib.chunked_attention(q, k, v, causal=causal, window=window,
+                                         q_block=cfg.q_block,
+                                         unroll=cfg.unroll)
+        out = out.reshape(B, S, cfg.n_heads * cfg.head_dim) @ params["attn"]["w_o"]
+        if collect_cache:
+            if window is not None:
+                # ring buffer: global position p lives at slot p % window
+                w = window
+                if S >= w:
+                    kw = jnp.roll(k[:, -w:], S % w, axis=1)
+                    vw = jnp.roll(v[:, -w:], S % w, axis=1)
+                else:
+                    kw = jnp.pad(k, ((0, 0), (0, w - S), (0, 0), (0, 0)))
+                    vw = jnp.pad(v, ((0, 0), (0, w - S), (0, 0), (0, 0)))
+                cache_entry = {"k": kw, "v": vw,
+                               "pos": jnp.asarray(S, jnp.int32)}
+            else:
+                cl = max(cache_len or S, S)
+                kp = jnp.pad(k, ((0, 0), (0, cl - S), (0, 0), (0, 0)))
+                vp = jnp.pad(v, ((0, 0), (0, cl - S), (0, 0), (0, 0)))
+                cache_entry = {"k": kp, "v": vp, "pos": jnp.asarray(S, jnp.int32)}
+        x = x + out
+        if mixer == "xattn":
+            hx = _norm(cfg, params["ln_x"], x)
+            qx, kx, vx = attn_lib.qkv_project(params["xattn"], hx, cfg.n_heads,
+                                              cfg.n_kv_heads, cfg.head_dim)
+            # cross-attn keys/values come from the encoder output
+            Bc, Sc, _ = ctx.shape
+            _, kc, vc = attn_lib.qkv_project(params["xattn"], ctx, cfg.n_heads,
+                                             cfg.n_kv_heads, cfg.head_dim)
+            outx = attn_lib.chunked_attention(qx, kc, vc, causal=False,
+                                              q_block=cfg.q_block,
+                                              unroll=cfg.unroll)
+            outx = outx.reshape(B, S, cfg.n_heads * cfg.head_dim) \
+                @ params["xattn"]["w_o"]
+            if collect_cache:
+                cache_entry = {"self": cache_entry, "cross_k": kc, "cross_v": vc}
+            x = x + outx
+    elif mixer == "rglru":
+        out, state = rglru_lib.apply_rglru_block(params["rec"], h)
+        if collect_cache:
+            cache_entry = state
+        x = x + out
+    elif mixer == "rwkv6":
+        out, state = rwkv_lib.apply_time_mix(params["tm"], h, cfg.n_heads,
+                                             unroll=cfg.unroll)
+        if collect_cache:
+            cache_entry = state
+        x = x + out
+    else:
+        raise ValueError(mixer)
+
+    h2 = _norm(cfg, params["ln2"], x)
+    if channel == "mlp":
+        from .layers import apply_mlp
+        x = x + apply_mlp(params["mlp"], h2, cfg.mlp_kind)
+        cm_cache = None
+    elif channel == "moe":
+        if cfg.moe_impl == "a2a":
+            from repro.runtime.mesh_context import current_mesh
+            from repro.runtime.moe_a2a import make_moe_a2a
+            fn = make_moe_a2a(current_mesh(), cfg.moe, cfg.mlp_kind,
+                              cfg.d_model)
+            out, aux = fn(params["moe"], h2)
+        else:
+            out, aux = moe_lib.apply_moe(params["moe"], h2, cfg.moe,
+                                         cfg.mlp_kind, impl=cfg.moe_impl)
+        x = x + out
+        cm_cache = None
+    elif channel == "rwkv_cm":
+        out, cm_state = rwkv_lib.apply_channel_mix(params["cm"], h2)
+        x = x + out
+        cm_cache = cm_state if collect_cache else None
+    else:
+        raise ValueError(channel)
+
+    if collect_cache and sig[0] == "rwkv6":
+        cache_entry = {"tm": cache_entry, "cm": cm_cache}
+    return x, cache_entry, aux
+
+
+def apply_segment_seq(cfg: ModelConfig, seg: Segment, seg_params, x, positions,
+                      ctx=None, collect_cache: bool = False,
+                      cache_len: Optional[int] = None):
+    """Scan a segment over its repeats.  Returns (x, caches|None, aux_sum)."""
+
+    def body(carry, layer_params):
+        x, aux_acc = carry
+        caches = []
+        for pos, sig in enumerate(seg.pattern):
+            x, cache_entry, aux = apply_block_seq(
+                cfg, sig, layer_params[pos], x, positions, ctx, collect_cache,
+                cache_len)
+            caches.append(cache_entry)
+        return (x, aux_acc + aux), (tuple(caches) if collect_cache else None)
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if cfg.remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                    seg_params, unroll=cfg.unroll)
+    return x, caches, aux
+
+
+def _positions_for(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    if cfg.rope_mode == "mrope":
+        return text_mrope_positions(batch, seq, offset)
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    x = frames.astype(cfg.cdtype())
+    x = x + sinusoid_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    enc_sigs = [("enc_attn", "mlp")] * cfg.n_encoder_layers
+    positions = _positions_for(cfg, x.shape[0], x.shape[1])
+    for seg, seg_params in zip(split_segments(enc_sigs), params["enc_segments"]):
+        x, _, _ = apply_segment_seq(cfg, seg, seg_params, x, positions)
+    return _norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frames: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits (B,S,V) f32, aux loss)."""
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens).astype(cfg.cdtype())
+    if cfg.rope_mode == "none" and not cfg.is_encoder_decoder:
+        pass  # rwkv: no positional signal
+    if cfg.is_encoder_decoder:
+        x = x + sinusoid_positions(S, cfg.d_model).astype(x.dtype)
+    ctx = encode(cfg, params, frames) if cfg.is_encoder_decoder else None
+    positions = _positions_for(cfg, B, S)
+    aux_total = jnp.zeros((), jnp.float32)
+    for seg, seg_params in zip(build_segments(cfg), params["segments"]):
+        x, _, aux = apply_segment_seq(cfg, seg, seg_params, x, positions, ctx)
+        aux_total = aux_total + aux
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x).astype(jnp.float32)
+    return logits, aux_total
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: Dict[str, jnp.ndarray],
+            aux_coef: float = 0.01) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          frames=batch.get("frames"))
+    ce = softmax_cross_entropy(logits, batch["labels"],
+                               mask=batch.get("loss_mask"))
+    loss = ce + aux_coef * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
+            frames: Optional[jnp.ndarray] = None,
+            cache_len: Optional[int] = None):
+    """Forward + KV/state cache collection.  Returns (last_logits, caches).
+
+    ``cache_len`` reserves room in the KV caches for subsequent decode
+    steps (defaults to S + 128)."""
+    B, S = tokens.shape
+    cache_len = cache_len or (S + 128)
+    x = embed_tokens(params["embed"], tokens).astype(cfg.cdtype())
+    if cfg.is_encoder_decoder:
+        x = x + sinusoid_positions(S, cfg.d_model).astype(x.dtype)
+    ctx = encode(cfg, params, frames) if cfg.is_encoder_decoder else None
+    positions = _positions_for(cfg, B, S)
+    caches = []
+    for seg, seg_params in zip(build_segments(cfg), params["segments"]):
+        x, seg_cache, _ = apply_segment_seq(cfg, seg, seg_params, x, positions,
+                                            ctx, collect_cache=True,
+                                            cache_len=cache_len)
+        caches.append(seg_cache)
+    x = _norm(cfg, params["final_norm"], x[:, -1:])
+    logits = unembed(params["embed"], x).astype(jnp.float32)
+    return logits[:, 0], caches
+
+
+def apply_block_decode(cfg: ModelConfig, sig: LayerSig, params: dict,
+                       x: jnp.ndarray, cache: Any
+                       ) -> Tuple[jnp.ndarray, Any]:
+    """One-token block step.  x: (B, 1, d)."""
+    mixer, channel = sig
+    h = _norm(cfg, params["ln1"], x)
+    if mixer in ("attn", "local_attn", "xattn"):
+        window = cfg.attn_window if mixer == "local_attn" else None
+        self_cache = cache["self"] if mixer == "xattn" else cache
+        out, new_self = attn_lib.decode_attention_block(
+            params["attn"], h, self_cache, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_head=cfg.head_dim,
+            rope_mode=cfg.rope_mode, rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections, window=window)
+        x = x + out
+        if mixer == "xattn":
+            hx = _norm(cfg, params["ln_x"], x)
+            qx, _, _ = attn_lib.qkv_project(params["xattn"], hx, cfg.n_heads,
+                                            cfg.n_kv_heads, cfg.head_dim)
+            S_enc = cache["cross_k"].shape[1]
+            outx = attn_lib.decode_attention(qx, cache["cross_k"],
+                                             cache["cross_v"],
+                                             jnp.asarray(S_enc, jnp.int32))
+            B = x.shape[0]
+            outx = outx.reshape(B, 1, cfg.n_heads * cfg.head_dim) \
+                @ params["xattn"]["w_o"]
+            x = x + outx
+            new_cache = {"self": new_self, "cross_k": cache["cross_k"],
+                         "cross_v": cache["cross_v"]}
+        else:
+            new_cache = new_self
+    elif mixer == "rglru":
+        out, new_cache = rglru_lib.apply_rglru_block(params["rec"], h,
+                                                     state=cache)
+        x = x + out
+    elif mixer == "rwkv6":
+        out, new_tm = rwkv_lib.apply_time_mix(params["tm"], h, cfg.n_heads,
+                                              state=cache["tm"], impl="serial")
+        x = x + out
+        new_cache = {"tm": new_tm, "cm": cache["cm"]}
+    else:
+        raise ValueError(mixer)
+
+    h2 = _norm(cfg, params["ln2"], x)
+    if channel == "mlp":
+        from .layers import apply_mlp
+        x = x + apply_mlp(params["mlp"], h2, cfg.mlp_kind)
+    elif channel == "moe":
+        out, _ = moe_lib.apply_moe(params["moe"], h2, cfg.moe, cfg.mlp_kind,
+                                   impl=cfg.moe_impl)
+        x = x + out
+    elif channel == "rwkv_cm":
+        out, new_cm = rwkv_lib.apply_channel_mix(params["cm"], h2,
+                                                 state=cache["cm"])
+        x = x + out
+        new_cache = {"tm": new_cache["tm"], "cm": new_cm}
+    return x, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: List, token: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, List]:
+    """One decode step.  token: (B, 1) int32.  Returns (logits (B,V), caches)."""
+    B = token.shape[0]
+    x = embed_tokens(params["embed"], token).astype(cfg.cdtype())
+    if cfg.is_encoder_decoder:
+        # absolute position = current cache pos of the first decoder layer
+        pos = _first_attn_pos(caches)
+        x = x + _sinusoid_at(pos, cfg.d_model).astype(x.dtype)
+
+    new_caches = []
+    for seg, seg_params, seg_cache in zip(build_segments(cfg),
+                                          params["segments"], caches):
+        def body(x, inputs):
+            layer_params, layer_cache = inputs
+            new_layer_cache = []
+            for pos, sig in enumerate(seg.pattern):
+                x, nc = apply_block_decode(cfg, sig, layer_params[pos], x,
+                                           layer_cache[pos])
+                new_layer_cache.append(nc)
+            return x, tuple(new_layer_cache)
+
+        x, new_seg_cache = jax.lax.scan(body, x, (seg_params, seg_cache),
+                                        unroll=cfg.unroll)
+        new_caches.append(new_seg_cache)
+    x = _norm(cfg, params["final_norm"], x)
+    logits = unembed(params["embed"], x).astype(jnp.float32)
+    return logits[:, 0], new_caches
+
+
+def _first_attn_pos(caches):
+    for seg_cache in caches:
+        for entry in seg_cache:
+            if isinstance(entry, dict):
+                if "pos" in entry:
+                    return entry["pos"][0]
+                if "self" in entry:
+                    return entry["self"]["pos"][0]
+    return jnp.zeros((), jnp.int32)
+
+
+def _sinusoid_at(pos, dim):
+    inv = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (math.log(10_000.0) / dim))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               fill_pos: int = 0) -> List:
+    """Zeroed cache pytree (leading (repeats,) axis per segment position)."""
+    dtype = cfg.kv_dtype()
+    segs = build_segments(cfg)
+    caches = []
+    for seg in segs:
+        seg_cache = []
+        for sig in seg.pattern:
+            mixer, _ = sig
+            if mixer in ("attn", "xattn"):
+                entry = attn_lib.init_kv_cache(batch, cache_len,
+                                               cfg.n_kv_heads, cfg.head_dim,
+                                               dtype)
+                entry["pos"] = jnp.asarray(fill_pos, jnp.int32)
+                if mixer == "xattn":
+                    entry = {"self": entry,
+                             "cross_k": jnp.zeros((batch, cfg.encoder_seq_len,
+                                                   cfg.n_kv_heads, cfg.head_dim),
+                                                  dtype),
+                             "cross_v": jnp.zeros((batch, cfg.encoder_seq_len,
+                                                   cfg.n_kv_heads, cfg.head_dim),
+                                                  dtype)}
+            elif mixer == "local_attn":
+                w = min(cfg.attn_window or cache_len, cache_len)
+                entry = attn_lib.init_kv_cache(batch, w, cfg.n_kv_heads,
+                                               cfg.head_dim, dtype)
+                entry["pos"] = jnp.asarray(fill_pos, jnp.int32)
+            elif mixer == "rglru":
+                entry = rglru_lib.init_rglru_state(batch, cfg.rnn_width,
+                                                   cfg.conv_width, dtype)
+            elif mixer == "rwkv6":
+                entry = rwkv_lib.init_rwkv6_state(batch, cfg.d_model,
+                                                  cfg.n_heads, dtype)
+            else:
+                raise ValueError(mixer)
+            # stack over repeats
+            entry = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (seg.repeats,) + a.shape),
+                entry)
+            seg_cache.append(entry)
+        caches.append(tuple(seg_cache))
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    """ShapeDtypeStruct pytree mirroring ``init_cache`` (dry-run inputs)."""
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+    return cache

@@ -1,0 +1,176 @@
+"""Mixture-of-experts FFN - TPU-native formulations.
+
+Two numerically-matching implementations:
+
+* ``gshard``: capacity-factor dense dispatch via one-hot einsums
+  [GShard arXiv:2006.16668, Switch arXiv:2101.03961].  This is the
+  pjit/SPMD-friendly path: sharding the expert axis makes XLA insert
+  all-to-alls; no data-dependent shapes.  Tokens are processed in *groups*
+  to bound the dispatch tensor: (G, S_g, E, C) with C = k * S_g / E * cf.
+
+* ``dense``: every token through every expert, weighted by the (sparse)
+  gate matrix.  O(E/k) more FLOPs - only for tiny smoke shapes and as the
+  drop-free oracle the Pallas/gshard paths are tested against.
+
+Supports fine-grained + shared experts (DeepSeekMoE [arXiv:2401.06066]) and
+128-expert top-8 routing (Qwen3-MoE [hf:Qwen/Qwen3-30B-A3B]).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_mlp, dense_init, init_mlp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int          # per-expert FFN width (fine-grained: small)
+    n_shared: int = 0      # DeepSeekMoE shared experts (always active)
+    capacity_factor: float = 1.25
+    group_size: int = 512  # dispatch group size (bounds one-hot tensors)
+    renormalize: bool = True  # renormalize top-k gate weights
+
+
+def init_moe(key, d_model: int, cfg: MoEConfig, mlp_kind: str, dtype) -> dict:
+    kr, ke, ks = jax.random.split(key, 3)
+    n_mats = 3 if mlp_kind in ("swiglu", "geglu") else 2
+    keys = jax.random.split(ke, cfg.n_experts)
+
+    def one_expert(k):
+        return init_mlp(k, d_model, cfg.d_expert, mlp_kind, dtype)
+
+    experts = jax.vmap(one_expert)(keys)  # stacked: leaf (E, ...)
+    params = {
+        "router": dense_init(kr, d_model, cfg.n_experts, dtype),
+        "experts": experts,
+    }
+    if cfg.n_shared > 0:
+        params["shared"] = init_mlp(ks, d_model, cfg.d_expert * cfg.n_shared,
+                                    mlp_kind, dtype)
+    return params
+
+
+def router_probs(params: dict, x: jnp.ndarray, cfg: MoEConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (gates (T, E) post-softmax f32, top-k weights (T, k),
+    top-k indices (T, k))."""
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(gates, cfg.top_k)
+    if cfg.renormalize:
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return gates, top_w, top_i
+
+
+def load_balance_loss(gates: jnp.ndarray, top_i: jnp.ndarray, n_experts: int
+                      ) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    f = jnp.mean(jax.nn.one_hot(top_i, n_experts, dtype=jnp.float32), axis=(0, 1))
+    p = jnp.mean(gates, axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# dense (oracle) path
+# ---------------------------------------------------------------------------
+
+
+def apply_moe_dense(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+                    mlp_kind: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Every token through every expert; exact (no capacity drops)."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    gates, top_w, top_i = router_probs(params, xt, cfg)
+    # sparse gate matrix (T, E)
+    combine = jnp.zeros_like(gates).at[
+        jnp.arange(xt.shape[0])[:, None], top_i].set(top_w)
+
+    def per_expert(expert_params):
+        return apply_mlp(expert_params, xt, mlp_kind)  # (T, D)
+
+    all_out = jax.vmap(per_expert)(params["experts"])  # (E, T, D)
+    out = jnp.einsum("te,etd->td", combine.astype(x.dtype), all_out)
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], xt, mlp_kind)
+    aux = load_balance_loss(gates, top_i, cfg.n_experts)
+    return out.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# GShard capacity-factor dispatch (SPMD path)
+# ---------------------------------------------------------------------------
+
+
+def _capacity(cfg: MoEConfig, group_tokens: int) -> int:
+    c = int(math.ceil(cfg.top_k * group_tokens * cfg.capacity_factor
+                      / cfg.n_experts))
+    return max(c, cfg.top_k)
+
+
+def apply_moe_gshard(params: dict, x: jnp.ndarray, cfg: MoEConfig,
+                     mlp_kind: str) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-factor one-hot dispatch (GShard).  x: (B, S, D).
+
+    Tokens are flattened and regrouped into groups of ``cfg.group_size``;
+    each group dispatches into (E, C) expert slots.  Overflow tokens are
+    dropped (their combine weight is 0) - matching TPU MoE practice.
+    """
+    B, S, D = x.shape
+    T = B * S
+    g_sz = min(cfg.group_size, T)
+    if T % g_sz:  # largest divisor of T not exceeding the target group size
+        g_sz = math.gcd(T, g_sz)
+        if g_sz == 1:
+            g_sz = T
+    n_groups = T // g_sz
+    xt = x.reshape(n_groups, g_sz, D)
+
+    gates, top_w, top_i = router_probs(params, x.reshape(T, D), cfg)
+    top_w = top_w.reshape(n_groups, g_sz, cfg.top_k)
+    top_i = top_i.reshape(n_groups, g_sz, cfg.top_k)
+
+    C = _capacity(cfg, g_sz)
+    E = cfg.n_experts
+    # position of each (token, choice) within its expert queue, per group
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)  # (G, S, k, E)
+    # rank choices: order by (slot in k, then token index) - cumulative sum
+    flat = onehot.transpose(0, 2, 1, 3).reshape(n_groups, cfg.top_k * g_sz, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # (G, k*S, E)
+    pos = pos.reshape(n_groups, cfg.top_k, g_sz, E).transpose(0, 2, 1, 3)
+    within_cap = pos < C
+    keep = onehot * within_cap  # (G, S, k, E)
+
+    pos_cap = jnp.minimum(pos, C - 1)
+    pos_onehot = jax.nn.one_hot(pos_cap.astype(jnp.int32), C,
+                                dtype=jnp.float32)  # (G, S, k, E, C)
+    dispatch = jnp.einsum("gske,gskec->gsec", keep, pos_onehot)  # (G,S,E,C)
+    combine = jnp.einsum("gsk,gske,gskec->gsec", top_w, keep, pos_onehot)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xt)
+
+    def per_expert(expert_params, xin):  # xin: (G, C, D)
+        return apply_mlp(expert_params, xin, mlp_kind)
+
+    expert_out = jax.vmap(per_expert)(params["experts"], expert_in)  # (E,G,C,D)
+    out = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), expert_out)
+    out = out.reshape(B, S, D)
+    if "shared" in params:
+        out = out + apply_mlp(params["shared"], x, mlp_kind)
+    aux = load_balance_loss(gates, top_i.reshape(T, cfg.top_k), cfg.n_experts)
+    return out, aux
+
+
+def apply_moe(params: dict, x: jnp.ndarray, cfg: MoEConfig, mlp_kind: str,
+              impl: str = "gshard") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if impl == "dense":
+        return apply_moe_dense(params, x, cfg, mlp_kind)
+    if impl == "gshard":
+        return apply_moe_gshard(params, x, cfg, mlp_kind)
+    raise ValueError(f"unknown moe impl {impl!r}")

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma [arXiv:2402.19427]).
+
+Block structure (the paper's "recurrent block"):
+    x -> linear (2 branches) -> [branch1: gelu] ; [branch2: conv1d -> RG-LRU]
+      -> elementwise product -> linear out
+
+RG-LRU recurrence (real-gated linear recurrent unit), per channel:
+    r_t = sigmoid(W_a x_t + b_a)                     (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                     (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)           (decay in (0, 1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The sequence form is a first-order linear recurrence - evaluated with an
+associative scan (O(log S) depth) so both CPU smoke tests and the TPU
+lowering avoid a serial S-step loop.  The Pallas kernel in
+``repro.kernels.rglru_scan`` implements the same contraction with explicit
+VMEM blocking; this module is its oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+C_FACTOR = 8.0  # Griffin's fixed scaling constant
+
+
+def init_rglru_block(key, d_model: int, d_rnn: int, conv_width: int,
+                     dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ Uniform(0.9, 0.999)^c (Griffin appendix)
+    u = jax.random.uniform(ks[0], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / C_FACTOR))  # softplus^-1
+    return {
+        "w_in_rnn": dense_init(ks[1], d_model, d_rnn, dtype),
+        "w_in_gate": dense_init(ks[2], d_model, d_rnn, dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_width, d_rnn), jnp.float32)
+                   * (1.0 / math.sqrt(conv_width))).astype(dtype),
+        "conv_b": jnp.zeros((d_rnn,), dtype),
+        "w_a": dense_init(ks[4], d_rnn, d_rnn, dtype),
+        "b_a": jnp.zeros((d_rnn,), dtype),
+        "w_x": dense_init(ks[5], d_rnn, d_rnn, dtype),
+        "b_x": jnp.zeros((d_rnn,), dtype),
+        "lambda": lam,  # f32
+        "w_out": dense_init(ks[6], d_rnn, d_model, dtype),
+    }
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  state: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B, S, D); w: (W, D).
+
+    state: (B, W-1, D) left context (decode); returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, D)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+def rglru_scan(x: jnp.ndarray, a: jnp.ndarray,
+               h0: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t * h_{t-1} + x_t via associative scan.
+
+    x, a: (B, S, D) f32.  Returns (h (B,S,D), h_last (B,D))."""
+
+    def combine(e1, e2):
+        a1, x1 = e1
+        a2, x2 = e2
+        return a1 * a2, a2 * x1 + x2
+
+    if h0 is not None:
+        x = x.at[:, 0].add(a[:, 0] * h0)
+    a_c, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h, h[:, -1]
+
+
+def rglru(params: dict, x: jnp.ndarray, h0: Optional[jnp.ndarray] = None,
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """RG-LRU over a sequence.  x: (B, S, D_rnn).  f32 state math."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -C_FACTOR * jax.nn.softplus(params["lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    h, h_last = rglru_scan(gated, a, h0)
+    return h.astype(x.dtype), h_last
+
+
+def apply_rglru_block(params: dict, x: jnp.ndarray,
+                      state: Optional[dict] = None
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """Full Griffin recurrent block.  x: (B, S, d_model).
+
+    state (decode): {"h": (B, D_rnn) f32, "conv": (B, W-1, D_rnn)}."""
+    gate = jax.nn.gelu(x @ params["w_in_gate"])
+    u = x @ params["w_in_rnn"]
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = causal_conv1d(u, params["conv_w"], params["conv_b"], conv_state)
+    h0 = state["h"] if state is not None else None
+    h, h_last = rglru(params, u, h0)
+    out = (h * gate) @ params["w_out"]
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru_state(batch: int, d_rnn: int, conv_width: int, dtype) -> dict:
+    return {
+        "h": jnp.zeros((batch, d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype),
+    }

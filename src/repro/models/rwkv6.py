@@ -1,0 +1,268 @@
+"""RWKV-6 "Finch" [arXiv:2404.05892]: attention-free, data-dependent decay.
+
+Time-mix recurrence (per head, state S in R^{dk x dv}):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with per-channel decay w_t = exp(-exp(w0 + lora_w(x))) data-dependent (the
+v6 novelty) and token-shift ddlerp mixing on every projection input.
+
+Sequence evaluation uses the *chunked* linear-attention form (GLA-style
+[arXiv:2312.06635]): within-chunk quadratic contraction + cross-chunk state
+carry, all decays handled in log space.  ``rwkv6_serial`` is the O(S) oracle
+the chunked path and the Pallas kernel are tested against.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+DDLERP_DIM = 32   # TIME_MIX_EXTRA_DIM
+DECAY_DIM = 64    # TIME_DECAY_EXTRA_DIM
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6_time_mix(key, d_model: int, n_heads: int, dtype) -> dict:
+    d_head = d_model // n_heads
+    ks = jax.random.split(key, 12)
+    mu = lambda k: jax.random.uniform(k, (d_model,), jnp.float32).astype(dtype)
+    return {
+        "mu_x": mu(ks[0]), "mu_w": mu(ks[1]), "mu_k": mu(ks[2]),
+        "mu_v": mu(ks[3]), "mu_r": mu(ks[4]), "mu_g": mu(ks[5]),
+        "tm_w1": dense_init(ks[6], d_model, 5 * DDLERP_DIM, dtype),
+        "tm_w2": (jax.random.normal(ks[6], (5, DDLERP_DIM, d_model), jnp.float32)
+                  * 0.01).astype(dtype),
+        "td_w1": dense_init(ks[7], d_model, DECAY_DIM, dtype),
+        "td_w2": (jax.random.normal(ks[7], (DECAY_DIM, d_model), jnp.float32)
+                  * 0.01).astype(dtype),
+        # w0 init: decays spread over (-6, -1) pre-exp (slow..fast)
+        "w0": jnp.linspace(-6.0, -1.0, d_model, dtype=jnp.float32),
+        "w_r": dense_init(ks[8], d_model, d_model, dtype),
+        "w_k": dense_init(ks[9], d_model, d_model, dtype),
+        "w_v": dense_init(ks[10], d_model, d_model, dtype),
+        "w_g": dense_init(ks[11], d_model, d_model, dtype),
+        "u": (jax.random.normal(ks[8], (n_heads, d_head), jnp.float32)
+              * 0.1).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d_model,), dtype),
+        "ln_x_bias": jnp.zeros((d_model,), dtype),
+        "w_o": dense_init(ks[9], d_model, d_model, dtype),
+    }
+
+
+def init_rwkv6_channel_mix(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    mu = lambda k: jax.random.uniform(k, (d_model,), jnp.float32).astype(dtype)
+    return {
+        "mu_k": mu(ks[0]), "mu_r": mu(ks[1]),
+        "w_k": dense_init(ks[2], d_model, d_ff, dtype),
+        "w_v": dense_init(ks[3], d_ff, d_model, dtype),
+        "w_r": dense_init(ks[4], d_model, d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# token shift + ddlerp
+# ---------------------------------------------------------------------------
+
+
+def _shift(x: jnp.ndarray, prev: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """x_{t-1} along the sequence.  prev: (B, D) last token of the previous
+    segment (decode), else zeros."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def ddlerp_inputs(params: dict, x: jnp.ndarray, x_prev: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, ...]:
+    """Data-dependent lerp producing the 5 projection inputs (w, k, v, r, g)."""
+    xx = x_prev - x
+    xxx = x + xx * params["mu_x"]
+    # (B, S, 5*DD) -> (5, B, S, DD) -> (5, B, S, D)
+    mix = jnp.tanh(xxx @ params["tm_w1"])
+    B, S, _ = x.shape
+    mix = mix.reshape(B, S, 5, DDLERP_DIM).transpose(2, 0, 1, 3)
+    dyn = jnp.einsum("nbsd,ndm->nbsm", mix, params["tm_w2"].astype(mix.dtype))
+    mus = jnp.stack([params["mu_w"], params["mu_k"], params["mu_v"],
+                     params["mu_r"], params["mu_g"]]).astype(x.dtype)
+    outs = x[None] + xx[None] * (mus[:, None, None, :] + dyn.astype(x.dtype))
+    return tuple(outs[i] for i in range(5))
+
+
+def decay_log(params: dict, xw: jnp.ndarray) -> jnp.ndarray:
+    """log w_t = -exp(w0 + lora(xw))  (negative; w_t in (0,1)).  f32.
+
+    Clamped at -5 (w >= 6.7e-3 per step): contributions older than a few
+    steps under faster decay are < 1e-10 of the state - numerically
+    indistinguishable - and the clamp bounds the log-domain range so the
+    chunked path cannot overflow f32 (see ``wkv6_chunked``)."""
+    lora = jnp.tanh(xw @ params["td_w1"]) @ params["td_w2"]
+    return jnp.maximum(-jnp.exp(params["w0"] + lora.astype(jnp.float32)), -5.0)
+
+
+def _group_norm(x: jnp.ndarray, scale, bias, n_heads: int,
+                eps: float = 64e-5) -> jnp.ndarray:
+    """Per-head LayerNorm over the head channel dim (RWKV's ln_x)."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, n_heads, D // n_heads).astype(jnp.float32)
+    mean = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mean) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(B, S, D) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# WKV evaluation: serial oracle + chunked form
+# ---------------------------------------------------------------------------
+
+
+def wkv6_serial(r, k, v, logw, u, s0=None):
+    """Serial scan oracle.  r/k/v: (B, S, H, K|V); logw: (B, S, H, K) f32;
+    u: (H, K).  Returns (y (B,S,H,V), s_last (B,H,K,V) f32)."""
+    B, S, H, K = k.shape
+    V = v.shape[-1]
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    s = jnp.zeros((B, H, K, V), jnp.float32) if s0 is None else s0
+
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lw_t)[..., None] * s + kv
+        return s, y
+
+    xs = (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+          vf.transpose(1, 0, 2, 3), logw.transpose(1, 0, 2, 3))
+    s_last, ys = jax.lax.scan(step, s, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), s_last
+
+
+def wkv6_chunked(r, k, v, logw, u, s0=None, chunk: int = 32,
+                 unroll: bool = False):
+    """Chunk-parallel evaluation (GLA form).  Same signature as serial.
+
+    Intra-chunk decay ratios exp(cume_i - cum_j) are computed with a
+    per-(chunk, channel) recentering constant theta = total/2 so that both
+    factors stay within exp(+-|total|/2); with the -5 clamp in
+    ``decay_log`` and chunk=32 this is bounded by exp(80) < f32 max."""
+    B, S, H, K = k.shape
+    V = v.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zf = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (S + pad) // chunk
+    shape_c = (B, n_chunks, chunk, H)
+    rf = r.astype(jnp.float32).reshape(*shape_c, K)
+    kf = k.astype(jnp.float32).reshape(*shape_c, K)
+    vf = v.astype(jnp.float32).reshape(*shape_c, V)
+    lw = logw.reshape(*shape_c, K)
+
+    cum = jnp.cumsum(lw, axis=2)            # inclusive cumulative log decay
+    cum_excl = cum - lw                     # exclusive (decay before step i)
+    total = cum[:, :, -1]                   # (B, nc, H, K)
+
+    s0 = (jnp.zeros((B, H, K, V), jnp.float32) if s0 is None else s0)
+
+    def chunk_step(s, inp):
+        r_c, k_c, v_c, cum_c, cume_c, tot_c = inp  # (B, chunk, H, ...)
+        # intra-chunk: A[i,j] = r_i . (exp(cume_i - cum_j) * k_j), j < i
+        theta = 0.5 * tot_c[:, None]                  # (B, 1, H, K)
+        q_in = r_c * jnp.exp(cume_c - theta)
+        k_in = k_c * jnp.exp(theta - cum_c)
+        scores = jnp.einsum("bihk,bjhk->bhij", q_in, k_in)
+        i_idx = jnp.arange(chunk)
+        mask = i_idx[:, None] > i_idx[None, :]
+        scores = jnp.where(mask[None, None], scores, 0.0)
+        # diagonal bonus: r_i . (u * k_i)
+        diag = jnp.einsum("bihk,hk,bihk->bhi", r_c, u, k_c)
+        y = jnp.einsum("bhij,bjhv->bihv", scores, v_c)
+        y = y + diag.transpose(0, 2, 1)[..., None] * v_c
+        # inter-chunk: y_i += (r_i * exp(cume_i)) @ s   (exponent <= 0: safe)
+        y = y + jnp.einsum("bihk,bhkv->bihv", r_c * jnp.exp(cume_c), s)
+        # state update: s = exp(tot) * s + sum_j exp(tot - cum_j) k_j^T v_j
+        k_carry = k_c * jnp.exp(tot_c[:, None] - cum_c)
+        s = (jnp.exp(tot_c)[..., None] * s
+             + jnp.einsum("bjhk,bjhv->bhkv", k_carry, v_c))
+        return s, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3, 4) for t in (rf, kf, vf, cum, cum_excl))
+    xs = xs + (total.transpose(1, 0, 2, 3),)
+    # NOTE: the chunk scan stays a while loop even under dry-run unrolling
+    # (unroll is capped): unrolling S/chunk = 128+ chunk bodies explodes
+    # compile time, while WKV intra-chunk flops are ~2% of the layer's
+    # projection flops (documented undercount in EXPERIMENTS.md).
+    s_last, ys = jax.lax.scan(chunk_step, s0, xs,
+                              unroll=min(4, n_chunks) if unroll else 1)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, H, V)
+    if pad:
+        y = y[:, :S]
+    return y.astype(r.dtype), s_last
+
+
+# ---------------------------------------------------------------------------
+# full blocks
+# ---------------------------------------------------------------------------
+
+
+def apply_time_mix(params: dict, x: jnp.ndarray, n_heads: int,
+                   state: Optional[dict] = None, impl: str = "chunked",
+                   unroll: bool = False) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, D).  state: {"shift": (B, D), "wkv": (B, H, K, V) f32}."""
+    B, S, D = x.shape
+    d_head = D // n_heads
+    prev = state["shift"] if state is not None else None
+    x_prev = _shift(x, prev)
+    xw, xk, xv, xr, xg = ddlerp_inputs(params, x, x_prev)
+    r = (xr @ params["w_r"]).reshape(B, S, n_heads, d_head)
+    k = (xk @ params["w_k"]).reshape(B, S, n_heads, d_head)
+    v = (xv @ params["w_v"]).reshape(B, S, n_heads, d_head)
+    g = jax.nn.silu(xg @ params["w_g"])
+    logw = decay_log(params, xw).reshape(B, S, n_heads, d_head)
+    s0 = state["wkv"] if state is not None else None
+    if impl == "chunked":
+        y, s_last = wkv6_chunked(r, k, v, logw, params["u"], s0,
+                                 unroll=unroll)
+    else:
+        y, s_last = wkv6_serial(r, k, v, logw, params["u"], s0)
+    y = _group_norm(y.reshape(B, S, D), params["ln_x_scale"],
+                    params["ln_x_bias"], n_heads).astype(x.dtype)
+    out = (y * g) @ params["w_o"]
+    return out, {"shift": x[:, -1], "wkv": s_last}
+
+
+def apply_channel_mix(params: dict, x: jnp.ndarray,
+                      state: Optional[dict] = None
+                      ) -> Tuple[jnp.ndarray, dict]:
+    prev = state["shift"] if state is not None else None
+    x_prev = _shift(x, prev)
+    xx = x_prev - x
+    xk = x + xx * params["mu_k"]
+    xr = x + xx * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    kv = k @ params["w_v"]
+    out = jax.nn.sigmoid(xr @ params["w_r"]) * kv
+    return out, {"shift": x[:, -1]}
+
+
+def init_rwkv6_state(batch: int, d_model: int, n_heads: int, dtype) -> dict:
+    d_head = d_model // n_heads
+    return {
+        "tm": {"shift": jnp.zeros((batch, d_model), dtype),
+               "wkv": jnp.zeros((batch, n_heads, d_head, d_head), jnp.float32)},
+        "cm": {"shift": jnp.zeros((batch, d_model), dtype)},
+    }

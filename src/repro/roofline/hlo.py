@@ -1,0 +1,72 @@
+"""HLO parsing: collective-bytes accounting from a compiled SPMD module.
+
+``compiled.as_text()`` is the post-partitioning per-device HLO, so every
+shape is a per-shard shape and the sum below is **per-device** collective
+bytes.  The roofline's collective term
+
+    collective_bytes_global / (chips * link_bw)
+  ==  collective_bytes_per_device / link_bw
+
+so we divide per-device bytes by the per-chip ICI bandwidth directly.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+# e.g.  "bf16[2048,512]{1,0}"  or  "f32[]"
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# result of an HLO instruction: "  %name = <TYPE> op-name(...".  Async
+# collectives appear as op-start/op-done; we count the -start (the -done
+# carries the same payload and would double count).
+_INSTR_RE = re.compile(
+    r"=\s*(\(?[^)=]*?\)?)\s+(" + "|".join(COLLECTIVE_OPS)
+    + r")(-start)?[\s(.]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective-op-kind: {count, bytes} (per-device result bytes)."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        if f"{op}-done" in line:
+            continue
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += _type_bytes(type_str)
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,33 @@
+"""Trace-time mesh context for shard_map layers inside pjit'd model code.
+
+The model zoo is mesh-agnostic jnp; the one exception is the explicit
+all-to-all MoE layer (``moe_impl="a2a"``), whose shard_map needs the Mesh
+object at trace time.  The launcher/dry-run sets it around ``.lower()``.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: Optional[Mesh] = None
+
+
+def current_mesh() -> Mesh:
+    if _CURRENT is None:
+        raise RuntimeError(
+            "moe_impl='a2a' needs a mesh: wrap lowering in "
+            "repro.runtime.mesh_context.use_mesh(mesh)")
+    return _CURRENT
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT = prev

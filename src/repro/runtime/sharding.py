@@ -1,0 +1,326 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per architecture.
+
+Baseline policy (v1 - the recorded roofline baseline; §Perf iterates on it):
+
+  * vocab & unembed         -> "model" (sharded logits + sharded logsumexp CE)
+  * attention q/o           -> "model" over heads, only when n_heads % |model|
+                               == 0 (reshape-safe propagation); else replicate
+  * attention k/v           -> "model" only when n_kv_heads % |model| == 0
+                               (GQA with few KV heads replicates K/V - the
+                               MaxText convention)
+  * mlp / experts           -> "model" (column-, then row-parallel; experts
+                               sharded on the expert axis = EP)
+  * rglru channel axis      -> "model" (gates, conv, state all channel-local)
+  * rwkv6 projections       -> "model" (64 heads divide 16)
+  * batch                   -> ("pod", "data")
+  * decode KV cache         -> batch over data axes, sequence over "model"
+                               (distributed split-KV decode)
+  * optimizer moments       -> same as params, or ZeRO-1 (first divisible dim
+                               over "data") when enabled
+
+Specs are assigned by tree-path pattern over the params pytree, so they stay
+correct for every architecture's parameter structure automatically.
+
+Perf levers beyond the baseline (each an EXPERIMENTS.md §Perf iteration):
+  zero1                  - ZeRO-1: f32 moments sharded over "data"
+  shard_qkv_by_flat_dim  - shard q/k/v on the flat head*dim axis
+  dp_only                - pure DP: params replicated, batch over every axis
+  fsdp                   - params sharded over "model", gathered per use
+  seq_dp                 - context parallelism: sequence over the "pod" axis
+  cache_dtype (config)   - int8 KV cache for decode bandwidth
+"""
+from __future__ import annotations
+
+import re
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divisible(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+class ShardingPolicy:
+    """Computes PartitionSpecs for params/batches/caches on a given mesh."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh,
+                 zero1: bool = False,
+                 shard_qkv_by_flat_dim: bool = False,
+                 seq_shard_cache: bool = True,
+                 dp_only: bool = False,
+                 fsdp: bool = False,
+                 seq_dp: bool = False):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.model_size = mesh.shape["model"]
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        self.zero1 = zero1
+        # perf-iteration lever: shard q/k/v on the flattened head*dim axis
+        # even when head counts don't divide the model axis
+        self.shard_qkv_by_flat_dim = shard_qkv_by_flat_dim
+        self.seq_shard_cache = seq_shard_cache
+        # perf-iteration lever: pure data parallelism - replicate all params,
+        # spread the batch over (pod, data, model); pair with zero1 so the
+        # f32 moments fit (small/medium models where TP activation
+        # all-reduces dominate the roofline)
+        self.dp_only = dp_only
+        # perf-iteration lever: FSDP over the model axis - params sharded on
+        # their first divisible dim, gathered per-layer at use (param bytes
+        # << activation bytes for big-d models); batch over all axes
+        self.fsdp = fsdp
+        if dp_only or fsdp:
+            self.dp_axes = self.dp_axes + ("model",)
+        # perf-iteration lever: context parallelism - when the batch dim
+        # cannot use every dp axis (global_batch < |dp|), shard the sequence
+        # dim over the leftover "pod" axis; causal attention all-gathers the
+        # (small, GQA) K/V per layer
+        self.seq_dp = seq_dp
+
+    # -- parameter specs -----------------------------------------------------
+    def param_spec(self, path: str, shape: Tuple[int, ...]) -> P:
+        cfg, M = self.cfg, self.model_size
+        if self.dp_only:
+            # MoE experts stay expert-parallel over "model" even under the
+            # otherwise-pure-DP layout (EP+DP: dispatch all-to-alls replace
+            # activation all-reduces; replicating 128 experts would not fit)
+            if re.search(r"moe/experts/", path) and _divisible(shape[0], M):
+                return P(*(["model"] + [None] * (len(shape) - 1)))
+            return P(*([None] * len(shape)))
+        if self.fsdp:
+            for i, dim in enumerate(shape):
+                if _divisible(dim, M):
+                    spec = [None] * len(shape)
+                    spec[i] = "model"
+                    return P(*spec)
+            return P(*([None] * len(shape)))
+        heads_ok = _divisible(cfg.n_heads, M)
+        kv_ok = _divisible(cfg.n_kv_heads, M)
+        q_out = cfg.n_heads * cfg.head_dim
+        kv_out = cfg.n_kv_heads * cfg.head_dim
+
+        def last_dim_model_if(cond):
+            if cond and _divisible(shape[-1], M):
+                return P(*([None] * (len(shape) - 1) + ["model"]))
+            return P(*([None] * len(shape)))
+
+        # embeddings
+        if re.search(r"embed/tokens$", path):
+            return P("model", None) if _divisible(shape[0], M) else P(None, None)
+        if re.search(r"embed/unembed$", path):
+            return last_dim_model_if(_divisible(shape[-1], M))
+
+        # attention
+        if re.search(r"(attn|xattn)/w_q$", path):
+            return last_dim_model_if(heads_ok or self.shard_qkv_by_flat_dim)
+        if re.search(r"(attn|xattn)/w_[kv]$", path):
+            return last_dim_model_if(kv_ok or self.shard_qkv_by_flat_dim)
+        if re.search(r"(attn|xattn)/b_q$", path):
+            return (P("model") if (heads_ok or self.shard_qkv_by_flat_dim)
+                    and _divisible(shape[-1], M) else P(None))
+        if re.search(r"(attn|xattn)/b_[kv]$", path):
+            return (P("model") if (kv_ok or self.shard_qkv_by_flat_dim)
+                    and _divisible(shape[-1], M) else P(None))
+        if re.search(r"(attn|xattn)/w_o$", path):
+            if (heads_ok or self.shard_qkv_by_flat_dim) and _divisible(shape[0], M):
+                return P("model", None)
+            return P(None, None)
+
+        # MoE
+        if re.search(r"moe/router$", path):
+            return P(None, None)
+        if re.search(r"moe/experts/", path):
+            # leaves are stacked (E, d_in, d_out): expert parallelism
+            if _divisible(shape[0], M):
+                return P(*(["model"] + [None] * (len(shape) - 1)))
+            return P(*([None] * len(shape)))
+        if re.search(r"moe/shared/w_(gate|up)$", path):
+            return last_dim_model_if(True)
+        if re.search(r"moe/shared/w_down$", path):
+            return (P("model", None) if _divisible(shape[0], M)
+                    else P(None, None))
+
+        # dense MLP
+        if re.search(r"mlp/w_(gate|up)$", path):
+            return last_dim_model_if(True)
+        if re.search(r"mlp/w_down$", path):
+            return (P("model", None) if _divisible(shape[0], M)
+                    else P(None, None))
+
+        # RG-LRU: channel axis (last dim of in-projs, both dims of gates)
+        if re.search(r"rec/w_in_(rnn|gate)$", path):
+            return last_dim_model_if(True)
+        if re.search(r"rec/conv_[wb]$", path):
+            return last_dim_model_if(True)
+        if re.search(r"rec/w_[ax]$", path):
+            # (r, r): column-parallel; contraction insertion handled by XLA
+            return last_dim_model_if(True)
+        if re.search(r"rec/b_[ax]$", path) or re.search(r"rec/lambda$", path):
+            return P("model") if _divisible(shape[-1], M) else P(None)
+        if re.search(r"rec/w_out$", path):
+            return (P("model", None) if _divisible(shape[0], M)
+                    else P(None, None))
+
+        # RWKV6 time-mix / channel-mix
+        if re.search(r"tm/w_[rkvg]$", path):
+            return last_dim_model_if(_divisible(cfg.n_heads, M))
+        if re.search(r"tm/w_o$", path):
+            return (P("model", None)
+                    if _divisible(cfg.n_heads, M) and _divisible(shape[0], M)
+                    else P(None, None))
+        if re.search(r"tm/u$", path):
+            return (P("model", None) if _divisible(shape[0], M)
+                    else P(None, None))
+        if re.search(r"tm/ln_x_(scale|bias)$", path):
+            return P("model") if _divisible(cfg.n_heads, M) else P(None)
+        if re.search(r"cm/w_k$", path):
+            return last_dim_model_if(True)
+        if re.search(r"cm/w_v$", path):
+            return (P("model", None) if _divisible(shape[0], M)
+                    else P(None, None))
+
+        # norms, small loras, mus, biases: replicated
+        return P(*([None] * len(shape)))
+
+    def params_shardings(self, params_shape) -> Any:
+        """NamedSharding pytree matching a params shape pytree.
+
+        Segment params carry a leading stacked (repeats,) scan axis: the
+        per-layer spec is computed on the unstacked shape and shifted."""
+
+        def assign(path, leaf):
+            p = _path_str(path)
+            if p.startswith("segments") or p.startswith("enc_segments"):
+                spec = P(*((None,) + tuple(self.param_spec(p, leaf.shape[1:]))))
+            else:
+                spec = self.param_spec(p, leaf.shape)
+            return NamedSharding(self.mesh, spec)
+
+        return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+    def opt_state_shardings(self, params_shape) -> Any:
+        p_sh = self.params_shardings(params_shape)
+        if not self.zero1:
+            m = p_sh
+        else:
+            m = jax.tree.map(self._zero1_of, p_sh, params_shape)
+        return {"m": m, "v": m,
+                "step": NamedSharding(self.mesh, P())}
+
+    def _zero1_of(self, sharding: NamedSharding, leaf) -> NamedSharding:
+        """ZeRO-1: additionally shard the first *divisible* unsharded dim of
+        the f32 moments over "data" (falls back to the param sharding)."""
+        n_data = self.mesh.shape["data"]
+        spec = list(sharding.spec)
+        # pad spec to rank (PartitionSpec may be shorter than ndim)
+        spec = spec + [None] * (len(leaf.shape) - len(spec))
+        for i, s in enumerate(spec):
+            if s is None and _divisible(leaf.shape[i], n_data):
+                spec[i] = "data"
+                return NamedSharding(self.mesh, P(*spec))
+        return sharding
+
+    # -- data / activation specs ----------------------------------------------
+    def dp_for(self, n: int):
+        """Largest data-parallel axis subset that evenly divides ``n``.
+
+        Tries subsets of the dp axes largest-first: e.g. global batch 256 on
+        the (pod=2, data=16, model=16) mesh with dp_only lands on
+        ("data", "model") = 256-way DP with the pod axis left for the
+        gradient all-reduce."""
+        from itertools import combinations
+        axes = self.dp_axes
+        candidates = []
+        for r in range(len(axes), 0, -1):
+            for combo in combinations(axes, r):
+                size = 1
+                for a in combo:
+                    size *= self.mesh.shape[a]
+                candidates.append((size, combo))
+        candidates.sort(key=lambda t: -t[0])
+        for size, combo in candidates:
+            if _divisible(n, size):
+                return combo
+        return None
+
+    def batch_spec(self) -> P:
+        return P(self.dp_axes)  # batch dim over (pod, data)
+
+    def batch_shardings(self, batch_shape) -> Any:
+        def assign(path, leaf):
+            b_axes = self.dp_for(leaf.shape[0])
+            spec = [b_axes] + [None] * (len(leaf.shape) - 1)
+            if (self.seq_dp and leaf.ndim >= 2
+                    and "pod" in self.mesh.axis_names
+                    and "pod" not in (b_axes or ())
+                    and _divisible(leaf.shape[1], self.mesh.shape["pod"])):
+                spec[1] = "pod"
+            return NamedSharding(self.mesh, P(*spec))
+        return jax.tree_util.tree_map_with_path(assign, batch_shape)
+
+    def activation_spec(self) -> P:
+        return P(self.dp_axes, None, None)
+
+    # -- cache specs -------------------------------------------------------------
+    def cache_shardings(self, cache_shape) -> Any:
+        """Decode caches: (repeats, B, S, H_kv, d) -> batch over data axes,
+        sequence over "model" (distributed split-KV); recurrent states:
+        batch over data axes, channels over "model" when divisible."""
+        M = self.model_size
+
+        def assign(path, leaf):
+            p = _path_str(path)
+            shape = leaf.shape
+            if re.search(r"(?:^|/)(k|v|cross_k|cross_v)$", p) and len(shape) == 5:
+                seq_ok = self.seq_shard_cache and _divisible(shape[2], M)
+                return NamedSharding(
+                    self.mesh,
+                    P(None, self.dp_for(shape[1]), "model" if seq_ok else None,
+                      None, None))
+            if re.search(r"(?:^|/)pos$", p):
+                return NamedSharding(self.mesh, P(*([None] * len(shape))))
+            if re.search(r"(?:^|/)wkv$", p) and len(shape) == 5:
+                # (repeats, B, H, K, V): heads over model
+                h_ok = _divisible(shape[2], M)
+                return NamedSharding(
+                    self.mesh,
+                    P(None, self.dp_for(shape[1]), "model" if h_ok else None,
+                      None, None))
+            if re.search(r"(?:^|/)(h|conv)$", p):
+                # rglru state: channel axis (last) over model
+                ch_ok = _divisible(shape[-1], M)
+                spec = ([None, self.dp_for(shape[1])]
+                        + [None] * (len(shape) - 3)
+                        + (["model"] if ch_ok else [None]))
+                return NamedSharding(self.mesh, P(*spec))
+            if re.search(r"(?:^|/)shift$", p):
+                return NamedSharding(self.mesh,
+                                     P(None, self.dp_for(shape[1]), None))
+            if len(shape) >= 2:
+                spec = [None, self.dp_for(shape[1])] + [None] * (len(shape) - 2)
+                return NamedSharding(self.mesh, P(*spec))
+            return NamedSharding(self.mesh, P(*([None] * len(shape))))
+
+        return jax.tree_util.tree_map_with_path(assign, cache_shape)
+
+    def logits_spec(self) -> P:
+        M = self.model_size
+        v_ok = _divisible(self.cfg.vocab_size, M)
+        return P(self.dp_axes, None, "model" if v_ok else None)

@@ -1,0 +1,106 @@
+"""Step functions (train / prefill / serve) + dry-run input specs.
+
+These are the functions the launcher jits, the dry-run lowers for every
+(arch x shape x mesh) cell, and the roofline reads.  They close over the
+static ModelConfig; all array state is explicit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSpec
+from repro.models import model as model_lib
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model_lib.loss_fn(cfg, p, batch), has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, grads,
+                                                        opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return model_lib.prefill(cfg, params, batch["tokens"],
+                                 frames=batch.get("frames"),
+                                 cache_len=batch["tokens"].shape[1])
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: greedy next token against a filled KV cache."""
+
+    def serve_step(params, caches, token):
+        logits, new_caches = model_lib.decode_step(cfg, params, caches, token)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_token, logits, new_caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        # modality frontend stub: precomputed frame embeddings
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    return specs
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: model_lib.init_params(cfg, jax.random.key(0)))
+
+
+def opt_state_specs(params_shape):
+    return jax.eval_shape(init_opt_state, params_shape)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Every model input for the given cell, as ShapeDtypeStructs."""
+    if shape.kind == "train":
+        p = params_specs(cfg)
+        return {
+            "params": p,
+            "opt_state": opt_state_specs(p),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": params_specs(cfg),
+            "batch": batch_specs(cfg, shape),
+        }
+    if shape.kind == "decode":
+        return {
+            "params": params_specs(cfg),
+            "caches": cache_specs(cfg, shape.global_batch, shape.seq_len),
+            "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,125 @@
+"""End-to-end training loop: data pipeline -> jitted step -> coordinator ->
+grid checkpoints, with failure recovery and elastic rescaling.
+
+This is the CPU-scale integration of every subsystem (exercised in
+tests/test_train_loop.py and examples/elastic_train.py); the same loop body
+is what launch/train.py runs on a real mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import GridCheckpointStore
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.runtime.coordinator import TrainingCoordinator
+from repro.runtime.steps import make_train_step
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+
+class Trainer:
+    """Single-host trainer with RSM coordination + grid checkpoints.
+
+    ``n_virtual_workers`` simulates the DP group for the coordinator
+    (per-worker step reports; straggler noop-fill)."""
+
+    def __init__(self, cfg: ModelConfig, ckpt_dir: str,
+                 opt_cfg: Optional[AdamWConfig] = None,
+                 data_cfg: Optional[DataConfig] = None,
+                 n_virtual_workers: int = 4, seed: int = 0,
+                 ckpt_every: int = 5) -> None:
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg or AdamWConfig(warmup_steps=5, total_steps=200)
+        self.data_cfg = data_cfg or DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=seed)
+        self.data = SyntheticLM(self.data_cfg)
+        self.ckpt = GridCheckpointStore(ckpt_dir, rows=2, cols=2)
+        self.coord = TrainingCoordinator(n_workers=n_virtual_workers, seed=seed)
+        self.n_workers = n_virtual_workers
+        self.ckpt_every = ckpt_every
+
+        params = init_params(cfg, jax.random.key(seed))
+        self.state = TrainState(params=params,
+                                opt_state=init_opt_state(params))
+        self._step_fn = jax.jit(make_train_step(cfg, self.opt_cfg))
+        self.metrics_log: List[Dict[str, float]] = []
+
+    # -- steps ---------------------------------------------------------------
+    def run_step(self, straggler: Optional[int] = None) -> Dict[str, float]:
+        step = self.state.step
+        batch = self.data.global_batch(step)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, metrics = self._step_fn(
+            self.state.params, self.state.opt_state, batch)
+        self.state = TrainState(params=params, opt_state=opt_state,
+                                step=step + 1)
+        # per-worker completion reports through the RSM; a straggler's
+        # report is withheld and (if lagging) noop-filled
+        last_report = {}
+        for w in range(self.n_workers):
+            if w == straggler:
+                last_report[f"worker/{w}"] = step - self.coord.skip_after - 1
+                continue
+            self.coord.report_step(w, step)
+            last_report[f"worker/{w}"] = step
+        if straggler is not None:
+            self.coord.mitigate_stragglers(step, last_report)
+        m = {k: float(v) for k, v in metrics.items()}
+        m["step"] = step
+        self.metrics_log.append(m)
+        if (step + 1) % self.ckpt_every == 0:
+            self.checkpoint()
+        return m
+
+    def run(self, n_steps: int) -> List[Dict[str, float]]:
+        return [self.run_step() for _ in range(n_steps)]
+
+    # -- checkpoint / restore ----------------------------------------------------
+    def checkpoint(self) -> None:
+        tree = {"params": self.state.params, "opt": self.state.opt_state,
+                "step": jnp.asarray(self.state.step)}
+        self.ckpt.save(self.state.step, tree)
+        self.coord.commit_checkpoint(self.state.step)
+
+    def restore_latest(self) -> int:
+        step = self.coord.view.committed_ckpt
+        if step is None:
+            raise RuntimeError("no committed checkpoint")
+        like = {"params": self.state.params, "opt": self.state.opt_state,
+                "step": jnp.asarray(self.state.step)}
+        tree = self.ckpt.restore(step, like)
+        self.state = TrainState(params=tree["params"], opt_state=tree["opt"],
+                                step=int(tree["step"]))
+        return self.state.step
+
+    # -- failure / elasticity ---------------------------------------------------
+    def crash_and_recover(self) -> int:
+        """Simulate losing the training job: rebuild from the last
+        *committed* checkpoint (the RSM knows which one that is)."""
+        params = init_params(self.cfg, jax.random.key(999))  # garbage state
+        self.state = TrainState(params=params,
+                                opt_state=init_opt_state(params))
+        return self.restore_latest()
+
+    def scale_workers(self, new_n: int) -> None:
+        """Elastic rescale: membership changes through the log; the
+        deterministic data pipeline needs no state handoff."""
+        for w in range(self.n_workers, new_n):
+            self.coord.join(f"worker/{w}")
+        for w in range(new_n, self.n_workers):
+            self.coord.leave(f"worker/{w}")
+        self.n_workers = new_n

@@ -1,0 +1,145 @@
+"""Compartmentalized model serving: the paper's read/write decoupling with
+*inference as the read operation*.
+
+Mapping (paper section 3.4 / 4):
+  * the replicated log orders **weight updates** (writes) - e.g. a trainer
+    pushing fresh checkpoints into the serving fleet;
+  * an **inference request is a leaderless read**: the client prereads a
+    vote watermark from an acceptor row, then any single model replica that
+    has applied the log up to that watermark runs the forward pass;
+  * batchers group requests (one preread per read batch), unbatchers fan
+    results back out - compartmentalizations 5/6 are literally the
+    continuous-batching front-end of an LLM server.
+
+Consistency menu: "linearizable" (read the newest committed weights),
+"sequential" (monotone versions per client), "eventual" (any replica, its
+current weights) - paper section 3.6, with the same trade-offs.
+
+Weight payloads move via a side store keyed by id (the S-Paxos data path);
+the log carries only ("update", version, ref).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.protocols import CompartmentalizedMultiPaxos, DeploymentConfig
+from repro.core.statemachine import StateMachine
+from repro.models import decode_step, init_params, prefill
+
+
+class ParamStore:
+    """Content-addressed weight payload store (data path)."""
+
+    def __init__(self) -> None:
+        self._store: Dict[int, Any] = {}
+        self._next = 0
+
+    def put(self, params) -> int:
+        ref = self._next
+        self._next += 1
+        self._store[ref] = params
+        return ref
+
+    def get(self, ref: int):
+        return self._store[ref]
+
+
+class ModelServingSM(StateMachine):
+    """State machine executed by every serving replica.
+
+    Writes: ("update", version, ref) - install new weights.
+    Reads:  ("infer", prompt_tokens, max_new) - greedy decode.
+    """
+
+    def __init__(self, cfg: ModelConfig, store: ParamStore) -> None:
+        self.cfg = cfg
+        self.store = store
+        self.params = None
+        self.version = -1
+        self.inferences = 0
+
+    def apply(self, op: Tuple) -> Any:
+        kind = op[0]
+        if kind == "update":
+            _, version, ref = op
+            if version > self.version:
+                self.params = self.store.get(ref)
+                self.version = version
+            return ("installed", self.version)
+        if kind == "infer":
+            _, prompt, max_new = op
+            assert self.params is not None, "no weights installed"
+            self.inferences += 1
+            tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+            _, caches = prefill(self.cfg, self.params, tokens,
+                                cache_len=tokens.shape[1] + max_new)
+            tok = tokens[:, -1:]
+            out: List[int] = []
+            for _ in range(max_new):
+                logits, caches = decode_step(self.cfg, self.params, caches, tok)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                out.append(int(tok[0, 0]))
+            return ("v%d" % self.version, tuple(out))
+        raise ValueError(f"unknown op {op!r}")
+
+    def is_read(self, op: Tuple) -> bool:
+        return op[0] == "infer"
+
+    def snapshot(self) -> Any:
+        return (self.version,)
+
+    def restore(self, snap: Any) -> None:
+        self.version = snap[0]
+
+
+class ServingDeployment:
+    """Compartmentalized serving fleet over the in-process cluster."""
+
+    def __init__(self, cfg: ModelConfig, n_replicas: int = 3,
+                 n_proxy_leaders: int = 3, grid: Tuple[int, int] = (2, 2),
+                 n_clients: int = 2, consistency: str = "linearizable",
+                 n_batchers: int = 0, n_unbatchers: int = 0,
+                 seed: int = 0) -> None:
+        self.cfg = cfg
+        self.store = ParamStore()
+        dep_cfg = DeploymentConfig(
+            f=1, n_proxy_leaders=n_proxy_leaders, grid=grid,
+            n_replicas=n_replicas, consistency=consistency,
+            n_batchers=n_batchers, n_unbatchers=n_unbatchers,
+            batch_size=4, seed=seed)
+        self.rsm = CompartmentalizedMultiPaxos(dep_cfg, n_clients=n_clients)
+        for replica in self.rsm.replicas:
+            replica.sm = ModelServingSM(cfg, self.store)
+        self.clients = self.rsm.clients
+        self.version = 0
+
+    # -- control plane ---------------------------------------------------------
+    def push_weights(self, params, client: int = 0) -> int:
+        """Trainer-side weight update (a write through the log)."""
+        self.version += 1
+        ref = self.store.put(params)
+        self.clients[client].run_ops([("update", self.version, ref)])
+        self.rsm.run_to_quiescence()
+        return self.version
+
+    # -- request plane ---------------------------------------------------------
+    def infer(self, prompt: List[int], max_new: int = 4, client: int = 0
+              ) -> Tuple[str, Tuple[int, ...]]:
+        """Issue one inference request as a (leaderless) read."""
+        self.clients[client].run_ops([("infer", tuple(prompt), max_new)])
+        self.rsm.run_to_quiescence()
+        return self.clients[client].results[-1]
+
+    def submit_many(self, prompts: List[List[int]], max_new: int = 4) -> None:
+        """Round-robin closed-loop submission across clients."""
+        for i, p in enumerate(prompts):
+            c = self.clients[i % len(self.clients)]
+            c.run_ops([("infer", tuple(p), max_new)])
+        self.rsm.run_to_quiescence()
+
+    def replica_loads(self) -> List[int]:
+        return [r.sm.inferences for r in self.rsm.replicas]  # type: ignore

@@ -1,0 +1,140 @@
+"""Property-based linearizability testing.
+
+hypothesis generates random workloads, fault schedules and network seeds;
+every complete history recorded by the compartmentalized protocol must be
+linearizable (checked exhaustively on small histories).  Also sanity-checks
+the checker itself against known-good and known-bad histories.
+"""
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import full_compartmentalized
+from repro.core.history import History
+from repro.core.linearizability import check_linearizable, check_slot_order
+
+
+# ---------------------------------------------------------------------------
+# Checker self-tests (paper's Figures 8-9 examples)
+# ---------------------------------------------------------------------------
+
+
+def _history(events):
+    """events: list of (kind, client, op, result, t_invoke, t_respond)."""
+    h = History()
+    ids = {}
+    for kind, client, op, result, t0, t1 in events:
+        op_id = h.invoke(client, op, t0)
+        if t1 is not None:
+            h.respond(op_id, result, t1)
+    return h
+
+
+def test_paper_fig8_linearizable():
+    # c1: w(0) @ [0, 4];  c2: w(1) @ [1, 3];  c1: r() -> 0 @ [5, 7]
+    # linearization: w(1); w(0); r()->0   (paper Fig. 8c)
+    h = _history([
+        ("w", 1, ("w", 0), "ok", 0.0, 4.0),
+        ("w", 2, ("w", 1), "ok", 1.0, 3.0),
+        ("r", 1, ("r",), 0, 5.0, 7.0),
+    ])
+    assert check_linearizable(h, "register")
+
+
+def test_paper_fig9_not_linearizable():
+    # w(0) completes before w(1) starts; a later read returns 0 -> invalid
+    h = _history([
+        ("w", 1, ("w", 0), "ok", 0.0, 1.0),
+        ("w", 2, ("w", 1), "ok", 2.0, 3.0),
+        ("r", 1, ("r",), 0, 4.0, 5.0),
+    ])
+    assert not check_linearizable(h, "register")
+
+
+def test_pending_write_may_take_effect():
+    # paper Fig. 14: pending w(1); a read returns 1 -> must extend history
+    h = _history([
+        ("w", 1, ("w", 1), None, 0.0, None),  # pending
+        ("r", 2, ("r",), 1, 1.0, 2.0),
+    ])
+    assert check_linearizable(h, "register")
+
+
+def test_pending_write_may_be_dropped():
+    h = _history([
+        ("w", 1, ("w", 1), None, 0.0, None),  # pending, never visible
+        ("r", 2, ("r",), None, 1.0, 2.0),      # reads initial value None
+    ])
+    assert check_linearizable(h, "register")
+
+
+def test_stale_read_rejected():
+    h = _history([
+        ("w", 1, ("w", 1), "ok", 0.0, 1.0),
+        ("w", 1, ("w", 2), "ok", 2.0, 3.0),
+        ("r", 2, ("r",), 1, 4.0, 5.0),  # stale: must be 2
+    ])
+    assert not check_linearizable(h, "register")
+
+
+# ---------------------------------------------------------------------------
+# Protocol runs are linearizable under random workloads / seeds / faults
+# ---------------------------------------------------------------------------
+
+op_strategy = st.one_of(
+    st.tuples(st.just("w"), st.integers(0, 3)),
+    st.tuples(st.just("r")),
+)
+
+
+@given(
+    ops0=st.lists(op_strategy, min_size=1, max_size=4),
+    ops1=st.lists(op_strategy, min_size=1, max_size=4),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_concurrent_clients_linearizable(ops0, ops1, seed):
+    dep = full_compartmentalized(f=1, n_clients=2, seed=seed,
+                                 state_machine="register")
+    dep.net.jitter = 3.0  # reorder messages across links
+    dep.clients[0].run_ops(ops0)
+    dep.clients[1].run_ops(ops1)
+    dep.run_to_quiescence()
+    assert dep.all_done()
+    assert check_slot_order(dep.history) == []
+    assert check_linearizable(dep.history, "register")
+
+
+@given(
+    ops=st.lists(op_strategy, min_size=2, max_size=5),
+    seed=st.integers(0, 500),
+    grid=st.sampled_from([(2, 2), (2, 3), (3, 2)]),
+)
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_grid_shapes_linearizable(ops, seed, grid):
+    dep = full_compartmentalized(f=1, n_clients=1, seed=seed, grid=grid,
+                                 state_machine="register")
+    dep.clients[0].run_ops(ops)
+    dep.run_to_quiescence()
+    assert dep.all_done()
+    assert check_linearizable(dep.history, "register")
+
+
+@given(seed=st.integers(0, 300), failover_after=st.integers(1, 3))
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_failover_preserves_linearizability(seed, failover_after):
+    dep = full_compartmentalized(f=1, n_clients=1, seed=seed,
+                                 state_machine="register")
+    ops = [("w", i) for i in range(failover_after)]
+    dep.clients[0].run_ops(ops)
+    dep.run_to_quiescence()
+    dep.fail_over(to_leader=1)
+    dep.run_to_quiescence()
+    dep.clients[0].leader = dep.leader_addrs[1]
+    dep.clients[0].run_ops([("r",), ("w", 99), ("r",)])
+    dep.run_to_quiescence()
+    assert dep.all_done()
+    assert check_linearizable(dep.history, "register")
+    # the final read must observe the post-failover write
+    assert dep.clients[0].results[-1] == 99

@@ -1,0 +1,199 @@
+"""End-to-end protocol behaviour: compartmentalized MultiPaxos, vanilla
+MultiPaxos, failover, acceptor failures, batching, read consistency modes."""
+import pytest
+
+from repro.core import (
+    CompartmentalizedMultiPaxos,
+    DeploymentConfig,
+    UnreplicatedStateMachine,
+    full_compartmentalized,
+    vanilla_multipaxos,
+)
+from repro.core.linearizability import (
+    check_linearizable,
+    check_register_reads,
+    check_slot_order,
+)
+
+
+def run_workload(dep, ops_per_client):
+    for client, ops in zip(dep.clients, ops_per_client):
+        client.run_ops(ops)
+    dep.run_to_quiescence()
+    assert dep.all_done(), "all clients must finish"
+    return dep
+
+
+def test_vanilla_multipaxos_basic():
+    dep = vanilla_multipaxos(f=1, n_clients=2)
+    run_workload(dep, [
+        [("put", "x", 1), ("get", "x")],
+        [("put", "y", 2), ("get", "y")],
+    ])
+    assert dep.results_of(0) == ["ok", 1]
+    assert dep.results_of(1) == ["ok", 2]
+
+
+def test_compartmentalized_basic():
+    dep = full_compartmentalized(f=1, n_clients=3)
+    run_workload(dep, [
+        [("put", "a", i), ("get", "a")] for i in range(3)
+    ])
+    for i in range(3):
+        res = dep.results_of(i)
+        assert res[0] == "ok"
+        assert res[1] in (0, 1, 2)  # one of the concurrently written values
+
+
+def test_replicas_stay_in_sync():
+    dep = full_compartmentalized(f=1, n_clients=2)
+    run_workload(dep, [
+        [("put", f"k{i}", i) for i in range(5)],
+        [("put", f"j{i}", i) for i in range(5)],
+    ])
+    states = [r.sm.snapshot() for r in dep.replicas]
+    assert all(s == states[0] for s in states), "replica state divergence"
+    logs = [dict(r.log) for r in dep.replicas]
+    assert all(l == logs[0] for l in logs), "replica log divergence"
+
+
+def test_linearizable_history_slot_order():
+    dep = full_compartmentalized(f=1, n_clients=3, state_machine="register")
+    run_workload(dep, [
+        [("w", 10), ("r",), ("w", 11)],
+        [("r",), ("w", 20), ("r",)],
+        [("w", 30), ("r",)],
+    ])
+    assert check_slot_order(dep.history) == []
+    assert check_register_reads(dep.history) == []
+    assert check_linearizable(dep.history, "register")
+
+
+def test_exhaustive_linearizability_small():
+    dep = full_compartmentalized(f=1, n_clients=2, state_machine="register")
+    run_workload(dep, [
+        [("w", 1), ("r",)],
+        [("w", 2), ("r",)],
+    ])
+    assert check_linearizable(dep.history, "register")
+
+
+def test_leader_failover_preserves_chosen_values():
+    dep = full_compartmentalized(f=1, n_clients=1)
+    dep.clients[0].run_ops([("put", "x", 1), ("put", "y", 2)])
+    dep.run_to_quiescence()
+    assert dep.results_of(0) == ["ok", "ok"]
+
+    # crash leader 0, promote leader 1; previously chosen values must survive
+    dep.fail_over(to_leader=1)
+    dep.run_to_quiescence()
+    assert dep.leaders[1].active
+
+    dep.clients[0].leader = dep.leader_addrs[1]
+    dep.clients[0].run_ops([("get", "x"), ("get", "y"), ("put", "z", 3)])
+    dep.run_to_quiescence()
+    assert dep.results_of(0)[2:] == [1, 2, "ok"]
+    assert check_slot_order(dep.history) == []
+
+
+def test_acceptor_failure_tolerated():
+    """Killing one acceptor of a 2x2 grid leaves a live column via the
+    non-thrifty retry path."""
+    dep = full_compartmentalized(f=1, n_clients=1, grid=(2, 2))
+    dep.net.crash("acceptor/0")
+    dep.clients[0].run_ops([("put", "x", 1), ("get", "x")])
+    dep.run_to_quiescence()
+    assert dep.results_of(0) == ["ok", 1]
+
+
+def test_proxy_leader_failure_is_routed_around():
+    """With >= f+1 proxy leaders, losing one must not lose commands that the
+    leader retries (client retries drive re-proposal)."""
+    dep = full_compartmentalized(f=1, n_clients=1, n_proxy_leaders=3,
+                                 client_retries=True)
+    dep.net.crash("proxy/0")
+    dep.clients[0].run_ops([("put", "a", 1), ("put", "b", 2), ("put", "c", 3)])
+    dep.run_to_quiescence(max_steps=100_000)
+    assert dep.results_of(0) == ["ok", "ok", "ok"]
+
+
+def test_sequential_consistency_mode():
+    dep = full_compartmentalized(f=1, n_clients=2, consistency="sequential",
+                                 state_machine="register")
+    run_workload(dep, [
+        [("w", 1), ("r",)],
+        [("w", 2), ("r",)],
+    ])
+    # read-your-writes: each client's own read must see its write or a later one
+    assert dep.results_of(0)[1] in (1, 2)
+    assert dep.results_of(1)[1] in (1, 2)
+
+
+def test_eventual_consistency_mode():
+    dep = full_compartmentalized(f=1, n_clients=1, consistency="eventual")
+    run_workload(dep, [[("put", "x", 5), ("get", "x")]])
+    # single client, quiesced network: must observe its own write
+    assert dep.results_of(0) == ["ok", 5]
+
+
+def test_batching_end_to_end():
+    dep = full_compartmentalized(
+        f=1, n_clients=4, n_batchers=2, n_unbatchers=2, batch_size=3)
+    run_workload(dep, [
+        [("put", f"k{i}", i), ("get", f"k{i}")] for i in range(4)
+    ])
+    for i in range(4):
+        assert dep.results_of(i) == ["ok", i]
+
+
+def test_unreplicated_state_machine():
+    dep = UnreplicatedStateMachine(n_clients=2)
+    run_workload(dep, [
+        [("put", "x", 1), ("get", "x")],
+        [("put", "y", 2), ("get", "y")],
+    ])
+    assert dep.results_of(0) == ["ok", 1]
+    assert dep.results_of(1) == ["ok", 2]
+
+
+def test_message_drops_with_retries_still_complete():
+    cfg_kwargs = dict(f=1, n_clients=1, client_retries=True)
+    dep = full_compartmentalized(**cfg_kwargs)
+    dep.net.drop_rate = 0.05
+    dep.clients[0].run_ops([("put", "x", 1), ("get", "x")])
+    dep.run_to_quiescence(max_steps=500_000)
+    assert dep.all_done()
+    assert dep.results_of(0) == ["ok", 1]
+
+
+def test_leader_message_load_drops_with_proxies():
+    """The core claim of compartmentalization 1: leader handles 3f+4 msgs/cmd
+    without proxies, 2 with."""
+    n_ops = 20
+    vp = vanilla_multipaxos(f=1, n_clients=1)
+    vp.clients[0].run_ops([("put", f"k{i}", i) for i in range(n_ops)])
+    vp.run_to_quiescence()
+    vl = vp.leaders[0]
+    vanilla_per_cmd = (vl.msgs_sent + vl.msgs_received) / n_ops
+
+    cp = full_compartmentalized(f=1, n_clients=1)
+    cp.clients[0].run_ops([("put", f"k{i}", i) for i in range(n_ops)])
+    cp.run_to_quiescence()
+    cl = cp.leaders[0]
+    comp_per_cmd = (cl.msgs_sent + cl.msgs_received) / n_ops
+
+    assert vanilla_per_cmd >= 3 * 1 + 4  # 3f+4 with f=1
+    assert comp_per_cmd <= 2.5           # ~2 (allow phase-1 amortization)
+
+
+def test_grid_acceptor_write_load():
+    """Acceptors in a 2x3 grid each see ~1/3 of writes (paper Fig. 5)."""
+    n_ops = 60
+    dep = full_compartmentalized(f=1, n_clients=1, grid=(2, 3), n_replicas=2)
+    dep.clients[0].run_ops([("put", f"k{i}", i) for i in range(n_ops)])
+    dep.run_to_quiescence()
+    # each write should touch exactly one column (2 acceptors, 2 msgs each)
+    total_acceptor_msgs = sum(a.msgs_received for a in dep.acceptors)
+    assert total_acceptor_msgs == pytest.approx(n_ops * 2, rel=0.1)
+    per_acceptor = [a.msgs_received for a in dep.acceptors]
+    assert max(per_acceptor) <= n_ops  # nobody sees every write

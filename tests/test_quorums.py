@@ -1,0 +1,73 @@
+"""Quorum-system unit + property tests (paper section 3.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quorums import (
+    GridQuorums,
+    MajorityQuorums,
+    pick_read_quorum,
+    pick_write_quorum,
+)
+
+
+def test_majority_quorums_intersect():
+    for f in (1, 2, 3):
+        MajorityQuorums(f=f).validate()
+
+
+def test_grid_shapes():
+    g = GridQuorums(rows=2, cols=3)
+    assert g.n == 6
+    assert [sorted(q) for q in g.read_quorums()] == [[0, 1, 2], [3, 4, 5]]
+    assert [sorted(q) for q in g.write_quorums()] == [[0, 3], [1, 4], [2, 5]]
+    g.validate()
+
+
+@given(rows=st.integers(2, 5), cols=st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_grid_quorums_always_intersect(rows, cols):
+    GridQuorums(rows=rows, cols=cols).validate()
+
+
+def test_grid_write_load_scales_with_columns():
+    """Paper: with w write quorums every acceptor processes 1/w of writes."""
+    for w in (2, 3, 4):
+        g = GridQuorums(rows=2, cols=w)
+        assert g.write_load() == pytest.approx(1.0 / w)
+
+
+def test_grid_read_load_scales_with_rows():
+    for r in (2, 3, 4):
+        g = GridQuorums(rows=r, cols=2)
+        assert g.read_load() == pytest.approx(1.0 / r)
+
+
+def test_majority_write_load_at_least_half():
+    """Paper section 2.4: with majorities every acceptor sees >= half."""
+    for f in (1, 2, 3):
+        m = MajorityQuorums(f=f)
+        assert m.write_load() >= 0.5
+
+
+def test_thrifty_selection_avoids_dead():
+    g = GridQuorums(rows=2, cols=3)
+    dead = frozenset({0})  # kills column 0 and row 0
+    for seed in range(10):
+        _, wq = pick_write_quorum(g, seed, dead)
+        assert not (wq & dead)
+        _, rq = pick_read_quorum(g, seed, dead)
+        assert not (rq & dead)
+
+
+def test_no_live_quorum_raises():
+    g = GridQuorums(rows=2, cols=2)
+    with pytest.raises(RuntimeError):
+        pick_write_quorum(g, 0, dead=frozenset({0, 1}))  # one per column
+
+
+def test_is_write_quorum_superset():
+    g = GridQuorums(rows=2, cols=2)
+    assert g.is_write_quorum({0, 2})
+    assert g.is_write_quorum({0, 1, 2})
+    assert not g.is_write_quorum({0, 1})  # a row is not a write quorum
+    assert g.is_read_quorum({0, 1})

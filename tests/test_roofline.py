@@ -1,0 +1,94 @@
+"""Roofline machinery unit tests: HLO collective parsing, extrapolation
+math, term computation."""
+import pytest
+
+from repro.roofline.analysis import (
+    CellRoofline,
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    analyze_record,
+    model_flops_for,
+)
+from repro.roofline.hlo import collective_stats, total_collective_bytes
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+fused_computation {
+  ...
+}
+
+ENTRY main {
+  %p0 = bf16[2048,512]{1,0} parameter(0)
+  %ar = bf16[2048,512]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[128,64]{1,0} all-gather(%ar), dimensions={0}
+  %rs = f32[64,64]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = bf16[32]{0} all-to-all(%rs), dimensions={0}
+  %cp = s32[16]{0} collective-permute(%a2a), source_target_pairs={{0,1}}
+  %ars = bf16[100]{0} all-reduce-start(%cp)
+  %ard = bf16[100]{0} all-reduce-done(%ars)
+  ROOT %out = bf16[100]{0} copy(%ard)
+}
+"""
+
+
+def test_collective_stats_counts_and_bytes():
+    stats = collective_stats(HLO_SAMPLE)
+    assert stats["all-reduce"]["count"] == 2  # plain + -start (not -done)
+    assert stats["all-reduce"]["bytes"] == 2048 * 512 * 2 + 100 * 2
+    assert stats["all-gather"]["bytes"] == 128 * 64 * 4
+    assert stats["reduce-scatter"]["bytes"] == 64 * 64 * 4
+    assert stats["all-to-all"]["bytes"] == 32 * 2
+    assert stats["collective-permute"]["bytes"] == 16 * 4
+    assert total_collective_bytes(HLO_SAMPLE) == sum(
+        v["bytes"] for v in stats.values())
+
+
+def _fake_record(flops=1e14, bytes_acc=1e12, ar_bytes=5e10, n_dev=256):
+    return {
+        "arch": "granite-3-2b", "shape": "train_4k", "mesh": "single",
+        "status": "ok", "n_devices": n_dev,
+        "cost_analysis": {"flops": flops, "bytes accessed": bytes_acc},
+        "collectives": {"all-reduce": {"count": 10, "bytes": ar_bytes}},
+        "memory_analysis": {"argument_size_in_bytes": 3e9,
+                            "output_size_in_bytes": 3e9},
+    }
+
+
+def test_roofline_terms():
+    cell = analyze_record(_fake_record())
+    assert cell.compute_s == pytest.approx(1e14 / PEAK_FLOPS)
+    assert cell.collective_s == pytest.approx(5e10 / ICI_BW)
+    assert cell.memory_hlo_upper_s == pytest.approx(1e12 / HBM_BW)
+    assert cell.memory_s > 6e9 / HBM_BW  # args+outputs+activations
+    assert cell.dominant in ("compute", "memory", "collective")
+    assert cell.step_s == max(cell.compute_s, cell.memory_s, cell.collective_s)
+    assert 0 < cell.mfu_est < 1.5
+
+
+def test_model_flops_scales_with_kind():
+    train = model_flops_for("granite-3-2b", "train_4k")
+    prefill = model_flops_for("granite-3-2b", "prefill_32k")
+    decode = model_flops_for("granite-3-2b", "decode_32k")
+    # same token count => train = 3x prefill per token
+    assert train / (256 * 4096) == pytest.approx(
+        3 * prefill / (32 * 32768), rel=1e-6)
+    assert decode == pytest.approx(prefill / (32 * 32768) * 128, rel=1e-6)
+
+
+def test_moe_uses_active_params():
+    dense_like = model_flops_for("qwen3-moe-30b-a3b", "train_4k")
+    from repro.configs import get_config
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert dense_like == pytest.approx(
+        6.0 * cfg.n_active_params() * 256 * 4096)
+    assert cfg.n_active_params() < 0.25 * cfg.n_params()
+
+
+def test_skipped_record_passthrough():
+    rec = {"arch": "granite-3-2b", "shape": "long_500k", "mesh": "single",
+           "status": "skipped", "skip_reason": "full attention"}
+    cell = analyze_record(rec)
+    assert cell.status == "skipped"
+    assert "full attention" in cell.note

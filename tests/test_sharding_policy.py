@@ -1,0 +1,134 @@
+"""Sharding-policy rules on a realistic (1 x 16) model axis.
+
+Spec computation needs a real mesh, so these run in a subprocess with 16
+forced host devices (the main process keeps 1 device)."""
+import subprocess
+import sys
+import textwrap
+
+PREAMBLE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.configs import get_config
+from repro.runtime.sharding import ShardingPolicy
+mesh = jax.make_mesh((1, 16), ("data", "model"))
+"""
+
+
+def run_sub(body: str, timeout: int = 300) -> str:
+    code = PREAMBLE + textwrap.dedent(body)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo")
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    return proc.stdout
+
+
+def test_gqa_kv_replicated_when_heads_dont_divide():
+    run_sub("""
+    cfg = get_config("granite-3-2b")  # 32 q heads, 8 kv heads
+    pol = ShardingPolicy(cfg, mesh)
+    assert pol.param_spec("segments/0/0/attn/w_q", (2048, 2048)) == P(None, "model")
+    # kv heads (8) don't divide 16 -> replicate K/V projections
+    assert pol.param_spec("segments/0/0/attn/w_k", (2048, 512)) == P(None, None)
+    assert pol.param_spec("segments/0/0/attn/w_o", (2048, 2048)) == P("model", None)
+    """)
+
+
+def test_non_dividing_q_heads_replicate_attention():
+    run_sub("""
+    cfg = get_config("qwen1.5-32b")  # 40 heads
+    pol = ShardingPolicy(cfg, mesh)
+    assert pol.param_spec("segments/0/0/attn/w_q", (5120, 5120)) == P(None, None)
+    flat = ShardingPolicy(cfg, mesh, shard_qkv_by_flat_dim=True)
+    assert flat.param_spec("segments/0/0/attn/w_q", (5120, 5120)) == P(None, "model")
+    """)
+
+
+def test_expert_parallelism():
+    run_sub("""
+    cfg = get_config("qwen3-moe-30b-a3b")
+    pol = ShardingPolicy(cfg, mesh)
+    spec = pol.param_spec("segments/0/0/moe/experts/w_up", (128, 2048, 768))
+    assert spec == P("model", None, None), spec
+    # EP survives the dp_only layout (experts cannot be replicated)
+    dp = ShardingPolicy(cfg, mesh, dp_only=True)
+    assert dp.param_spec("segments/0/0/moe/experts/w_up",
+                         (128, 2048, 768)) == P("model", None, None)
+    assert dp.param_spec("segments/0/0/attn/w_q", (2048, 2048)) == P(None, None)
+    """)
+
+
+def test_fsdp_shards_first_divisible_dim():
+    run_sub("""
+    cfg = get_config("qwen1.5-32b")
+    pol = ShardingPolicy(cfg, mesh, fsdp=True)
+    assert pol.param_spec("segments/0/0/attn/w_q", (5120, 5120)) == P("model", None)
+    assert pol.param_spec("embed/tokens", (152064, 5120)) == P("model", None)
+    # non-divisible everywhere -> replicated
+    assert pol.param_spec("segments/0/0/ln1/scale", (5121,)) == P(None)
+    """)
+
+
+def test_dp_for_subset_search():
+    run_sub("""
+    mesh3 = jax.make_mesh((2, 4, 2), ("pod", "data", "model"))
+    cfg = get_config("granite-3-2b")
+    pol = ShardingPolicy(cfg, mesh3, dp_only=True)
+    # 8 % (2*4*2 = 16) fails -> falls to some size-8 subset
+    combo = pol.dp_for(8)
+    size = 1
+    for a in combo:
+        size *= mesh3.shape[a]
+    assert size == 8, combo
+    assert pol.dp_for(16) == ("pod", "data", "model")
+    assert pol.dp_for(7) is None
+    """)
+
+
+def test_zero1_respects_divisibility():
+    run_sub("""
+    import jax.numpy as jnp
+    mesh44 = jax.make_mesh((4, 4), ("data", "model"))
+    cfg = get_config("granite-3-2b")
+    pol = ShardingPolicy(cfg, mesh44, zero1=True)
+    params_shape = {"embed": {"tokens": jax.ShapeDtypeStruct((49155, 2048),
+                                                             jnp.bfloat16)}}
+    o_sh = pol.opt_state_shardings(params_shape)
+    spec = o_sh["m"]["embed"]["tokens"].spec
+    # 49155 % 4 != 0 on dim0 -> ZeRO lands on dim1 (2048 divisible)
+    assert spec[0] is None and spec[1] == "data", spec
+    """)
+
+
+def test_rwkv_and_rglru_rules():
+    run_sub("""
+    cfg = get_config("rwkv6-7b")
+    pol = ShardingPolicy(cfg, mesh)
+    assert pol.param_spec("segments/0/0/tm/w_r", (4096, 4096)) == P(None, "model")
+    assert pol.param_spec("segments/0/0/tm/w_o", (4096, 4096)) == P("model", None)
+    cfg2 = get_config("recurrentgemma-2b")
+    pol2 = ShardingPolicy(cfg2, mesh)
+    assert pol2.param_spec("segments/0/0/rec/w_in_rnn", (2560, 2560)) == P(None, "model")
+    assert pol2.param_spec("segments/0/0/rec/lambda", (2560,)) == P("model")
+    assert pol2.param_spec("segments/0/0/rec/w_out", (2560, 2560)) == P("model", None)
+    """)
+
+
+def test_cache_sharding_seq_over_model():
+    run_sub("""
+    import jax.numpy as jnp
+    cfg = get_config("granite-3-2b")
+    pol = ShardingPolicy(cfg, mesh)
+    cache_shape = {"k": jax.ShapeDtypeStruct((40, 128, 32768, 8, 64),
+                                             jnp.bfloat16),
+                   "pos": jax.ShapeDtypeStruct((40,), jnp.int32)}
+    sh = pol.cache_shardings(cache_shape)
+    spec = sh["k"].spec
+    assert spec[0] is None and "data" in str(spec[1]), spec
+    assert spec[2] == "model" and spec[3] is None, spec  # seq over model
+    assert sh["pos"].spec == P(None)
+    """)

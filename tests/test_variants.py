@@ -1,0 +1,158 @@
+"""Mencius, S-Paxos and CRAQ variants (paper sections 6-8.4)."""
+import pytest
+
+from repro.core import CraqDeployment, MenciusDeployment, SPaxosDeployment
+from repro.core.linearizability import check_linearizable, check_slot_order
+
+
+def run(dep, ops_per_client, max_steps=500_000):
+    for client, ops in zip(dep.clients, ops_per_client):
+        client.run_ops(ops)
+    dep.net.run(max_steps=max_steps)
+    assert all(c.done for c in dep.clients)
+    return dep
+
+
+# ---------------------------------------------------------------------------
+# Mencius
+# ---------------------------------------------------------------------------
+
+
+def test_mencius_basic():
+    dep = MenciusDeployment(n_leaders=3, n_clients=3)
+    run(dep, [[("put", f"k{i}", i), ("get", f"k{i}")] for i in range(3)])
+    for i in range(3):
+        assert dep.clients[i].results == ["ok", i]
+
+
+def test_mencius_slot_partitioning():
+    """Leader i only sequences slots with slot % m == i."""
+    dep = MenciusDeployment(n_leaders=3, n_clients=3)
+    run(dep, [[("put", f"c{i}-{j}", j) for j in range(4)] for i in range(3)])
+    for replica in dep.replicas:
+        for slot, value in replica.log.items():
+            if hasattr(value, "client_id") and value.client_id >= 0:
+                # command from client c was sequenced by leader c % 3
+                assert slot % 3 == value.client_id % 3
+
+
+def test_mencius_noop_skips_unblock_replicas():
+    """A lagging leader's vacant slots are noop-filled so replicas execute."""
+    dep = MenciusDeployment(n_leaders=3, n_clients=3)
+    # only client 0 (-> leader 0) issues commands; leaders 1, 2 are idle and
+    # must skip their slots for the log to stay executable
+    run(dep, [[("put", f"k{j}", j) for j in range(5)], [], []])
+    assert dep.clients[0].results == ["ok"] * 5
+    assert dep.total_skips() > 0
+    for replica in dep.replicas:
+        assert replica.executed_upto >= 0
+
+
+def test_mencius_replicas_converge():
+    dep = MenciusDeployment(n_leaders=3, n_clients=3)
+    run(dep, [[("put", f"x{i}{j}", i * 10 + j) for j in range(3)] for i in range(3)])
+    states = [r.sm.snapshot() for r in dep.replicas]
+    common = {}
+    for s in states:
+        common.update(s)
+    # every replica that executed the full prefix agrees on overlapping keys
+    for s in states:
+        for k, v in s.items():
+            assert common[k] == v
+
+
+def test_mencius_linearizable_history():
+    dep = MenciusDeployment(n_leaders=2, n_clients=2, state_machine="register")
+    run(dep, [[("w", 1), ("r",)], [("w", 2), ("r",)]])
+    assert check_slot_order(dep.history) == []
+    assert check_linearizable(dep.history, "register")
+
+
+# ---------------------------------------------------------------------------
+# S-Paxos
+# ---------------------------------------------------------------------------
+
+
+def test_spaxos_basic():
+    dep = SPaxosDeployment(n_clients=2)
+    run(dep, [
+        [("put", "x", 1), ("get", "x")],
+        [("put", "y", 2), ("get", "y")],
+    ])
+    assert dep.clients[0].results == ["ok", 1]
+    assert dep.clients[1].results == ["ok", 2]
+
+
+def test_spaxos_leader_never_sees_payloads():
+    """The whole point of S-Paxos: the leader orders ids, not commands."""
+    dep = SPaxosDeployment(n_clients=2)
+    run(dep, [[("put", "big" * 100, 1)], [("put", "blob" * 100, 2)]])
+    # leader only handled ProposeId messages (and sent Phase2a with ids)
+    assert dep.leader.msgs_received == 2
+    assert dep.leader.next_slot == 2
+
+
+def test_spaxos_replicas_converge():
+    dep = SPaxosDeployment(n_clients=3)
+    run(dep, [[("put", f"k{i}", i)] for i in range(3)])
+    states = [r.sm.snapshot() for r in dep.replicas]
+    assert all(s == states[0] for s in states)
+
+
+def test_spaxos_linearizable():
+    dep = SPaxosDeployment(n_clients=2, state_machine="register")
+    run(dep, [[("w", 1), ("r",)], [("w", 2), ("r",)]])
+    assert check_linearizable(dep.history, "register")
+
+
+# ---------------------------------------------------------------------------
+# CRAQ
+# ---------------------------------------------------------------------------
+
+
+def test_craq_basic():
+    dep = CraqDeployment(n_nodes=3, n_clients=2)
+    run(dep, [
+        [("put", "x", 1), ("get", "x")],
+        [("put", "y", 2), ("get", "y")],
+    ])
+    assert dep.clients[0].results == ["ok", 1]
+    assert dep.clients[1].results == ["ok", 2]
+
+
+def test_craq_linearizable_history():
+    dep = CraqDeployment(n_nodes=3, n_clients=2)
+    run(dep, [
+        [("put", "x", 1), ("get", "x"), ("put", "x", 3)],
+        [("put", "x", 2), ("get", "x")],
+    ])
+    assert check_linearizable(dep.history, "kv")
+
+
+def test_chain_replication_reads_at_tail_only():
+    dep = CraqDeployment(n_nodes=3, n_clients=1, reads_anywhere=False)
+    run(dep, [[("put", "x", 1)] + [("get", "x")] * 5])
+    assert dep.nodes[-1].reads_served == 5
+    assert dep.nodes[0].reads_served == 0
+
+
+def test_craq_skew_forwards_to_tail():
+    """Reads of a dirty hot key must be forwarded to the tail - the
+    mechanism behind the paper's Fig. 33 skew sensitivity."""
+    dep = CraqDeployment(n_nodes=3, n_clients=2)
+    # client 0 hammers writes to the hot key while client 1 reads it
+    dep.clients[0].run_ops([("put", "hot", i) for i in range(20)])
+    dep.clients[1].run_ops([("get", "hot")] * 20)
+    dep.net.run(max_steps=500_000)
+    assert all(c.done for c in dep.clients)
+    total_fwd = sum(n.tail_forwards for n in dep.nodes)
+    assert total_fwd > 0, "concurrent writes must dirty the hot key"
+
+
+def test_craq_uniform_reads_spread_load():
+    dep = CraqDeployment(n_nodes=3, n_clients=1, seed=3)
+    run(dep, [[("put", f"k{i}", i) for i in range(5)]
+              + [("get", f"k{i % 5}") for i in range(30)]])
+    served = [n.reads_served for n in dep.nodes]
+    assert sum(served) == 30
+    assert dep.tail_load_fraction() < 0.8  # not funnelled to the tail

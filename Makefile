@@ -1,0 +1,21 @@
+# Repo checks.  `make test` is the tier-1 gate; the others are fast
+# confidence checks for docs and benchmarks.
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test bench-smoke docs-links check
+
+test:
+	$(PYTHON) -m pytest -x -q
+
+# one cheap figure + the sweep engine: exercises the batched MVA kernel,
+# the autotuner and the CSV harness end to end in well under a minute
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --only fig29,fig30_31,sweep
+
+# every src/repro/... (and benchmarks/, examples/, tests/) path mentioned
+# in README.md / docs/*.md / benchmarks/README.md must exist
+docs-links:
+	$(PYTHON) scripts/check_docs_links.py
+
+check: docs-links test bench-smoke

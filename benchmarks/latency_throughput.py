@@ -13,6 +13,7 @@ import numpy as np
 from repro.core.analytical import (
     PAPER_COMPARTMENTALIZED_BATCHED,
     PAPER_COMPARTMENTALIZED_UNBATCHED,
+    PAPER_MULTIPAXOS_BATCHED,
     PAPER_MULTIPAXOS_UNBATCHED,
     PAPER_UNREPLICATED_UNBATCHED,
     calibrate_alpha,
@@ -20,7 +21,8 @@ from repro.core.analytical import (
     multipaxos_model,
     unreplicated_model,
 )
-from repro.core.simulator import des_throughput, mva_curve, mva_curves_batch
+from repro.core.simulator import des_throughput
+from repro.core.sweep import compile_models
 
 
 def run():
@@ -36,16 +38,16 @@ def run():
                                     n_batchers=2, n_unbatchers=3)
 
     t0 = time.perf_counter()
-    models = [mp, cmp_u, unrep, cmp_b]
-    _, xs, rs = mva_curves_batch(models, alpha, n_clients_max=512)
+    compiled = compile_models([mp, cmp_u, unrep, mp_b, cmp_b])
+    _, xs, rs = compiled.mva(alpha, n_clients_max=512)
     sweep_us = (time.perf_counter() - t0) * 1e6
 
     peaks = xs.max(axis=1)
     des_x, _ = des_throughput(cmp_u, alpha, n_clients=128, n_commands=20_000)
 
     rows = [
-        ("fig28/mva_sweep_4models_512clients", sweep_us,
-         f"jax-MVA full latency-throughput sweep"),
+        ("fig28/mva_sweep_5models_512clients", sweep_us,
+         f"jax-MVA full latency-throughput surface, one jitted call"),
         ("fig28/multipaxos_unbatched_peak", 0.0,
          f"{peaks[0]:.0f} cmd/s (paper 25k; calibration anchor)"),
         ("fig28/compartmentalized_unbatched_peak", 0.0,
@@ -54,8 +56,10 @@ def run():
         ("fig28/unreplicated_peak", 0.0,
          f"{peaks[2]:.0f} cmd/s (paper 250k; model underpredicts - "
          f"per-msg cost on a bare server is below the protocol-node cost)"),
+        ("fig28/multipaxos_batched_peak", 0.0,
+         f"{peaks[3]:.0f} cmd/s (paper {PAPER_MULTIPAXOS_BATCHED:.0f})"),
         ("fig28/compartmentalized_batched_peak", 0.0,
-         f"{peaks[3]:.0f} cmd/s (paper 800k)"),
+         f"{peaks[4]:.0f} cmd/s (paper {PAPER_COMPARTMENTALIZED_BATCHED:.0f})"),
         ("fig28/des_cross_check_cmp_unbatched", 0.0,
          f"DES {des_x:.0f} vs MVA {peaks[1]:.0f} cmd/s "
          f"({100*abs(des_x-peaks[1])/peaks[1]:.1f}% apart)"),

@@ -6,12 +6,14 @@
   fig32  weakly consistent reads
   fig33  skew tolerance vs CRAQ
   msgcount  measured per-role message counts (validates the demand tables)
+  sweep  whole-surface config sweep + budget autotune (one jitted call)
   roofline  dry-run roofline readout (40 cells x 2 meshes)
 
 Prints ``name,us_per_call,derived`` CSV.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
@@ -23,6 +25,7 @@ from . import (
     read_scalability,
     roofline_report,
     skew,
+    sweep,
     weak_reads,
 )
 
@@ -33,14 +36,57 @@ MODULES = [
     ("fig32", weak_reads),
     ("fig33", skew),
     ("msgcount", protocol_messages),
+    ("sweep", sweep),
     ("roofline", roofline_report),
 ]
 
+EPILOG = """\
+benchmarks (label: paper target, typical runtime on one CPU core):
+  fig28     Fig. 28  latency-throughput curves, 5 deployments x 512 clients
+            via one batched jitted MVA call + DES cross-check   (~5 s)
+  fig29     Fig. 29  ablation staircase, batched eval + the autotuner's
+            greedy rediscovery of the paper's hand-tuned order  (<1 s)
+  fig30_31  Figs. 30-31  read scalability over replicas + closed-form law
+            (one compiled replica axis, re-weighted per mix)    (<1 s)
+  fig32     Fig. 32  weakly consistent reads skip acceptors     (<1 s)
+  fig33     Fig. 33  skew: flat compartmentalized vs CRAQ dirty-read
+            model + in-process CRAQ cluster validation          (~10 s)
+  msgcount  section 3  measured per-role message counts on the real
+            protocol cluster (validates every demand table)     (~30 s)
+  sweep     section 9  "how should a system be compartmentalized":
+            300-config surface in one jitted call + budget-19
+            autotune for three workload mixes                   (~5 s)
+  roofline  dry-run roofline readout, needs results/dryrun/     (<1 s)
 
-def main() -> None:
+run a subset:    python -m benchmarks.run --only fig28,sweep
+full docs:       benchmarks/README.md
+"""
+
+
+def main(argv: list[str] | None = None) -> None:
+    parser = argparse.ArgumentParser(
+        prog="python -m benchmarks.run",
+        description=__doc__.split("\n")[0],
+        epilog=EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    parser.add_argument(
+        "--only", default=None, metavar="LABELS",
+        help="comma-separated benchmark labels to run (default: all)")
+    args = parser.parse_args(argv)
+
+    selected = MODULES
+    if args.only:
+        wanted = {w.strip() for w in args.only.split(",")}
+        unknown = wanted - {label for label, _ in MODULES}
+        if unknown:
+            parser.error(f"unknown benchmark label(s): {sorted(unknown)}; "
+                         f"choose from {[l for l, _ in MODULES]}")
+        selected = [(l, m) for l, m in MODULES if l in wanted]
+
     print("name,us_per_call,derived")
     failures = 0
-    for label, mod in MODULES:
+    for label, mod in selected:
         t0 = time.perf_counter()
         try:
             rows = mod.run()

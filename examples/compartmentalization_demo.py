@@ -38,3 +38,6 @@ clients, x, r = mva_curve(model, alpha, n_clients_max=512)
 for n in (1, 8, 64, 256, 512):
     print(f"  {n:4d} clients: {x[n-1]:9,.0f} cmd/s at "
           f"{r[n-1]*1e6:7.1f} us median latency")
+
+print("\n(next: examples/autotune_demo.py searches the whole config space "
+      "under a machine budget)")

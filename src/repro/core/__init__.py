@@ -11,6 +11,7 @@ Performance plane (JAX, calibrated on the paper's anchors):
   fluid_throughput / des_throughput.
 """
 from .analytical import (
+    STATION_ORDER,
     DeploymentModel,
     Station,
     ablation_steps,
@@ -20,8 +21,10 @@ from .analytical import (
     mixed_workload_speedup,
     multipaxos_model,
     read_scalability_law,
+    stack_demands,
     unreplicated_model,
 )
+from .autotune import AutotuneResult, TraceStep, autotune, bottleneck_trace
 from .cluster import Network, Node
 from .craq import CraqDeployment
 from .history import History, Operation
@@ -40,19 +43,36 @@ from .protocols import (
     vanilla_multipaxos,
 )
 from .quorums import GridQuorums, MajorityQuorums
-from .simulator import des_throughput, fluid_throughput, mva_curve, mva_curves_batch
+from .simulator import (
+    des_throughput,
+    fluid_throughput,
+    fluid_throughput_batch,
+    mva_curve,
+    mva_curves_batch,
+    mva_curves_from_demands,
+)
 from .spaxos import SPaxosDeployment
+from .sweep import (
+    CompiledSweep,
+    SweepSpec,
+    compile_models,
+    compile_sweep,
+)
 from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
-    "AppendLog", "Command", "CompartmentalizedMultiPaxos", "CraqDeployment",
-    "DeploymentConfig", "DeploymentModel", "GridQuorums", "History", "KVStore",
-    "MajorityQuorums", "MenciusDeployment", "Network", "Node", "Operation",
-    "Register", "SPaxosDeployment", "Station", "UnreplicatedStateMachine",
-    "ablation_steps", "calibrate_alpha", "check_linearizable",
+    "AppendLog", "AutotuneResult", "Command", "CompartmentalizedMultiPaxos",
+    "CompiledSweep", "CraqDeployment", "DeploymentConfig", "DeploymentModel",
+    "GridQuorums", "History", "KVStore", "MajorityQuorums",
+    "MenciusDeployment", "Network", "Node", "Operation", "Register",
+    "SPaxosDeployment", "STATION_ORDER", "Station", "SweepSpec", "TraceStep",
+    "UnreplicatedStateMachine", "ablation_steps", "autotune",
+    "bottleneck_trace", "calibrate_alpha", "check_linearizable",
     "check_register_reads", "check_slot_order", "compartmentalized_model",
-    "craq_model", "des_throughput", "fluid_throughput", "full_compartmentalized",
+    "compile_models", "compile_sweep", "craq_model", "des_throughput",
+    "fluid_throughput", "fluid_throughput_batch", "full_compartmentalized",
     "make_state_machine", "mixed_workload_speedup", "multipaxos_model",
-    "mva_curve", "mva_curves_batch", "noop_command", "read_scalability_law",
+    "mva_curve", "mva_curves_batch", "mva_curves_from_demands",
+    "noop_command", "read_scalability_law", "stack_demands",
     "unreplicated_model", "vanilla_multipaxos",
 ]

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 # Paper anchor points (commands/sec), Fig. 28.
 PAPER_MULTIPAXOS_UNBATCHED = 25_000.0
@@ -37,6 +37,16 @@ PAPER_UNREPLICATED_UNBATCHED = 250_000.0
 PAPER_MULTIPAXOS_BATCHED = 200_000.0
 PAPER_COMPARTMENTALIZED_BATCHED = 800_000.0
 PAPER_UNREPLICATED_BATCHED = 1_000_000.0
+
+# Canonical station vocabulary for batched/stacked demand export.  Every
+# station name any deployment factory emits maps to one fixed slot, so a
+# sweep over heterogeneous deployments lowers to a dense [n_configs, K]
+# tensor whose per-row argmax is directly decodable back to a component name.
+STATION_ORDER: Tuple[str, ...] = (
+    "batcher", "leader", "proxy", "acceptor", "replica", "unbatcher",
+    "server", "follower",
+)
+STATION_INDEX: Dict[str, int] = {name: i for i, name in enumerate(STATION_ORDER)}
 
 
 @dataclass(frozen=True)
@@ -73,6 +83,44 @@ class DeploymentModel:
 
     def total_machines(self) -> int:
         return sum(s.servers for s in self.stations)
+
+    def demand_slots(self) -> Tuple[List[float], List[float], List[int]]:
+        """Write/read demands + server counts scattered into the canonical
+        :data:`STATION_ORDER` slots (zero where the deployment has no such
+        component).  This is the dense row a batched sweep stacks."""
+        d_w = [0.0] * len(STATION_ORDER)
+        d_r = [0.0] * len(STATION_ORDER)
+        srv = [0] * len(STATION_ORDER)
+        for s in self.stations:
+            i = STATION_INDEX[s.name]
+            d_w[i] += s.demand_write
+            d_r[i] += s.demand_read
+            srv[i] += s.servers
+        return d_w, d_r, srv
+
+
+def stack_demands(models: Sequence[DeploymentModel]
+                  ) -> Tuple["np.ndarray", "np.ndarray", "np.ndarray"]:
+    """Lower a list of deployments to dense demand tensors.
+
+    Returns ``(demand_write[M, K], demand_read[M, K], machines[M])`` with
+    ``K = len(STATION_ORDER)``; column ``k`` of every row is the per-server
+    demand of station ``STATION_ORDER[k]`` (0 where absent).  The effective
+    demand matrix at write fraction ``f_w`` is
+    ``f_w * demand_write + (1 - f_w) * demand_read``, its row-max the
+    bottleneck-law denominator, and its row-argmax the bottleneck station.
+    """
+    import numpy as np
+
+    rows_w, rows_r, rows_m = [], [], []
+    for m in models:
+        d_w, d_r, srv = m.demand_slots()
+        rows_w.append(d_w)
+        rows_r.append(d_r)
+        rows_m.append(sum(srv))
+    return (np.asarray(rows_w, dtype=np.float64),
+            np.asarray(rows_r, dtype=np.float64),
+            np.asarray(rows_m, dtype=np.int64))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,249 @@
+"""Budget-constrained deployment search ("How should a system be
+compartmentalized?", paper section 9).
+
+Given a machine budget M, a workload mix ``f_write`` and the calibrated
+per-node rate ``alpha``, :func:`autotune` answers the question the paper's
+authors answered by hand: *which* deployment - how many proxy leaders, what
+acceptor grid, how many replicas, batchers, unbatchers - maximizes peak
+throughput?  Two complementary engines:
+
+* **Exhaustive**: enumerate the discrete config space under the budget via
+  :mod:`repro.core.sweep` (one compiled batch, thousands of configs) and
+  take the argmax, breaking ties toward fewer machines.
+
+* **Greedy bottleneck-following** (:func:`bottleneck_trace`): start from
+  the minimal decoupled deployment and repeatedly scale whatever station is
+  currently saturating - exactly the procedure behind the paper's Fig. 29
+  ablation staircase.  The returned trace *is* the bottleneck-migration
+  narrative: at every step it names the saturating station, the knob turned,
+  and the resulting peak.
+
+The greedy trace explains the optimum; the exhaustive search certifies it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .analytical import DeploymentModel, multipaxos_model
+from .sweep import CompiledSweep, Config, SweepSpec, compile_sweep, model_for
+
+
+@dataclass(frozen=True)
+class TraceStep:
+    """One rung of the bottleneck-migration staircase."""
+
+    step: int
+    label: str                 # the knob turned to get here
+    config: Optional[Config]   # None for the vanilla MultiPaxos baseline
+    machines: int
+    peak: float                # cmds/s at this rung
+    bottleneck: str            # station saturating at this rung
+
+
+@dataclass(frozen=True)
+class AutotuneResult:
+    best_config: Config
+    best_model: DeploymentModel
+    best_peak: float
+    best_bottleneck: str
+    machines: int              # servers used by the best deployment
+    budget: int
+    n_candidates: int          # feasible configs enumerated
+    trace: Tuple[TraceStep, ...]  # greedy bottleneck-migration staircase
+
+
+def candidate_spec(budget: int, f: int = 1, batching: bool = False,
+                   batch_sizes: Tuple[int, ...] = (10, 50, 100)) -> SweepSpec:
+    """The discrete config space under a machine budget.
+
+    Grids keep write quorums (columns) of at least ``f + 1`` members so f
+    failures are survivable; the ``(2f+1, 1)`` column is the
+    majority-quorum degenerate case the ablation starts from.  Knob ranges
+    are clipped so the *smallest* other components still fit: anything
+    larger can never be feasible and would only bloat the batch.
+    """
+    min_grid = f + 1                       # the (f+1, 1) column grid
+    min_rest = 1 + min_grid + (f + 1)      # leader + smallest grid + replicas
+    max_proxies = max(budget - min_rest, 1)
+    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
+    max_grid = budget - (1 + 1 + (f + 1))    # leader + 1 proxy + f+1 replicas
+    grids: List[Tuple[int, int]] = [(2 * f + 1, 1)]
+    for rows in range(f + 1, max(max_grid, f + 1) + 1):
+        for cols in range(1, max(max_grid // rows, 1) + 1):
+            if rows * cols <= max_grid and (rows, cols) not in grids:
+                grids.append((rows, cols))
+    if not batching:
+        return SweepSpec(
+            f=f,
+            n_proxy_leaders=tuple(range(1, max_proxies + 1)),
+            grids=tuple(grids),
+            n_replicas=tuple(range(f + 1, max_replicas + 1)),
+        )
+    # batched spec: batchers/unbatchers dominate, everything else is cheap
+    # per-batch - coarsen the other knobs to keep the product tractable
+    max_bu = max(budget - min_rest - 1, 1)
+    return SweepSpec(
+        f=f,
+        n_proxy_leaders=tuple(range(1, min(max_proxies, 4) + 1)),
+        grids=((2 * f + 1, 1), (f + 1, f + 1)),
+        n_replicas=tuple(range(f + 1, min(max_replicas, f + 3) + 1)),
+        batch_sizes=batch_sizes,
+        n_batchers=tuple(range(1, min(max_bu, 12) + 1)),
+        n_unbatchers=tuple(range(1, min(max_bu, 12) + 1)),
+    )
+
+
+def _eval(config: Config, alpha: float, f_write: float
+          ) -> Tuple[float, str, int, float]:
+    """(peak, bottleneck, machines, total demand).  Total demand is the
+    plateau tie-breaker: a move that keeps the peak flat but lowers the
+    summed demand (e.g. +1 batcher shifting the bottleneck to the
+    unbatcher) is still progress toward the next rung."""
+    m = model_for(config)
+    bn, _ = m.bottleneck(f_write)
+    total = sum(m.demands(f_write).values())
+    return m.peak_throughput(alpha, f_write), bn, m.total_machines(), total
+
+
+# knob-turn candidates per bottleneck station: (label, config transform)
+def _moves(config: Config, batching: bool) -> Dict[str, List[Tuple[str, Config]]]:
+    r, w = config["grid_rows"], config["grid_cols"]
+    moves: Dict[str, List[Tuple[str, Config]]] = {
+        "proxy": [("+1 proxy leader",
+                   {**config, "n_proxy_leaders": config["n_proxy_leaders"] + 1})],
+        "replica": [("+1 replica",
+                     {**config, "n_replicas": config["n_replicas"] + 1})],
+        "acceptor": [
+            ("+1 grid column (write sharding)", {**config, "grid_cols": w + 1}),
+            ("+1 grid row (read sharding)", {**config, "grid_rows": r + 1}),
+        ],
+        "batcher": [], "unbatcher": [], "leader": [],
+    }
+    if batching:
+        if config["n_batchers"] == 0:
+            on = {**config, "n_batchers": 1, "n_unbatchers": 1,
+                  "batch_size": 100}
+            moves["leader"] = [("enable batching (1 batcher, 1 unbatcher)", on)]
+        else:
+            moves["batcher"] = [("+1 batcher",
+                                 {**config, "n_batchers": config["n_batchers"] + 1})]
+            moves["unbatcher"] = [("+1 unbatcher",
+                                   {**config,
+                                    "n_unbatchers": config["n_unbatchers"] + 1})]
+    return moves
+
+
+def bottleneck_trace(budget: int, alpha: float, f_write: float = 1.0,
+                     f: int = 1, batching: bool = False,
+                     max_steps: int = 64) -> List[TraceStep]:
+    """Greedy bottleneck-following from vanilla MultiPaxos up to the budget.
+
+    Step 0 is the un-decoupled baseline; step 1 decouples into the minimal
+    compartmentalized deployment; every further step scales the currently
+    saturating station (trying each applicable knob, keeping the best that
+    fits the budget).  Stops when the bottleneck has no scaling knob left
+    (the sequencing leader, in unbatched mode) or no move improves.
+    """
+    mp = multipaxos_model(f=f)
+    trace: List[TraceStep] = [TraceStep(
+        step=0, label="vanilla MultiPaxos", config=None,
+        machines=mp.total_machines(),
+        peak=mp.peak_throughput(alpha, f_write),
+        bottleneck=mp.bottleneck(f_write)[0])]
+
+    # paper Fig. 29a step 1: decouple into 2 proxies, 2f+1 acceptors, f+1
+    # replicas (1 proxy would *lose* throughput vs the fused leader)
+    config: Config = dict(f=f, n_proxy_leaders=2, grid_rows=2 * f + 1,
+                          grid_cols=1, n_replicas=f + 1, batch_size=1,
+                          n_batchers=0, n_unbatchers=0)
+    peak, bn, machines, total = _eval(config, alpha, f_write)
+    if machines > budget:
+        return trace
+    trace.append(TraceStep(step=1, label="decouple (2 proxy leaders)",
+                           config=dict(config), machines=machines, peak=peak,
+                           bottleneck=bn))
+
+    seen = {tuple(sorted(config.items()))}
+    for step in range(2, max_steps):
+        best: Optional[Tuple[float, float, str, Config, str, int]] = None
+        for label, cand in _moves(config, batching)[bn]:
+            key = tuple(sorted(cand.items()))
+            if key in seen:
+                continue
+            p, b, m, tot = _eval(cand, alpha, f_write)
+            if m > budget:
+                continue
+            if best is None or (p, -tot) > (best[0], -best[1]):
+                best = (p, tot, b, cand, label, m)
+        # take the move if it raises the peak, or keeps it flat while
+        # freeing headroom (bottleneck migrates within a plateau)
+        if best is None or best[0] < peak * (1 - 1e-9):
+            break
+        if best[0] <= peak * (1 + 1e-9) and best[1] >= total * (1 - 1e-9):
+            break
+        peak, total, bn, config, label, machines = best
+        seen.add(tuple(sorted(config.items())))
+        trace.append(TraceStep(step=step, label=label, config=dict(config),
+                               machines=machines, peak=peak, bottleneck=bn))
+    return trace
+
+
+def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
+             batching: bool = False,
+             compiled: Optional[CompiledSweep] = None) -> AutotuneResult:
+    """Max-throughput deployment for a machine budget, plus the greedy
+    bottleneck-migration trace that explains it.
+
+    ``compiled`` lets callers reuse an already-compiled candidate space
+    (e.g. to autotune many workload mixes against one batch)."""
+    # smallest deployment the candidate space contains: leader + 1 proxy +
+    # the (f+1, 1) column grid + f+1 replicas
+    if budget < 1 + 1 + (f + 1) + (f + 1):
+        raise ValueError(
+            f"budget {budget} cannot hold leader + 1 proxy + {(f+1)}x1 "
+            f"grid + {f+1} replicas for f={f}")
+    if compiled is None:
+        compiled = compile_sweep(candidate_spec(budget, f=f, batching=batching))
+    if compiled.configs is None:
+        raise ValueError(
+            "compiled sweep carries no configs - build it with compile_sweep "
+            "(or pass configs to compile_models)")
+    feasible = compiled.machines <= budget
+    if not feasible.any():
+        raise ValueError(
+            f"no candidate in the compiled sweep fits budget {budget} "
+            f"(smallest uses {int(compiled.machines.min())} machines)")
+    peaks = np.where(feasible, compiled.peak_throughput(alpha, f_write),
+                     -np.inf)
+    # argmax; ties break toward fewer machines
+    order = np.lexsort((compiled.machines, -peaks))
+    best_i = int(order[0])
+    best_config = dict(compiled.configs[best_i])
+    best_model = compiled.models[best_i]
+    best_peak = float(peaks[best_i])
+    best_bn = best_model.bottleneck(f_write)[0]
+    machines = int(compiled.machines[best_i])
+
+    trace = tuple(bottleneck_trace(budget, alpha, f_write=f_write, f=f,
+                                   batching=batching))
+    # the greedy climber can escape a coarsened exhaustive grid (it has no
+    # cartesian-product blowup to worry about) - keep whichever won
+    last = trace[-1]
+    if last.config is not None and last.peak > best_peak:
+        best_config = dict(last.config)
+        best_model = model_for(best_config)
+        best_peak, best_bn, machines = (last.peak, last.bottleneck,
+                                        last.machines)
+    return AutotuneResult(
+        best_config=best_config,
+        best_model=best_model,
+        best_peak=best_peak,
+        best_bottleneck=best_bn,
+        machines=machines,
+        budget=budget,
+        n_candidates=int(feasible.sum()),
+        trace=trace,
+    )

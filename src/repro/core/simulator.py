@@ -35,8 +35,7 @@ def demand_vector(model: DeploymentModel, f_write: float = 1.0) -> np.ndarray:
     return np.array([s.demand(f_write) for s in model.stations], dtype=np.float64)
 
 
-@partial(jax.jit, static_argnames=("n_max",))
-def _mva_scan(demands: jnp.ndarray, think: jnp.ndarray, n_max: int):
+def _mva_scan_impl(demands: jnp.ndarray, think: jnp.ndarray, n_max: int):
     """Exact single-class MVA.
 
     demands: [K] per-station demand (already per-server / load-balanced).
@@ -55,6 +54,20 @@ def _mva_scan(demands: jnp.ndarray, think: jnp.ndarray, n_max: int):
     return xs, rs
 
 
+_mva_scan = partial(jax.jit, static_argnames=("n_max",))(_mva_scan_impl)
+
+
+@partial(jax.jit, static_argnames=("n_max",))
+def _mva_scan_batch(demands: jnp.ndarray, think: jnp.ndarray, n_max: int):
+    """Batched MVA: one compiled call over a [M, K] demand matrix.
+
+    Zero-demand columns are inert (they add nothing to residence time), so
+    heterogeneous deployments padded to a common K evaluate exactly as their
+    unpadded selves.  Returns (X[M, n_max], R[M, n_max]).
+    """
+    return jax.vmap(lambda d: _mva_scan_impl(d, think, n_max))(demands)
+
+
 def mva_curve(model: DeploymentModel, alpha: float, n_clients_max: int = 512,
               f_write: float = 1.0, think: float = 0.0
               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -65,17 +78,33 @@ def mva_curve(model: DeploymentModel, alpha: float, n_clients_max: int = 512,
     return clients, np.asarray(xs), np.asarray(rs)
 
 
+def mva_curves_from_demands(demands: np.ndarray, n_clients_max: int = 512,
+                            think: float = 0.0
+                            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Batched MVA straight from a [M, K] demand matrix (units: seconds per
+    command per station, i.e. already divided by alpha).  One jitted call
+    regardless of M - this is the kernel the sweep engine drives with
+    thousands of compiled configs at once.  Returns (clients, X[M, N], R[M, N])."""
+    xs, rs = _mva_scan_batch(jnp.asarray(demands), jnp.asarray(think),
+                             n_clients_max)
+    return np.arange(1, n_clients_max + 1), np.asarray(xs), np.asarray(rs)
+
+
+def _padded_demands(models: Sequence[DeploymentModel], alpha: float,
+                    f_write: float) -> np.ndarray:
+    """[M, K] demand matrix, padded to the widest station count."""
+    ds = [demand_vector(m, f_write) / alpha for m in models]
+    k = max(len(d) for d in ds)
+    return np.stack([np.pad(d, (0, k - len(d))) for d in ds])
+
+
 def mva_curves_batch(models: Sequence[DeploymentModel], alpha: float,
                      n_clients_max: int = 512, f_write: float = 1.0
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """vmapped MVA over several deployments (padded to a common station
-    count).  Returns (clients, X[m, N], R[m, N])."""
-    ds = [demand_vector(m, f_write) / alpha for m in models]
-    k = max(len(d) for d in ds)
-    padded = np.stack([np.pad(d, (0, k - len(d))) for d in ds])
-    xs, rs = jax.vmap(lambda d: _mva_scan(d, jnp.asarray(0.0), n_clients_max))(
-        jnp.asarray(padded))
-    return np.arange(1, n_clients_max + 1), np.asarray(xs), np.asarray(rs)
+    """Batched MVA over several deployments (padded to a common station
+    count), one jitted call.  Returns (clients, X[m, N], R[m, N])."""
+    return mva_curves_from_demands(_padded_demands(models, alpha, f_write),
+                                   n_clients_max)
 
 
 # ---------------------------------------------------------------------------
@@ -83,9 +112,8 @@ def mva_curves_batch(models: Sequence[DeploymentModel], alpha: float,
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("n_steps",))
-def _fluid_scan(demands: jnp.ndarray, n_clients: jnp.ndarray, dt: jnp.ndarray,
-                n_steps: int):
+def _fluid_scan_impl(demands: jnp.ndarray, n_clients: jnp.ndarray,
+                     dt: jnp.ndarray, n_steps: int):
     """Pipeline fluid model.
 
     State: q[K] work queued at each station (in commands), plus a pool of
@@ -114,6 +142,20 @@ def _fluid_scan(demands: jnp.ndarray, n_clients: jnp.ndarray, dt: jnp.ndarray,
     return done, flows
 
 
+_fluid_scan = partial(jax.jit, static_argnames=("n_steps",))(_fluid_scan_impl)
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _fluid_scan_batch(demands: jnp.ndarray, n_clients: jnp.ndarray,
+                      dt: jnp.ndarray, n_steps: int):
+    """Batched fluid pipeline over a [M, K] demand matrix, one compiled call.
+
+    Zero-demand stations serve at effectively infinite rate (see the
+    ``jnp.where`` guard in the step), so canonical-slot padding is inert
+    here too.  Returns (done[M], flows[M, n_steps])."""
+    return jax.vmap(lambda d: _fluid_scan_impl(d, n_clients, dt, n_steps))(demands)
+
+
 def fluid_throughput(model: DeploymentModel, alpha: float, n_clients: int,
                      f_write: float = 1.0, sim_time: float = 1.0,
                      n_steps: int = 2000) -> float:
@@ -125,6 +167,30 @@ def fluid_throughput(model: DeploymentModel, alpha: float, n_clients: int,
     # measure over the second half (post-transient)
     half = n_steps // 2
     return float(np.asarray(flows)[half:].sum() / (dt * (n_steps - half)))
+
+
+def fluid_throughput_from_demands(demands: np.ndarray, n_clients: int,
+                                  sim_time: float = 1.0, n_steps: int = 2000
+                                  ) -> np.ndarray:
+    """Batched fluid throughput (cmds/s) straight from a [M, K] demand
+    matrix (seconds per command per station), one compiled call.
+    Returns X[M]."""
+    dt = sim_time / n_steps
+    _, flows = _fluid_scan_batch(jnp.asarray(demands),
+                                 jnp.asarray(float(n_clients)),
+                                 jnp.asarray(dt), n_steps)
+    half = n_steps // 2
+    return np.asarray(flows)[:, half:].sum(axis=1) / (dt * (n_steps - half))
+
+
+def fluid_throughput_batch(models: Sequence[DeploymentModel], alpha: float,
+                           n_clients: int, f_write: float = 1.0,
+                           sim_time: float = 1.0, n_steps: int = 2000
+                           ) -> np.ndarray:
+    """Steady-state fluid throughput (cmds/s) of several deployments in one
+    compiled call.  Returns X[M]."""
+    return fluid_throughput_from_demands(
+        _padded_demands(models, alpha, f_write), n_clients, sim_time, n_steps)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,166 @@
+"""Vectorized compartmentalization sweeps.
+
+The paper's evaluation is not one deployment but a *surface*: throughput as
+a function of every compartmentalization knob (proxy leaders, acceptor grid
+shape, replicas, batchers, batch size) under every workload mix.  This
+module lowers a grid of configurations into dense demand tensors once
+(:func:`compile_sweep`) and then answers whole-surface questions with
+vectorized numpy (bottleneck law) or a single jitted JAX call (full MVA /
+fluid curves) instead of a Python loop over ``DeploymentModel`` objects.
+
+Pipeline:
+
+    SweepSpec  --configs()-->  knob dicts
+               --compile_sweep-->  CompiledSweep (demand_write/read [M, K])
+               --.peak_throughput/.bottlenecks-->  bottleneck-law surface
+               --.mva/.fluid-->  one jitted call, X[M, N] curves
+
+``K = len(STATION_ORDER)`` is the canonical station vocabulary from
+:mod:`repro.core.analytical`; a config's missing components occupy
+zero-demand slots, which are exactly inert under both MVA and the fluid
+model, so heterogeneous deployments batch together losslessly.
+
+:mod:`repro.core.autotune` builds on this to search the config space under
+a machine budget.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .analytical import (
+    STATION_ORDER,
+    DeploymentModel,
+    compartmentalized_model,
+    stack_demands,
+)
+from .simulator import fluid_throughput_from_demands, mva_curves_from_demands
+
+Config = Dict[str, int]
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A cartesian grid over the compartmentalization knobs.
+
+    Each field lists the values that knob takes; :meth:`configs` yields the
+    product.  ``grids`` entries are ``(rows, cols)`` - write quorums are
+    columns (``rows`` members), read quorums are rows (``cols`` members).
+    """
+
+    f: int = 1
+    n_proxy_leaders: Tuple[int, ...] = (10,)
+    grids: Tuple[Tuple[int, int], ...] = ((2, 2),)
+    n_replicas: Tuple[int, ...] = (4,)
+    batch_sizes: Tuple[int, ...] = (1,)
+    n_batchers: Tuple[int, ...] = (0,)
+    n_unbatchers: Tuple[int, ...] = (0,)
+
+    def size(self) -> int:
+        return (len(self.n_proxy_leaders) * len(self.grids)
+                * len(self.n_replicas) * len(self.batch_sizes)
+                * len(self.n_batchers) * len(self.n_unbatchers))
+
+    def configs(self) -> Iterator[Config]:
+        for p, (r, w), n, B, b, u in itertools.product(
+                self.n_proxy_leaders, self.grids, self.n_replicas,
+                self.batch_sizes, self.n_batchers, self.n_unbatchers):
+            yield dict(f=self.f, n_proxy_leaders=p, grid_rows=r, grid_cols=w,
+                       n_replicas=n, batch_size=B, n_batchers=b,
+                       n_unbatchers=u)
+
+
+def model_for(config: Config) -> DeploymentModel:
+    """The per-config ``DeploymentModel`` a compiled sweep row corresponds
+    to (the scalar reference path the batched path is tested against)."""
+    return compartmentalized_model(**config)
+
+
+@dataclass(frozen=True)
+class CompiledSweep:
+    """A grid of deployments lowered to dense demand tensors.
+
+    ``demand_write``/``demand_read`` are [M, K] per-server service demands
+    in canonical :data:`STATION_ORDER` slots; ``machines`` is [M] total
+    servers.  All evaluation methods are vectorized over the M axis.
+    """
+
+    models: Tuple[DeploymentModel, ...]
+    demand_write: np.ndarray
+    demand_read: np.ndarray
+    machines: np.ndarray
+    configs: Optional[Tuple[Config, ...]] = None
+
+    def __len__(self) -> int:
+        return len(self.models)
+
+    def demands(self, f_write: float = 1.0) -> np.ndarray:
+        """Effective [M, K] demand matrix at write fraction ``f_write``."""
+        return (f_write * self.demand_write
+                + (1.0 - f_write) * self.demand_read)
+
+    def peak_throughput(self, alpha: float, f_write: float = 1.0) -> np.ndarray:
+        """Bottleneck-law peak throughput, [M] cmds/s."""
+        d_max = self.demands(f_write).max(axis=1)
+        with np.errstate(divide="ignore"):
+            return np.where(d_max > 0, alpha / np.maximum(d_max, 1e-300),
+                            np.inf)
+
+    def bottleneck_indices(self, f_write: float = 1.0) -> np.ndarray:
+        return self.demands(f_write).argmax(axis=1)
+
+    def bottlenecks(self, f_write: float = 1.0) -> List[str]:
+        """Name of the saturating station per config, [M]."""
+        return [STATION_ORDER[i] for i in self.bottleneck_indices(f_write)]
+
+    def mva(self, alpha: float, n_clients_max: int = 512,
+            f_write: float = 1.0
+            ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Full closed-loop latency-throughput surface in ONE jitted call.
+
+        Returns (clients[N], X[M, N] cmds/s, R[M, N] seconds)."""
+        return mva_curves_from_demands(self.demands(f_write) / alpha,
+                                       n_clients_max)
+
+    def fluid(self, alpha: float, n_clients: int, f_write: float = 1.0,
+              sim_time: float = 1.0, n_steps: int = 2000) -> np.ndarray:
+        """Batched fluid cross-check, [M] cmds/s in one jitted call."""
+        return fluid_throughput_from_demands(self.demands(f_write) / alpha,
+                                             n_clients, sim_time, n_steps)
+
+    def top_k(self, alpha: float, k: int = 5, f_write: float = 1.0,
+              budget: Optional[int] = None) -> List[Tuple[int, float, str]]:
+        """Best configs by bottleneck-law peak: [(index, peak, bottleneck)].
+
+        Ties in peak break toward fewer machines; ``budget`` masks out
+        deployments using more than that many servers."""
+        peaks = self.peak_throughput(alpha, f_write)
+        if budget is not None:
+            peaks = np.where(self.machines <= budget, peaks, -np.inf)
+        order = np.lexsort((self.machines, -peaks))
+        names = self.bottlenecks(f_write)
+        return [(int(i), float(peaks[i]), names[i])
+                for i in order[:k] if np.isfinite(peaks[i]) and peaks[i] > 0]
+
+
+def compile_models(models: Sequence[DeploymentModel],
+                   configs: Optional[Sequence[Config]] = None) -> CompiledSweep:
+    """Lower an explicit list of deployments (e.g. the Fig. 29 ablation
+    steps, or hand-built models) into a batched sweep."""
+    d_w, d_r, machines = stack_demands(models)
+    return CompiledSweep(models=tuple(models), demand_write=d_w,
+                         demand_read=d_r, machines=machines,
+                         configs=tuple(configs) if configs is not None else None)
+
+
+def compile_sweep(spec: SweepSpec) -> CompiledSweep:
+    """Compile a knob grid into demand tensors (the config -> demand-matrix
+    compiler).  O(size) Python work happens once, here; everything after is
+    vectorized."""
+    configs = list(spec.configs())
+    models = [model_for(c) for c in configs]
+    compiled = compile_models(models, configs)
+    return compiled

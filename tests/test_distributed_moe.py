@@ -16,7 +16,8 @@ def run_sub(body: str, n_devices: int = 4, timeout: int = 480) -> str:
             + textwrap.dedent(body))
     proc = subprocess.run(
         [sys.executable, "-c", code], capture_output=True, text=True,
-        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo")
     assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
     return proc.stdout

@@ -5,6 +5,10 @@ every complete history recorded by the compartmentalized protocol must be
 linearizable (checked exhaustively on small histories).  Also sanity-checks
 the checker itself against known-good and known-bad histories.
 """
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 from repro.core import full_compartmentalized

@@ -1,5 +1,8 @@
 """Quorum-system unit + property tests (paper section 3.2)."""
 import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quorums import (

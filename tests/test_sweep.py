@@ -1,0 +1,185 @@
+"""Sweep engine + autotuner tests: the batched path must agree elementwise
+with the scalar per-model path, a >=100-config sweep must evaluate in one
+jitted call, and the autotuner must recover the paper's hand-tuned Fig. 29
+ordering and deployment quality under the same machine budget."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    STATION_ORDER,
+    SweepSpec,
+    ablation_steps,
+    autotune,
+    bottleneck_trace,
+    calibrate_alpha,
+    compartmentalized_model,
+    compile_models,
+    compile_sweep,
+    fluid_throughput,
+    multipaxos_model,
+    mva_curve,
+    stack_demands,
+)
+from repro.core.analytical import PAPER_MULTIPAXOS_UNBATCHED
+
+ALPHA = calibrate_alpha(PAPER_MULTIPAXOS_UNBATCHED)
+
+
+def big_spec() -> SweepSpec:
+    return SweepSpec(
+        n_proxy_leaders=(1, 2, 4, 7, 10),
+        grids=((3, 1), (2, 2), (2, 3), (3, 3)),
+        n_replicas=(2, 3, 4, 5, 6),
+        batch_sizes=(1,),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Demand-matrix compiler
+# ---------------------------------------------------------------------------
+
+
+def test_stack_demands_roundtrips_station_demands():
+    models = [multipaxos_model(), compartmentalized_model(),
+              compartmentalized_model(batch_size=100, n_batchers=2,
+                                      n_unbatchers=3)]
+    d_w, d_r, machines = stack_demands(models)
+    assert d_w.shape == (3, len(STATION_ORDER))
+    for i, m in enumerate(models):
+        assert machines[i] == m.total_machines()
+        for s in m.stations:
+            k = STATION_ORDER.index(s.name)
+            assert d_w[i, k] == pytest.approx(s.demand_write)
+            assert d_r[i, k] == pytest.approx(s.demand_read)
+    # slots for absent stations are exactly zero
+    assert d_w[0, STATION_ORDER.index("proxy")] == 0.0
+
+
+def test_compiled_peaks_match_per_model_bottleneck_law():
+    compiled = compile_sweep(big_spec())
+    assert len(compiled) == 100
+    for f_write in (1.0, 0.5, 0.1):
+        peaks = compiled.peak_throughput(ALPHA, f_write=f_write)
+        bns = compiled.bottlenecks(f_write=f_write)
+        for i, m in enumerate(compiled.models):
+            assert peaks[i] == pytest.approx(
+                m.peak_throughput(ALPHA, f_write=f_write), rel=1e-12)
+            assert bns[i] == m.bottleneck(f_write)[0]
+
+
+def test_compiled_sweep_carries_configs():
+    compiled = compile_sweep(big_spec())
+    assert compiled.configs is not None
+    for cfg, m in zip(compiled.configs, compiled.models):
+        rebuilt = compartmentalized_model(**cfg)
+        assert rebuilt.stations == m.stations
+
+
+# ---------------------------------------------------------------------------
+# One jitted call over >= 100 configs == per-config scalar MVA
+# ---------------------------------------------------------------------------
+
+
+def test_batched_mva_matches_per_config_curves_elementwise():
+    compiled = compile_sweep(big_spec())
+    assert len(compiled) >= 100
+    clients, X, R = compiled.mva(ALPHA, n_clients_max=64)
+    assert X.shape == (len(compiled), 64)
+    for i in range(0, len(compiled), 7):  # sample the grid
+        _, x_single, r_single = mva_curve(compiled.models[i], ALPHA,
+                                          n_clients_max=64)
+        np.testing.assert_allclose(X[i], x_single, rtol=1e-6)
+        np.testing.assert_allclose(R[i], r_single, rtol=1e-6)
+
+
+def test_batched_mva_read_mix_matches_scalar():
+    compiled = compile_sweep(SweepSpec(n_proxy_leaders=(5, 10),
+                                       grids=((2, 2),),
+                                       n_replicas=(4, 6)))
+    _, X, _ = compiled.mva(ALPHA, n_clients_max=32, f_write=0.1)
+    for i, m in enumerate(compiled.models):
+        _, x_single, _ = mva_curve(m, ALPHA, n_clients_max=32, f_write=0.1)
+        np.testing.assert_allclose(X[i], x_single, rtol=1e-6)
+
+
+def test_batched_fluid_matches_scalar():
+    compiled = compile_models([multipaxos_model(), compartmentalized_model()])
+    xs = compiled.fluid(ALPHA, n_clients=128, sim_time=0.05)
+    for i, m in enumerate(compiled.models):
+        x_single = fluid_throughput(m, ALPHA, n_clients=128, sim_time=0.05)
+        assert xs[i] == pytest.approx(x_single, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_ablation_ordering_recovered_by_batched_eval():
+    """The batched sweep must rank the Fig. 29 staircase exactly as the
+    scalar hand-tuned path does: monotone nondecreasing, ending at the
+    paper deployment's peak."""
+    steps = ablation_steps()
+    compiled = compile_models([m for _, m in steps])
+    peaks = compiled.peak_throughput(ALPHA)
+    scalar = [m.peak_throughput(ALPHA) for _, m in steps]
+    np.testing.assert_allclose(peaks, scalar, rtol=1e-12)
+    assert all(b >= a * 0.999 for a, b in zip(peaks, peaks[1:]))
+    # bottleneck identities match the scalar path too
+    assert compiled.bottlenecks() == [m.bottleneck()[0] for _, m in steps]
+
+
+def test_autotune_meets_paper_deployment_at_same_budget():
+    paper = compartmentalized_model(f=1, n_proxy_leaders=10, grid_rows=2,
+                                    grid_cols=2, n_replicas=4)
+    budget = paper.total_machines()  # 19: leader + 10 proxies + 4 acc + 4 repl
+    res = autotune(budget=budget, alpha=ALPHA, f_write=1.0)
+    assert res.best_peak >= paper.peak_throughput(ALPHA) * (1 - 1e-9)
+    assert res.machines <= budget
+    # fully compartmentalized write path still bottlenecks on the leader
+    assert res.best_bottleneck == "leader"
+
+
+def test_autotune_trace_walks_paper_bottleneck_migration():
+    """Fig. 29a narrative: leader -> proxies (scaled until) -> leader."""
+    trace = bottleneck_trace(budget=19, alpha=ALPHA, f_write=1.0)
+    bns = [t.bottleneck for t in trace]
+    assert bns[0] == "leader"          # vanilla MultiPaxos
+    assert bns[1] == "proxy"           # right after decoupling
+    assert bns[-1] == "leader"         # terminal write-path bottleneck
+    peaks = [t.peak for t in trace]
+    assert all(b >= a * 0.999 for a, b in zip(peaks, peaks[1:]))
+    machines = [t.machines for t in trace]
+    assert all(m <= 19 for m in machines)
+
+
+def test_autotune_read_heavy_scales_replicas():
+    res = autotune(budget=19, alpha=ALPHA, f_write=0.1)
+    res_w = autotune(budget=19, alpha=ALPHA, f_write=1.0)
+    assert res.best_peak > 2.0 * res_w.best_peak
+    assert res.best_config["n_replicas"] > 2
+    # the read-heavy staircase must scale replicas at some point
+    labels = [t.label for t in res.trace]
+    assert any("replica" in l for l in labels)
+
+
+def test_autotune_batching_beats_unbatched():
+    res_b = autotune(budget=19, alpha=ALPHA, f_write=1.0, batching=True)
+    res_u = autotune(budget=19, alpha=ALPHA, f_write=1.0)
+    assert res_b.best_peak > 2.0 * res_u.best_peak
+    assert res_b.best_config["n_batchers"] >= 1
+
+
+def test_autotune_respects_budget():
+    for budget in (9, 12, 19):
+        res = autotune(budget=budget, alpha=ALPHA, f_write=0.5)
+        assert res.machines <= budget
+        assert all(t.machines <= budget for t in res.trace)
+    with pytest.raises(ValueError):
+        autotune(budget=4, alpha=ALPHA)
+
+
+def test_autotune_more_budget_never_hurts():
+    peaks = [autotune(budget=b, alpha=ALPHA, f_write=0.1).best_peak
+             for b in (10, 14, 19, 24)]
+    assert all(b >= a * (1 - 1e-9) for a, b in zip(peaks, peaks[1:]))

@@ -1,17 +1,19 @@
 # Repo checks.  `make test` is the tier-1 gate; the others are fast
-# confidence checks for docs and benchmarks.
+# confidence checks for docs and benchmarks.  `make ci` chains everything
+# with JAX pinned to CPU (so libtpu metadata probing can't hang a runner).
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke docs-links check
+.PHONY: test bench-smoke docs-links check ci
 
 test:
 	$(PYTHON) -m pytest -x -q
 
-# one cheap figure + the sweep engine: exercises the batched MVA kernel,
-# the autotuner and the CSV harness end to end in well under a minute
+# cheap figures + the sweep and transient engines: exercises the batched
+# MVA kernel, the stochastic scan engine (failover benchmark), the
+# autotuner and the CSV harness end to end in about a minute
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig29,fig30_31,sweep
+	$(PYTHON) -m benchmarks.run --only fig29,fig30_31,failover,sweep
 
 # every src/repro/... (and benchmarks/, examples/, tests/) path mentioned
 # in README.md / docs/*.md / benchmarks/README.md must exist
@@ -19,3 +21,8 @@ docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
 check: docs-links test bench-smoke
+
+ci:
+	JAX_PLATFORMS=cpu $(MAKE) docs-links
+	JAX_PLATFORMS=cpu $(MAKE) test
+	JAX_PLATFORMS=cpu $(MAKE) bench-smoke

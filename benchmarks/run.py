@@ -4,7 +4,8 @@
   fig29  compartmentalization ablation staircase (+ batched variant)
   fig30/31  read scalability + closed-form law
   fig32  weakly consistent reads
-  fig33  skew tolerance vs CRAQ
+  fig33  skew tolerance vs CRAQ (incl. scripted skew ramp)
+  failover  transient dynamics: leader crash, mid-run scale-up, batch fill
   msgcount  measured per-role message counts (validates the demand tables)
   sweep  whole-surface config sweep + budget autotune (one jitted call)
   roofline  dry-run roofline readout (40 cells x 2 meshes)
@@ -20,6 +21,7 @@ import traceback
 
 from . import (
     ablation,
+    failover,
     latency_throughput,
     protocol_messages,
     read_scalability,
@@ -35,6 +37,7 @@ MODULES = [
     ("fig30_31", read_scalability),
     ("fig32", weak_reads),
     ("fig33", skew),
+    ("failover", failover),
     ("msgcount", protocol_messages),
     ("sweep", sweep),
     ("roofline", roofline_report),
@@ -43,14 +46,22 @@ MODULES = [
 EPILOG = """\
 benchmarks (label: paper target, typical runtime on one CPU core):
   fig28     Fig. 28  latency-throughput curves, 5 deployments x 512 clients
-            via one batched jitted MVA call + DES cross-check   (~5 s)
+            via one batched jitted MVA call + stochastic transient
+            cross-check (5 deployments x 8 seeds, one scan)     (~10 s)
   fig29     Fig. 29  ablation staircase, batched eval + the autotuner's
             greedy rediscovery of the paper's hand-tuned order  (<1 s)
   fig30_31  Figs. 30-31  read scalability over replicas + closed-form law
             (one compiled replica axis, re-weighted per mix)    (<1 s)
-  fig32     Fig. 32  weakly consistent reads skip acceptors     (<1 s)
+  fig32     Fig. 32  weakly consistent reads skip acceptors; all 6
+            deployments per mix on the batched transient engine (~8 s)
   fig33     Fig. 33  skew: flat compartmentalized vs CRAQ dirty-read
-            model + in-process CRAQ cluster validation          (~10 s)
+            model, a scripted skew ramp p:0->1 mid-run on the batched
+            transient engine, + in-process CRAQ cluster         (~15 s)
+  failover  transient dynamics on the batched stochastic engine:
+            leader crash -> throughput dips to zero and recovers to
+            the plateau (p99 carries the stall), mid-run proxy
+            scale-up migrating the bottleneck, batch fill ramp
+            B:1->100, and p99-under-crash autotuning             (~25 s)
   msgcount  section 3  measured per-role message counts on the real
             protocol cluster (validates every demand table)     (~30 s)
   sweep     section 9  "how should a system be compartmentalized":

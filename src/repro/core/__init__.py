@@ -18,6 +18,7 @@ from .analytical import (
     calibrate_alpha,
     compartmentalized_model,
     craq_model,
+    craq_station_demands,
     mixed_workload_speedup,
     multipaxos_model,
     read_scalability_law,
@@ -58,21 +59,35 @@ from .sweep import (
     compile_models,
     compile_sweep,
 )
+from .transient import (
+    CRASH,
+    Event,
+    TransientResult,
+    build_schedule,
+    failover_schedule,
+    scale_schedule,
+    schedule_from_demands,
+    simulate_transient,
+    transient_throughput,
+)
 from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
-    "AppendLog", "AutotuneResult", "Command", "CompartmentalizedMultiPaxos",
-    "CompiledSweep", "CraqDeployment", "DeploymentConfig", "DeploymentModel",
-    "GridQuorums", "History", "KVStore", "MajorityQuorums",
-    "MenciusDeployment", "Network", "Node", "Operation", "Register",
-    "SPaxosDeployment", "STATION_ORDER", "Station", "SweepSpec", "TraceStep",
-    "UnreplicatedStateMachine", "ablation_steps", "autotune",
-    "bottleneck_trace", "calibrate_alpha", "check_linearizable",
-    "check_register_reads", "check_slot_order", "compartmentalized_model",
-    "compile_models", "compile_sweep", "craq_model", "des_throughput",
-    "fluid_throughput", "fluid_throughput_batch", "full_compartmentalized",
-    "make_state_machine", "mixed_workload_speedup", "multipaxos_model",
-    "mva_curve", "mva_curves_batch", "mva_curves_from_demands",
-    "noop_command", "read_scalability_law", "stack_demands",
-    "unreplicated_model", "vanilla_multipaxos",
+    "AppendLog", "AutotuneResult", "CRASH", "Command",
+    "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
+    "DeploymentConfig", "DeploymentModel", "Event", "GridQuorums", "History",
+    "KVStore", "MajorityQuorums", "MenciusDeployment", "Network", "Node",
+    "Operation", "Register", "SPaxosDeployment", "STATION_ORDER", "Station",
+    "SweepSpec", "TraceStep", "TransientResult", "UnreplicatedStateMachine",
+    "ablation_steps", "autotune", "bottleneck_trace", "build_schedule",
+    "calibrate_alpha", "check_linearizable", "check_register_reads",
+    "check_slot_order", "compartmentalized_model", "compile_models",
+    "compile_sweep", "craq_model", "craq_station_demands", "des_throughput",
+    "failover_schedule", "fluid_throughput", "fluid_throughput_batch",
+    "full_compartmentalized", "make_state_machine", "mixed_workload_speedup",
+    "multipaxos_model", "mva_curve", "mva_curves_batch",
+    "mva_curves_from_demands", "noop_command", "read_scalability_law",
+    "scale_schedule", "schedule_from_demands", "simulate_transient",
+    "stack_demands", "transient_throughput", "unreplicated_model",
+    "vanilla_multipaxos",
 ]

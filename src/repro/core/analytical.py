@@ -229,47 +229,50 @@ def unreplicated_model(batch_size: int = 1, n_batchers: int = 0,
                            stations=tuple(stations))
 
 
+def craq_station_demands(n_nodes: int, skew_p: float, f_write: float,
+                         alpha: float, T: float,
+                         commit_latency_cmds: float = 8.0) -> List[float]:
+    """Per-node CRAQ message demands at offered throughput ``T`` (the
+    demand mapping behind :func:`craq_model`, exposed so time-varying skew
+    schedules can feed the transient engine a chain-demand vector per
+    window - paper Fig. 33 as dynamics).
+
+    With probability ``skew_p`` an op targets hot key 0; otherwise a
+    uniform cold key.  A read of a *dirty* key is forwarded to the tail;
+    the hot key is dirty whenever one of its writes is in flight
+    (M/G/inf busy indicator with commit time ``C``)."""
+    k = n_nodes
+    lam_w_hot = T * f_write * skew_p
+    C = commit_latency_cmds * (2.0 * k) / alpha
+    dirty = 1.0 - math.exp(-lam_w_hot * C)
+    f_read = 1.0 - f_write
+    # every node: writes cost 4 msgs (fwd recv/send + ack recv/send);
+    # head also takes client recv + reply send
+    demands = []
+    for i in range(k):
+        d = f_write * 4.0
+        if i == 0:
+            d += f_write * 2.0
+        # reads: uniformly addressed; clean served locally (2 msgs)
+        p_fwd = skew_p * dirty
+        d += f_read * ((1.0 - p_fwd) * 2.0 / k + p_fwd * (1.0 / k))
+        if i == k - 1:  # tail: all forwarded reads + its own share
+            d += f_read * p_fwd * 2.0
+        demands.append(d)
+    return demands
+
+
 def craq_model(n_nodes: int, skew_p: float, f_write: float,
                alpha: float, commit_latency_cmds: float = 8.0) -> float:
     """CRAQ peak throughput under the paper's skew workload (section 8.4).
 
-    With probability ``skew_p`` an op targets hot key 0; otherwise a uniform
-    cold key.  A read of a *dirty* key is forwarded to the tail.  The hot
-    key is dirty whenever one of its writes is in flight; with write arrival
-    rate ``lam_w_hot`` and commit time ``C`` the dirty probability is
-    ``1 - exp(-lam_w_hot * C)`` (M/G/inf busy indicator).
-
-    ``commit_latency_cmds`` expresses chain-commit latency in units of mean
-    per-command service times (2 hops per node each way).
-
-    Solves for the fixed point T where the bottleneck node saturates.
+    Solves for the fixed point T where the bottleneck node of
+    :func:`craq_station_demands` saturates.
     """
-    k = n_nodes
-
-    def station_demands(T: float) -> List[float]:
-        lam_w_hot = T * f_write * skew_p
-        C = commit_latency_cmds * (2.0 * k) / alpha
-        dirty = 1.0 - math.exp(-lam_w_hot * C)
-        f_read = 1.0 - f_write
-        # every node: writes cost 4 msgs (fwd recv/send + ack recv/send);
-        # head also takes client recv + reply send
-        demands = []
-        for i in range(k):
-            d = f_write * 4.0
-            if i == 0:
-                d += f_write * 2.0
-            # reads: uniformly addressed; clean served locally (2 msgs)
-            p_fwd = skew_p * dirty
-            d += f_read * ((1.0 - p_fwd) * 2.0 / k + p_fwd * (1.0 / k))
-            if i == k - 1:  # tail: all forwarded reads + its own share
-                d += f_read * p_fwd * 2.0
-            demands.append(d)
-        return demands
-
-    # fixed-point iteration on T
     T = alpha / 4.0
     for _ in range(200):
-        d = max(station_demands(T))
+        d = max(craq_station_demands(n_nodes, skew_p, f_write, alpha, T,
+                                     commit_latency_cmds))
         T_new = alpha / d
         if abs(T_new - T) < 1e-6 * alpha:
             T = T_new

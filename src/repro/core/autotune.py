@@ -29,6 +29,7 @@ import numpy as np
 
 from .analytical import DeploymentModel, multipaxos_model
 from .sweep import CompiledSweep, Config, SweepSpec, compile_sweep, model_for
+from .transient import Event
 
 
 @dataclass(frozen=True)
@@ -53,6 +54,8 @@ class AutotuneResult:
     budget: int
     n_candidates: int          # feasible configs enumerated
     trace: Tuple[TraceStep, ...]  # greedy bottleneck-migration staircase
+    objective: str = "peak"    # what "best" ranked by
+    best_p99: Optional[float] = None  # seed-mean p99 s (fault objectives)
 
 
 def candidate_spec(budget: int, f: int = 1, batching: bool = False,
@@ -193,9 +196,23 @@ def bottleneck_trace(budget: int, alpha: float, f_write: float = 1.0,
 
 def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
              batching: bool = False,
-             compiled: Optional[CompiledSweep] = None) -> AutotuneResult:
-    """Max-throughput deployment for a machine budget, plus the greedy
+             compiled: Optional[CompiledSweep] = None,
+             objective: str = "peak",
+             fault_events: Optional[List[Event]] = None,
+             shortlist: int = 16,
+             transient_kwargs: Optional[Dict] = None) -> AutotuneResult:
+    """Best deployment for a machine budget, plus the greedy
     bottleneck-migration trace that explains it.
+
+    ``objective`` selects the figure of merit:
+
+    * ``"peak"`` (default) - steady-state bottleneck-law throughput;
+    * ``"p99_under_failover"`` - tail latency under faults: the top
+      ``shortlist`` feasible configs by peak are re-ranked by seed-mean
+      p99 latency from the batched transient engine running
+      ``fault_events`` (default: leader crash over the middle of the run)
+      - deployments that merely tie on steady-state mean separate here by
+      how deep and long their failover stall is.
 
     ``compiled`` lets callers reuse an already-compiled candidate space
     (e.g. to autotune many workload mixes against one batch)."""
@@ -220,7 +237,23 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
                      -np.inf)
     # argmax; ties break toward fewer machines
     order = np.lexsort((compiled.machines, -peaks))
-    best_i = int(order[0])
+    best_p99: Optional[float] = None
+    if objective == "peak":
+        best_i = int(order[0])
+    elif objective == "p99_under_failover":
+        # re-rank the peak shortlist by tail latency under the fault script
+        # (one batched transient call over shortlist x seeds lanes)
+        short = [int(i) for i in order[:shortlist] if np.isfinite(peaks[i])]
+        sub = compiled.subset(short)
+        events = fault_events or [Event("leader", 0.4, 0.6, 1e9)]
+        res = sub.transient(alpha, f_write=f_write, events=events,
+                            **(transient_kwargs or {}))
+        p99 = res.seed_mean_p99()
+        pick = int(np.lexsort((sub.machines, p99))[0])
+        best_i = short[pick]
+        best_p99 = float(p99[pick])
+    else:
+        raise ValueError(f"unknown objective {objective!r}")
     best_config = dict(compiled.configs[best_i])
     best_model = compiled.models[best_i]
     best_peak = float(peaks[best_i])
@@ -230,9 +263,11 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
     trace = tuple(bottleneck_trace(budget, alpha, f_write=f_write, f=f,
                                    batching=batching))
     # the greedy climber can escape a coarsened exhaustive grid (it has no
-    # cartesian-product blowup to worry about) - keep whichever won
+    # cartesian-product blowup to worry about) - keep whichever won.  Only
+    # meaningful when peak is the objective being maximized.
     last = trace[-1]
-    if last.config is not None and last.peak > best_peak:
+    if objective == "peak" and last.config is not None \
+            and last.peak > best_peak:
         best_config = dict(last.config)
         best_model = model_for(best_config)
         best_peak, best_bn, machines = (last.peak, last.bottleneck,
@@ -246,4 +281,6 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
         budget=budget,
         n_candidates=int(feasible.sum()),
         trace=trace,
+        objective=objective,
+        best_p99=best_p99,
     )

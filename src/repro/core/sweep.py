@@ -38,6 +38,7 @@ from .analytical import (
     stack_demands,
 )
 from .simulator import fluid_throughput_from_demands, mva_curves_from_demands
+from .transient import Event, TransientResult, build_schedule, simulate_transient
 
 Config = Dict[str, int]
 
@@ -130,6 +131,36 @@ class CompiledSweep:
         """Batched fluid cross-check, [M] cmds/s in one jitted call."""
         return fluid_throughput_from_demands(self.demands(f_write) / alpha,
                                              n_clients, sim_time, n_steps)
+
+    def transient(self, alpha: float, n_clients: int = 64,
+                  f_write: float = 1.0,
+                  events: Optional[Sequence[Event]] = None,
+                  n_steps: int = 4000, **kwargs) -> TransientResult:
+        """Batched stochastic transient run over every config in ONE jitted
+        call: (M deployments x S seeds) lanes of the scan engine, with
+        optional scripted :class:`~repro.core.transient.Event`s (leader
+        crash, scale-up, ...) applied to the demand tensor mid-run.
+        Returns per-window throughput traces and latency p50/p99 - the
+        figure-of-merit surface the autotuner ranks by under faults."""
+        base = self.demands(f_write) / alpha
+        if events:
+            sched, bounds = build_schedule(base, events, n_steps)
+        else:
+            sched, bounds = base[None, :, :], None
+        return simulate_transient(sched, bounds, n_clients=n_clients,
+                                  n_steps=n_steps, **kwargs)
+
+    def subset(self, indices: Sequence[int]) -> "CompiledSweep":
+        """Row-select a sweep (e.g. a shortlist for the expensive
+        transient objective); carries configs when present."""
+        idx = list(int(i) for i in indices)
+        return CompiledSweep(
+            models=tuple(self.models[i] for i in idx),
+            demand_write=self.demand_write[idx],
+            demand_read=self.demand_read[idx],
+            machines=self.machines[idx],
+            configs=(tuple(self.configs[i] for i in idx)
+                     if self.configs is not None else None))
 
     def top_k(self, alpha: float, k: int = 5, f_write: float = 1.0,
               budget: Optional[int] = None) -> List[Tuple[int, float, str]]:

@@ -1,0 +1,469 @@
+"""Batched stochastic transient simulator of the closed queueing network.
+
+The paper's headline claims are about *dynamics*, not just steady state:
+throughput dips and recovers when a leader fails (section 5), degrades
+under skew for CRAQ but not for the compartmentalized deployment
+(Fig. 33), and ramps as batches fill (Figs. 30-31).  :mod:`simulator`
+models steady state (MVA / fluid / DES); this module simulates the same
+closed network *through time*, stochastically, entirely inside one jitted
+``jax.lax.scan`` - ``vmap``-ed over (deployment x seed), so a whole
+transient figure (dozens of deployments, many seeds) is one compiled call
+instead of a Python event loop per cell.
+
+Model
+-----
+N closed-loop clients, one outstanding command each (the paper's
+benchmark harness).  Each station is a FIFO queue with per-command service
+demand ``d_k`` seconds (exponential with mean ``d_k``, or deterministic);
+commands traverse the active stations in slot order and re-enter on
+completion (zero think time).  With exponential service this is exactly
+the product-form network MVA solves, so steady-state throughput must
+match :func:`repro.core.simulator.mva_curve` - ``tests/test_transient.py``
+pins the agreement.
+
+Time advances in fixed steps ``dt`` (default: slowest station's demand /
+``oversample``).  Remaining service is tracked in *work* units (fractions
+of one service) and drained at ``dt / d_k(t)`` per step, so
+**time-varying demands act on in-flight work**: a crashed station
+(demand x ~1e9) freezes mid-service and resumes after recovery, a scaled
+station drains faster from the next step on.  Completion residuals carry
+into the next service, so a saturated server's long-run rate is exactly
+``1/d_k`` with no discretization bias.
+
+Scripted events
+---------------
+Demands are piecewise-constant in time: ``demands[w]`` holds during steps
+``step_bounds[w] <= i < step_bounds[w+1]``.  Builders:
+
+* :func:`failover_schedule` - multiply one station's demand inside a
+  window (``factor=CRASH`` freezes it: leader crash + failover);
+* :func:`scale_schedule` - step a station's demand at one instant
+  (component scale-up/down, bottleneck migration in time);
+* :func:`schedule_from_demands` - arbitrary per-window demand matrices
+  (batch fill ramps, time-varying skew via the CRAQ demand mapping).
+
+Outputs: per-step completion traces (-> per-window throughput), post-
+warmup mean throughput, and latency mean / p50 / p99 from a log-spaced
+in-scan histogram.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .analytical import STATION_INDEX, DeploymentModel
+from .simulator import demand_vector
+
+#: Demand multiplier that effectively freezes a station (a crash: in-flight
+#: service stalls and resumes on recovery when the multiplier lifts).
+CRASH = 1e9
+
+
+# ---------------------------------------------------------------------------
+# Scripted-event schedules (piecewise-constant demand tensors)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Event:
+    """Multiply ``station``'s demand by ``factor`` during a run fraction.
+
+    ``station`` is a canonical :data:`repro.core.analytical.STATION_ORDER`
+    name or a raw column index; ``start``/``stop`` are fractions of the
+    simulated horizon in [0, 1]."""
+
+    station: Union[str, int]
+    start: float
+    stop: float
+    factor: float
+
+    def column(self) -> int:
+        if isinstance(self.station, str):
+            return STATION_INDEX[self.station]
+        return int(self.station)
+
+
+def _as_base(demands: np.ndarray) -> np.ndarray:
+    """Coerce [K] / [M, K] / [W, M, K] to a [M, K] window-0 base."""
+    d = np.asarray(demands, dtype=np.float64)
+    if d.ndim == 1:
+        d = d[None, :]
+    if d.ndim == 3:
+        d = d[0]
+    return d
+
+
+def build_schedule(base: np.ndarray, events: Sequence[Event], n_steps: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Lower events over a [M, K] base matrix to (demands[W, M, K],
+    step_bounds[W]).  Overlapping events compose multiplicatively."""
+    base = _as_base(base)
+    cuts = {0}
+    spans = []
+    for e in events:
+        lo = int(round(np.clip(e.start, 0.0, 1.0) * n_steps))
+        hi = int(round(np.clip(e.stop, 0.0, 1.0) * n_steps))
+        spans.append((lo, hi, e.column(), e.factor))
+        cuts.update(c for c in (lo, hi) if 0 <= c < n_steps)
+    bounds = np.array(sorted(cuts), dtype=np.int32)
+    out = np.repeat(base[None, :, :], len(bounds), axis=0)
+    for w, b in enumerate(bounds):
+        for lo, hi, col, factor in spans:
+            if lo <= b < hi:
+                out[w, :, col] *= factor
+    return out, bounds
+
+
+def failover_schedule(base: np.ndarray, station: Union[str, int] = "leader",
+                      start: float = 0.35, stop: float = 0.6,
+                      factor: float = CRASH, n_steps: int = 4000
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Crash ``station`` during [start, stop) of the run, then recover."""
+    return build_schedule(base, [Event(station, start, stop, factor)], n_steps)
+
+
+def scale_schedule(base: np.ndarray, station: Union[str, int], at: float,
+                   factor: float, n_steps: int = 4000
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Step ``station``'s demand by ``factor`` at run fraction ``at`` for
+    the rest of the run (factor < 1 = scale-up, > 1 = scale-down)."""
+    return build_schedule(base, [Event(station, at, 1.0, factor)], n_steps)
+
+
+def schedule_from_demands(windows: Sequence[np.ndarray],
+                          starts: Sequence[float], n_steps: int
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Arbitrary piecewise schedule: ``windows[w]`` ([M, K] or [K]) holds
+    from run fraction ``starts[w]`` (first must be 0) to the next start.
+    This is how batch-fill ramps and time-varying skew are scripted: build
+    each window's demand matrix from the analytical model and stack."""
+    if len(windows) != len(starts):
+        raise ValueError(f"{len(windows)} windows vs {len(starts)} starts")
+    if starts[0] != 0.0:
+        raise ValueError("first window must start at fraction 0")
+    if list(starts) != sorted(starts):
+        raise ValueError("window starts must be nondecreasing")
+    mats = [_as_base(w) for w in windows]
+    if len({m.shape for m in mats}) != 1:
+        raise ValueError("all windows must share the same [M, K] shape")
+    bounds = np.array([int(round(s * n_steps)) for s in starts],
+                      dtype=np.int32)
+    return np.stack(mats), bounds
+
+
+# ---------------------------------------------------------------------------
+# The jitted scan engine
+# ---------------------------------------------------------------------------
+
+
+def _routing(active: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-deployment tandem routing over active stations.
+
+    active: [M, K] bool.  Returns (entry[M], next_station[M, K]) where
+    ``next_station[m, k] == K`` marks command completion after station k
+    (inactive rows point to K too; they never host commands)."""
+    m, k = active.shape
+    entry = np.zeros(m, dtype=np.int32)
+    nxt = np.full((m, k), k, dtype=np.int32)
+    for i in range(m):
+        idx = np.nonzero(active[i])[0]
+        if idx.size == 0:
+            raise ValueError(f"deployment row {i} has no active station")
+        entry[i] = idx[0]
+        nxt[i, idx[:-1]] = idx[1:]
+    return entry, nxt
+
+
+def _one_lane(demands_w, step_bounds, dt, entry, nxt, bin_edges, key,
+              n_clients: int, n_steps: int, warmup_steps: int,
+              n_bins: int, exponential: bool):
+    """Simulate one (deployment, seed) lane.  demands_w: [W, K] seconds;
+    dt/entry scalars; nxt: [K]; bin_edges: [n_bins + 1]."""
+    k = demands_w.shape[1]
+    if exponential:
+        draws = jax.random.exponential(key, (n_steps + 1, k))
+    else:
+        draws = jnp.ones((n_steps + 1, k))
+
+    finishes_at = nxt == k                     # station k completes commands
+    arrive_at = jnp.where(finishes_at, entry, nxt)   # [K] ring routing
+
+    stage0 = jnp.full((n_clients,), entry, dtype=jnp.int32)
+    rank0 = jnp.arange(n_clients, dtype=jnp.int32)
+    enter0 = jnp.zeros((n_clients,))
+    q0 = jnp.zeros((k,), jnp.int32).at[entry].add(n_clients)
+    work0 = jnp.zeros((k,)).at[entry].set(draws[0, entry])
+
+    def step(state, xs):
+        stage, rank, enter_t, q, work, done, lat_sum, hist = state
+        i, draw_i = xs
+        t_end = (i + 1).astype(work.dtype) * dt
+
+        w = jnp.searchsorted(step_bounds, i, side="right") - 1
+        d_now = demands_w[w]                                   # [K]
+        # a window may zero an active station's demand ("free" service):
+        # drain instantly rather than stall (still capped at one
+        # completion per step, i.e. 1/dt per station)
+        rate = jnp.where(d_now > 0, dt / jnp.maximum(d_now, 1e-30), 1e30)
+
+        busy = q > 0
+        work = jnp.where(busy, work - rate, work)
+        complete = busy & (work <= 0.0)                        # [K]
+
+        dep_here = complete[stage]                             # [N]
+        moving = dep_here & (rank == 0)
+        fin = moving & finishes_at[stage]                      # command done
+        lat = t_end - enter_t
+        rec = fin & (i >= warmup_steps)
+        done = done + jnp.sum(rec)
+        lat_sum = lat_sum + jnp.sum(jnp.where(rec, lat, 0.0))
+        bins = jnp.clip(jnp.searchsorted(bin_edges, lat) - 1, 0, n_bins - 1)
+        hist = hist.at[bins].add(rec.astype(jnp.int32))
+
+        dest = arrive_at[stage]                                # [N]
+        q_dep = q - complete.astype(q.dtype)
+        stage_new = jnp.where(moving, dest, stage)
+        enter_new = jnp.where(fin, t_end, enter_t)
+        rank_new = jnp.where(
+            moving, q_dep[dest],
+            rank - (dep_here & (rank > 0)).astype(rank.dtype))
+        arrivals = (jnp.zeros_like(q)
+                    .at[arrive_at].add(complete.astype(q.dtype)))
+        q_new = q_dep + arrivals
+        # new head enters service: carry the completion residual on a busy
+        # server (unbiased long-run rate), fresh draw on an idle one
+        fresh = (complete & (q_new > 0)) | (~busy & (arrivals > 0))
+        work_new = jnp.where(
+            fresh, draw_i + jnp.where(complete, work, 0.0), work)
+
+        out_flow = jnp.sum(fin).astype(jnp.int32)
+        return ((stage_new, rank_new, enter_new, q_new, work_new,
+                 done, lat_sum, hist), out_flow)
+
+    state0 = (stage0, rank0, enter0, q0, work0,
+              jnp.asarray(0, jnp.int32), jnp.asarray(0.0),
+              jnp.zeros((n_bins,), jnp.int32))
+    xs = (jnp.arange(n_steps, dtype=jnp.int32), draws[1:])
+    (_, _, _, _, _, done, lat_sum, hist), flows = jax.lax.scan(
+        step, state0, xs)
+    return flows, done, lat_sum, hist
+
+
+@partial(jax.jit, static_argnames=("n_clients", "n_steps", "warmup_steps",
+                                   "n_bins", "exponential"))
+def _transient_batch(demands_w, step_bounds, dt, entry, nxt, bin_edges,
+                     seeds, n_clients: int, n_steps: int, warmup_steps: int,
+                     n_bins: int, exponential: bool):
+    """vmap lanes: deployments (M) x seeds (S), one compiled call.
+
+    demands_w: [W, M, K]; dt/entry: [M]; nxt: [M, K];
+    bin_edges: [M, n_bins+1]; seeds: [S] int32.
+    Returns (flows[M, S, n_steps] int32, done[M, S], lat_sum[M, S],
+    hist[M, S, n_bins])."""
+    keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.key(0), s))(seeds)
+
+    def per_deployment(d_w, dt_m, entry_m, nxt_m, edges_m):
+        return jax.vmap(
+            lambda key: _one_lane(d_w, step_bounds, dt_m, entry_m, nxt_m,
+                                  edges_m, key, n_clients, n_steps,
+                                  warmup_steps, n_bins, exponential))(keys)
+
+    return jax.vmap(per_deployment, in_axes=(1, 0, 0, 0, 0))(
+        demands_w, dt, entry, nxt, bin_edges)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TransientResult:
+    """Batched transient run over M deployments x S seeds.
+
+    ``flows[m, s, i]`` is completions during step i (dt[m] seconds each);
+    scalar summaries are post-warmup.  Latency quantiles come from a
+    log-spaced histogram (``hist``/``bin_edges``), so they are exact to
+    within one bin width (~11% with the default 96 bins per 4 decades)."""
+
+    dt: np.ndarray                 # [M] seconds per step
+    flows: np.ndarray              # [M, S, n_steps] completions per step
+    throughput: np.ndarray         # [M, S] post-warmup cmds/s
+    latency_mean: np.ndarray       # [M, S] seconds
+    latency_p50: np.ndarray        # [M, S] seconds
+    latency_p99: np.ndarray        # [M, S] seconds
+    completed: np.ndarray          # [M, S] post-warmup completions
+    hist: np.ndarray               # [M, S, n_bins]
+    bin_edges: np.ndarray          # [M, n_bins + 1]
+    n_steps: int
+    warmup_steps: int
+
+    def throughput_trace(self, n_windows: int = 40
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-window throughput: (t_centers[M, n_windows] seconds,
+        X[M, S, n_windows] cmds/s).  The transient figure primitive."""
+        per = self.n_steps // n_windows
+        used = per * n_windows
+        f = self.flows[:, :, :used].reshape(
+            self.flows.shape[0], self.flows.shape[1], n_windows, per)
+        x = f.sum(axis=3) / (per * self.dt[:, None, None])
+        centers = (np.arange(n_windows) + 0.5) * per * self.dt[:, None]
+        return centers, x
+
+    def window_throughput(self, step_bounds: np.ndarray,
+                          settle: float = 0.3) -> np.ndarray:
+        """Mean throughput per *schedule* window, [M, S, W] cmds/s.
+
+        The first ``settle`` fraction of each window is excluded: after a
+        demand change (or the cold start) the trace spends a few round
+        trips draining backlog queued under the previous window's
+        demands, and that transition would otherwise bias the window mean
+        - reported per-window rates could even exceed the window's own
+        bottleneck-law cap."""
+        bounds = [int(b) for b in step_bounds] + [self.n_steps]
+        out = []
+        for w in range(len(bounds) - 1):
+            lo, hi = bounds[w], bounds[w + 1]
+            lo = min(lo + int((hi - lo) * settle), max(hi - 1, lo))
+            out.append(self.flows[:, :, lo:hi].sum(axis=2)
+                       / ((hi - lo) * self.dt[:, None]))
+        return np.stack(out, axis=-1)
+
+    def seed_mean_throughput(self) -> np.ndarray:
+        """[M] post-warmup throughput averaged over seeds."""
+        return self.throughput.mean(axis=1)
+
+    def seed_mean_p99(self) -> np.ndarray:
+        """[M] p99 latency averaged over seeds."""
+        return self.latency_p99.mean(axis=1)
+
+
+def _quantile_from_hist(hist: np.ndarray, edges: np.ndarray, q: float
+                        ) -> np.ndarray:
+    """hist: [M, S, B]; edges: [M, B+1] (log-spaced).  Returns [M, S]
+    latency at quantile q, log-interpolated inside the landing bin."""
+    cum = hist.cumsum(axis=2)
+    total = np.maximum(cum[:, :, -1], 1)
+    target = q * total
+    idx = np.minimum((cum < target[:, :, None]).sum(axis=2),
+                     hist.shape[2] - 1)
+    lo = np.take_along_axis(np.broadcast_to(edges[:, None, :-1], hist.shape),
+                            idx[:, :, None], axis=2)[:, :, 0]
+    hi = np.take_along_axis(np.broadcast_to(edges[:, None, 1:], hist.shape),
+                            idx[:, :, None], axis=2)[:, :, 0]
+    below = np.where(idx > 0,
+                     np.take_along_axis(cum, np.maximum(idx - 1, 0)[:, :, None],
+                                        axis=2)[:, :, 0], 0)
+    inbin = np.maximum(
+        np.take_along_axis(hist, idx[:, :, None], axis=2)[:, :, 0], 1)
+    frac = np.clip((target - below) / inbin, 0.0, 1.0)
+    return lo * (hi / lo) ** frac
+
+
+def simulate_transient(
+    demands: np.ndarray,
+    step_bounds: Optional[np.ndarray] = None,
+    *,
+    n_clients: int = 64,
+    seeds: Union[int, Sequence[int]] = 8,
+    n_steps: int = 4000,
+    dt: Optional[Union[float, np.ndarray]] = None,
+    oversample: float = 4.0,
+    exponential_service: bool = True,
+    warmup_frac: float = 0.25,
+    n_bins: int = 96,
+) -> TransientResult:
+    """Run the batched engine over a (possibly scheduled) demand tensor.
+
+    demands: [W, M, K] piecewise windows (or [M, K] / [K] for a single
+    steady window), in seconds per command per station - i.e. already
+    divided by alpha, like :func:`simulator.mva_curves_from_demands`.
+    ``step_bounds[w]`` is the first step of window w (from
+    :func:`build_schedule` et al.); omitted = one window from step 0.
+    ``seeds`` is a count or explicit list; every (deployment, seed) lane
+    runs in ONE jitted call.  ``dt`` defaults per deployment to the
+    window-0 bottleneck demand / ``oversample``."""
+    d = np.asarray(demands, dtype=np.float64)
+    if d.ndim == 1:
+        d = d[None, :]
+    if d.ndim == 2:
+        d = d[None, :, :]
+    if step_bounds is None:
+        step_bounds = np.zeros((d.shape[0],), dtype=np.int32)
+    step_bounds = np.asarray(step_bounds, dtype=np.int32)
+    if step_bounds.shape[0] != d.shape[0]:
+        raise ValueError(f"{d.shape[0]} windows vs "
+                         f"{step_bounds.shape[0]} step bounds")
+    if step_bounds[0] != 0:
+        raise ValueError("step_bounds[0] must be 0 (the first window "
+                         "covers the start of the run)")
+    if np.any(np.diff(step_bounds) < 0):
+        raise ValueError("step_bounds must be nondecreasing")
+    _, m, k = d.shape
+
+    active = d.max(axis=0) > 0                     # [M, K]
+    entry, nxt = _routing(active)
+    if dt is None:
+        # resolve the *fastest* window's bottleneck: each station completes
+        # at most once per step, so dt must stay below the smallest
+        # per-window bottleneck demand (crash windows only raise the max,
+        # so they never shrink dt)
+        dt_arr = d.max(axis=2).min(axis=0) / oversample
+    else:
+        dt_arr = np.broadcast_to(np.asarray(dt, dtype=np.float64), (m,))
+    if np.any(dt_arr <= 0):
+        raise ValueError("dt must be positive (zero-demand window 0 row?)")
+
+    # log-spaced latency bins: from half the fastest window's zero-load
+    # round-trip up to the simulated horizon (the longest observable wait)
+    rtt = np.maximum((d * active[None]).sum(axis=2).min(axis=0), 1e-12)
+    lo = rtt * 0.5
+    hi = np.maximum(n_steps * dt_arr, lo * 10.0)
+    ratio = (hi / lo) ** (1.0 / n_bins)
+    bin_edges = lo[:, None] * ratio[:, None] ** np.arange(n_bins + 1)[None, :]
+
+    if isinstance(seeds, (int, np.integer)):
+        seeds_arr = np.arange(int(seeds), dtype=np.int32)
+    else:
+        seeds_arr = np.asarray(list(seeds), dtype=np.int32)
+    warmup_steps = int(n_steps * warmup_frac)
+
+    flows, done, lat_sum, hist = _transient_batch(
+        jnp.asarray(d), jnp.asarray(step_bounds), jnp.asarray(dt_arr),
+        jnp.asarray(entry), jnp.asarray(nxt), jnp.asarray(bin_edges),
+        jnp.asarray(seeds_arr), n_clients=n_clients, n_steps=n_steps,
+        warmup_steps=warmup_steps, n_bins=n_bins,
+        exponential=bool(exponential_service))
+    flows = np.asarray(flows)
+    done = np.asarray(done)
+    lat_sum = np.asarray(lat_sum)
+    hist = np.asarray(hist)
+
+    measured = dt_arr[:, None] * (n_steps - warmup_steps)
+    return TransientResult(
+        dt=dt_arr,
+        flows=flows,
+        throughput=done / measured,
+        latency_mean=lat_sum / np.maximum(done, 1),
+        latency_p50=_quantile_from_hist(hist, bin_edges, 0.50),
+        latency_p99=_quantile_from_hist(hist, bin_edges, 0.99),
+        completed=done,
+        hist=hist,
+        bin_edges=bin_edges,
+        n_steps=n_steps,
+        warmup_steps=warmup_steps,
+    )
+
+
+def transient_throughput(model: DeploymentModel, alpha: float,
+                         n_clients: int = 64, f_write: float = 1.0,
+                         **kwargs) -> TransientResult:
+    """Single-deployment convenience wrapper (M = 1): the transient
+    engine's answer to :func:`simulator.mva_curve`'s steady state."""
+    d = demand_vector(model, f_write) / alpha
+    return simulate_transient(d[None, :], n_clients=n_clients, **kwargs)

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.optim.compression import dequantize_int8, quantize_int8
+from repro.runtime.compat import shard_map
 
 
 def hierarchical_allreduce(x: jnp.ndarray, *, in_pod_axis: str = "data",
@@ -71,8 +72,8 @@ def make_hierarchical_grad_mean(mesh: Mesh, compress_cross_pod: bool = False):
 
     spec = P()  # gradients replicated per rank inside the region
     return jax.jit(
-        jax.shard_map(grad_mean, mesh=mesh, in_specs=spec, out_specs=spec,
-                      check_vma=False))
+        shard_map(grad_mean, mesh=mesh, in_specs=spec, out_specs=spec,
+                  check_vma=False))
 
 
 # ---------------------------------------------------------------------------
@@ -129,7 +130,7 @@ def make_distributed_flash_decode(mesh: Mesh, seq_axis: str = "model",
         return combine_partials(m, l, acc, seq_axis)
 
     b = batch_axes
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(P(b, None, None), P(b, seq_axis, None, None),
                   P(b, seq_axis, None, None), P(b)),

@@ -1,0 +1,31 @@
+"""JAX version-compatibility shims for the runtime substrate.
+
+The only shim today is :func:`shard_map`.  The API moved twice upstream:
+
+* ``jax.experimental.shard_map.shard_map(f, mesh, in_specs, out_specs,
+  check_rep=...)`` - the home on JAX <= 0.4.x / 0.5.x (0.4.37 is what this
+  container ships);
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+  - the stable top-level home from 0.6, where ``check_rep`` was renamed
+  ``check_vma``.
+
+Callers here always use the new keyword (``check_vma``); the shim forwards
+it as ``check_rep`` when falling back to the experimental entry point.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True) -> Any:
+    """``jax.shard_map`` on new JAX, ``jax.experimental.shard_map`` otherwise."""
+    if _NEW_SHARD_MAP is not None:
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _old
+    return _old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma)

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.moe import MoEConfig
+from repro.runtime.compat import shard_map
 
 
 def _local_dispatch(x, top_w, top_i, n_experts: int, capacity: int):
@@ -121,8 +122,8 @@ def make_moe_a2a(mesh: Mesh, cfg: MoEConfig, mlp_kind: str, d_model: int,
         # formulation failed to express (it gathered instead)
         tok_spec = P((dp_axis, axis), None, None)
         in_specs = (specs_for(params), tok_spec)
-        return jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=(tok_spec, P()),
-                             check_vma=False)(params, x)
+        return shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=(tok_spec, P()),
+                         check_vma=False)(params, x)
 
     return fn

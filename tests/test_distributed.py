@@ -30,6 +30,7 @@ def run_sub(body: str, n_devices: int = 4, timeout: int = 480) -> str:
 def test_hierarchical_allreduce_matches_psum():
     run_sub("""
     from jax.sharding import PartitionSpec as P
+    from repro.runtime.compat import shard_map
     from repro.runtime.collectives import hierarchical_allreduce
     mesh = jax.make_mesh((2, 2), ("pod", "data"))
     x = jnp.arange(32, dtype=jnp.float32).reshape(4, 8)
@@ -37,9 +38,9 @@ def test_hierarchical_allreduce_matches_psum():
     def mean_all(v):
         return hierarchical_allreduce(v, in_pod_axis="data",
                                       cross_pod_axis="pod")
-    f = jax.jit(jax.shard_map(mean_all, mesh=mesh,
-                              in_specs=P(), out_specs=P(),
-                              check_vma=False))
+    f = jax.jit(shard_map(mean_all, mesh=mesh,
+                          in_specs=P(), out_specs=P(),
+                          check_vma=False))
     out = f(x)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-6)
     print("OK")
@@ -49,6 +50,7 @@ def test_hierarchical_allreduce_matches_psum():
 def test_hierarchical_allreduce_compressed_close():
     run_sub("""
     from jax.sharding import PartitionSpec as P
+    from repro.runtime.compat import shard_map
     from repro.runtime.collectives import hierarchical_allreduce
     mesh = jax.make_mesh((2, 2), ("pod", "data"))
     key = jax.random.key(0)
@@ -58,8 +60,8 @@ def test_hierarchical_allreduce_compressed_close():
         return hierarchical_allreduce(v, in_pod_axis="data",
                                       cross_pod_axis="pod",
                                       compress_cross_pod=True)
-    f = jax.jit(jax.shard_map(mean_c, mesh=mesh, in_specs=P(),
-                              out_specs=P(), check_vma=False))
+    f = jax.jit(shard_map(mean_c, mesh=mesh, in_specs=P(),
+                          out_specs=P(), check_vma=False))
     out = f(x)
     err = float(jnp.abs(out - x).max())
     scale = float(jnp.abs(x).max()) / 127.0

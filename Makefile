@@ -4,16 +4,17 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke docs-links check ci
+.PHONY: test bench-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
 
-# cheap figures + the sweep and transient engines: exercises the batched
-# MVA kernel, the stochastic scan engine (failover benchmark), the
+# cheap figures + the sweep, transient and variant engines: exercises the
+# batched MVA kernel, the stochastic scan engine (failover benchmark), the
+# protocol-variant plane (BENCH_SMOKE=1 shrinks its transients), the
 # autotuner and the CSV harness end to end in about a minute
 bench-smoke:
-	$(PYTHON) -m benchmarks.run --only fig29,fig30_31,failover,sweep
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only fig29,fig30_31,failover,sweep,variants
 
 # every src/repro/... (and benchmarks/, examples/, tests/) path mentioned
 # in README.md / docs/*.md / benchmarks/README.md must exist
@@ -26,3 +27,9 @@ ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
 	JAX_PLATFORMS=cpu $(MAKE) test
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
+
+# stray bytecode trees under src/repro/** (configs, kernels, models, optim,
+# runtime, ...) can shadow edited modules after refactors - scrub them all
+clean:
+	find src benchmarks tests examples scripts -type d -name __pycache__ -prune -exec rm -rf {} + 2>/dev/null || true
+	rm -rf .pytest_cache

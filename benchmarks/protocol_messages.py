@@ -1,13 +1,99 @@
-"""Message-count microbenchmark on the *real* protocol cluster - validates
+"""Message-count microbenchmark on the *real* protocol clusters - validates
 the demand tables every analytical figure is built from.
 
 Paper section 3.1: vanilla leader handles >= 3f+4 messages per command;
 the compartmentalized leader handles 2.  Grid section 3.2: each acceptor
 sees 1/w of writes.  These counts are measured, not modelled.
+
+The variant clusters are cross-checked the same way: the measured
+per-station messages per command of a Mencius deployment (section 6) and
+an S-Paxos deployment (section 7) are compared against
+``repro.core.analytical.mencius_model`` / ``spaxos_model`` - the demand
+tables ``benchmarks/variants.py`` and the mixed-variant sweep axis are
+built from.  ``tests/test_variant_models.py`` pins the same parity with
+tolerances.
 """
 import time
 
-from repro.core import full_compartmentalized, vanilla_multipaxos
+from repro.core import (
+    MenciusDeployment,
+    SPaxosDeployment,
+    full_compartmentalized,
+    mencius_model,
+    spaxos_model,
+    vanilla_multipaxos,
+)
+
+
+def station_msgs_per_cmd(nodes, n_cmds):
+    """Measured (sent + received) messages per command per server."""
+    total = sum(n.msgs_sent + n.msgs_received for n in nodes)
+    return total / n_cmds / len(nodes)
+
+
+def measure_mencius(n_ops_per_client=20):
+    """Per-station msgs/cmd of a balanced 3-leader Mencius run, plus the
+    matching model demands.  Two model quirks of the correctness plane are
+    fed back into the table so the comparison is apples-to-apples:
+    ``announce_interval=1`` (the plane announces its frontier on every
+    command, where the paper's protocol piggybacks it) and the *measured*
+    noop-skip parameters (lagging leaders range-fill vacant slots; the
+    effective ``skip_fraction`` and per-range amortization ``skip_batch``
+    are read off the run instead of assumed)."""
+    dep = MenciusDeployment(n_leaders=3, n_proxy_leaders=4, grid=(2, 2),
+                            n_replicas=3, n_clients=3)
+    for c in dep.clients:
+        c.run_ops([("put", f"{c.addr}-k{i}", i) for i in range(n_ops_per_client)])
+    dep.net.run(max_steps=500_000)
+    assert all(c.done for c in dep.clients)
+    n_cmds = 3 * n_ops_per_client
+    measured = {
+        "leader": station_msgs_per_cmd(dep.leaders, n_cmds),
+        "proxy": station_msgs_per_cmd(dep.proxies, n_cmds),
+        "acceptor": station_msgs_per_cmd(dep.acceptors, n_cmds),
+        "replica": station_msgs_per_cmd(dep.replicas, n_cmds),
+    }
+    n_ranges = dep.total_skips()
+    n_slots = max(r.executed_upto for r in dep.replicas) + 1
+    n_noops = max(n_slots - n_cmds, 0)
+    kwargs = dict(n_leaders=3, n_proxy_leaders=4, grid_rows=2, grid_cols=2,
+                  n_replicas=3, announce_interval=1.0)
+    if n_noops and n_ranges:
+        kwargs.update(skip_fraction=n_noops / n_slots,
+                      skip_batch=n_noops / n_ranges)
+    model = mencius_model(**kwargs).demands(f_write=1.0)
+    return measured, model, n_ranges, n_noops
+
+
+def measure_spaxos(n_ops_per_client=20):
+    """Per-station msgs/cmd of an S-Paxos run vs the model demands; the
+    leader must measure exactly 2 (ProposeId in, Phase2a(id) out) - it
+    never touches payloads."""
+    dep = SPaxosDeployment(n_clients=2)  # d=2, s=3, p=3, grid 2x2, n=3
+    for c in dep.clients:
+        c.run_ops([("put", f"{c.addr}-k{i}", i) for i in range(n_ops_per_client)])
+    dep.net.run(max_steps=500_000)
+    assert all(c.done for c in dep.clients)
+    n_cmds = 2 * n_ops_per_client
+    measured = {
+        "disseminator": station_msgs_per_cmd(dep.disseminators, n_cmds),
+        "stabilizer": station_msgs_per_cmd(dep.stabilizers, n_cmds),
+        "leader": station_msgs_per_cmd([dep.leader], n_cmds),
+        "proxy": station_msgs_per_cmd(dep.proxies, n_cmds),
+        "acceptor": station_msgs_per_cmd(dep.acceptors, n_cmds),
+        "replica": station_msgs_per_cmd(dep.replicas, n_cmds),
+    }
+    model = spaxos_model(n_disseminators=2, n_stabilizers=3,
+                         n_proxy_leaders=3, grid_rows=2, grid_cols=2,
+                         n_replicas=3).demands(f_write=1.0)
+    return measured, model
+
+
+def _parity_row(name, measured, model, note=""):
+    pairs = ", ".join(
+        f"{k} {measured[k]:.2f}/{model[k]:.2f}" for k in measured)
+    return (name, 0.0, f"measured/modelled msgs per cmd per server: {pairs}"
+            + (f" ({note})" if note else ""))
 
 
 def run():
@@ -49,4 +135,17 @@ def run():
     rows.append(("msgcount/read_acceptor_msgs", 0.0,
                  f"{read_msgs:.2f} acceptor msgs/read (one row x Preread+Ack "
                  f"= 2*w/row-count expected ~3)"))
+
+    # variant clusters vs their demand tables (sections 6-7)
+    t1 = time.perf_counter()
+    m_measured, m_model, skips, noops = measure_mencius()
+    s_measured, s_model = measure_spaxos()
+    wall_us = (time.perf_counter() - t1) * 1e6
+    rows.append(("msgcount/variant_cluster_run", wall_us,
+                 "mencius + spaxos end-to-end"))
+    rows.append(_parity_row("msgcount/mencius_parity", m_measured, m_model,
+                            note=f"{skips} skip ranges / {noops} noop slots "
+                                 f"fed back into the table's skip knobs"))
+    rows.append(_parity_row("msgcount/spaxos_parity", s_measured, s_model,
+                            note="leader exactly 2: ids only, no payloads"))
     return rows

@@ -8,6 +8,7 @@
   failover  transient dynamics: leader crash, mid-run scale-up, batch fill
   msgcount  measured per-role message counts (validates the demand tables)
   sweep  whole-surface config sweep + budget autotune (one jitted call)
+  variants  protocol-variant plane: Mencius + S-Paxos vs baselines (Figs. 24-28)
   roofline  dry-run roofline readout (40 cells x 2 meshes)
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -28,6 +29,7 @@ from . import (
     roofline_report,
     skew,
     sweep,
+    variants,
     weak_reads,
 )
 
@@ -40,6 +42,7 @@ MODULES = [
     ("failover", failover),
     ("msgcount", protocol_messages),
     ("sweep", sweep),
+    ("variants", variants),
     ("roofline", roofline_report),
 ]
 
@@ -67,6 +70,13 @@ benchmarks (label: paper target, typical runtime on one CPU core):
   sweep     section 9  "how should a system be compartmentalized":
             300-config surface in one jitted call + budget-19
             autotune for three workload mixes                   (~5 s)
+  variants  sections 6-7, Figs. 24-28  "a technique, not a protocol":
+            compartmentalized Mencius / S-Paxos beat their vanilla
+            baselines; a mixed-variant grid (6 protocols) lowered to
+            one demand tensor and solved by one batched MVA call;
+            Mencius skip-storm + S-Paxos payload-ramp transients;
+            cross-variant budget-19 autotune (which protocol wins?)
+            BENCH_SMOKE=1 shrinks the transients                (~10 s)
   roofline  dry-run roofline readout, needs results/dryrun/     (<1 s)
 
 run a subset:    python -m benchmarks.run --only fig28,sweep

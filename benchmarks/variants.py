@@ -1,0 +1,153 @@
+"""Protocol-variant performance plane (paper sections 6-7, Figs. 24-28).
+
+The paper's closing argument is that compartmentalization is "a technique,
+not a protocol", demonstrated by compartmentalizing Mencius (Figs. 24-26)
+and S-Paxos (Fig. 27) and comparing everything on one axis (Fig. 28).
+This module reproduces that argument on the batched performance plane:
+
+* fig25/fig27 - compartmentalized Mencius / S-Paxos vs their vanilla
+  baselines (each must win);
+* fig26 - compartmentalized Mencius throughput vs the number of leaders
+  (sequencing splits 1/m, then the bottleneck migrates off the leaders);
+* fig28 - a mixed-variant grid (MultiPaxos, compartmentalized, Mencius,
+  S-Paxos, CRAQ, unreplicated) lowered to ONE demand tensor and evaluated
+  by ONE batched jitted MVA call - no per-variant Python loops;
+* transient scripts - a Mencius slow-leader skip storm and an S-Paxos
+  payload-size ramp on the stochastic scan engine;
+* autotune - which protocol wins at a fixed machine budget?
+
+``BENCH_SMOKE=1`` (set by ``make bench-smoke``) shrinks the transient
+step counts/seeds so the module finishes in a few seconds.
+"""
+import os
+import time
+
+from repro.core import (
+    SweepSpec,
+    autotune_variants,
+    calibrate_alpha,
+    compile_models,
+    compile_sweep,
+    mencius_model,
+    mencius_skip_storm_schedule,
+    simulate_transient,
+    spaxos_model,
+    spaxos_payload_ramp_schedule,
+    vanilla_mencius_model,
+    vanilla_spaxos_model,
+)
+
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+N_STEPS = 1200 if SMOKE else 4000
+SEEDS = 2 if SMOKE else 6
+
+
+def run():
+    alpha = calibrate_alpha()
+    rows = []
+
+    # -- Figs. 25 / 27: compartmentalized vs vanilla, per variant ----------
+    pairs = (
+        ("fig25_mencius", vanilla_mencius_model(f=1),
+         mencius_model(n_leaders=3, n_proxy_leaders=10, grid_rows=2,
+                       grid_cols=2, n_replicas=4)),
+        ("fig27_spaxos", vanilla_spaxos_model(f=1),
+         spaxos_model(n_disseminators=4, n_stabilizers=5, n_proxy_leaders=4,
+                      grid_rows=2, grid_cols=2, n_replicas=3)),
+    )
+    compiled = compile_models([m for _, v, c in pairs for m in (v, c)])
+    peaks = compiled.peak_throughput(alpha)
+    bns = compiled.bottlenecks()
+    for i, (label, vanilla, comp) in enumerate(pairs):
+        pv, pc = peaks[2 * i], peaks[2 * i + 1]
+        rows.append((f"variants/{label}_vs_vanilla", 0.0,
+                     f"vanilla {pv:.0f} (bn={bns[2*i]}) -> compartmentalized "
+                     f"{pc:.0f} cmd/s (bn={bns[2*i+1]}), {pc/pv:.1f}x"))
+
+    # -- Fig. 26: Mencius scaling with leaders -----------------------------
+    m_axis = (1, 2, 3, 4, 5)
+    ms = [mencius_model(n_leaders=m, n_proxy_leaders=10, grid_rows=2,
+                        grid_cols=2, n_replicas=4) for m in m_axis]
+    mp = compile_models(ms).peak_throughput(alpha)
+    rows.append(("variants/fig26_mencius_leader_scaling", 0.0,
+                 f"m={list(m_axis)} -> {[f'{x:.0f}' for x in mp]} cmd/s "
+                 f"(sequencing splits 1/m, then replicas bottleneck)"))
+
+    # -- Fig. 28 as a mixed-variant surface: ONE compile, ONE jitted MVA ---
+    spec = SweepSpec(
+        variants=("multipaxos", "compartmentalized", "mencius", "spaxos",
+                  "craq", "unreplicated"),
+        n_proxy_leaders=(3, 5, 10),
+        grids=((3, 1), (2, 2)),
+        n_replicas=(2, 4, 6),
+        n_leaders=(2, 3),
+        n_disseminators=(2, 4),
+        n_stabilizers=(3,),
+        chain_nodes=(3, 5),
+    )
+    t0 = time.perf_counter()
+    grid = compile_sweep(spec)
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t1 = time.perf_counter()
+    _, X, _ = grid.mva(alpha, n_clients_max=128)
+    mva_us = (time.perf_counter() - t1) * 1e6
+    gp = grid.peak_throughput(alpha)
+    by_variant = {}
+    for i, cfg in enumerate(grid.configs):
+        v = cfg.get("variant", "compartmentalized")
+        if v not in by_variant or gp[i] > gp[by_variant[v]]:
+            by_variant[v] = i
+    best = ", ".join(f"{v}={gp[i]:.0f}" for v, i in sorted(by_variant.items()))
+    rows.append((f"variants/fig28_mixed_grid_{len(grid)}_configs", compile_us,
+                 f"{len(spec.variants)} variants in one demand tensor"))
+    rows.append((f"variants/fig28_mva_one_call_{X.shape[0]}x{X.shape[1]}",
+                 mva_us, f"best peak per variant (cmd/s): {best}"))
+
+    # -- Mencius slow-leader skip storm (transient) ------------------------
+    # storm windows need many saturated round trips per client before the
+    # per-window mean reflects the storm's own bottleneck, hence the longer
+    # run and the smaller closed-loop population
+    storm_steps = 4000 if SMOKE else 12000
+    kw = dict(n_proxy_leaders=10, grid_rows=2, grid_cols=2, n_replicas=4)
+    t2 = time.perf_counter()
+    sched, bounds = mencius_skip_storm_schedule(
+        alpha, n_leaders=3, skip_fraction=0.5, slow_factor=3.0,
+        n_steps=storm_steps, **kw)
+    res = simulate_transient(sched, bounds, n_clients=32, seeds=SEEDS,
+                             n_steps=storm_steps)
+    us = (time.perf_counter() - t2) * 1e6
+    # [healthy, storm, healed] per-window means, transition drain excluded
+    wt = res.window_throughput(bounds, settle=0.4).mean(axis=1)[0]
+    rows.append(("variants/mencius_skip_storm", us,
+                 f"healthy {wt[0]:.0f} -> storm {wt[1]:.0f} -> healed "
+                 f"{wt[2]:.0f} cmd/s ({wt[1]/wt[0]:.2f}x during the noop "
+                 f"flood, lagging leader 3x slower)"))
+
+    # -- S-Paxos payload-size ramp (transient) -----------------------------
+    factors = (1.0, 2.0, 4.0, 8.0)
+    t3 = time.perf_counter()
+    sched, bounds = spaxos_payload_ramp_schedule(
+        alpha, payload_factors=factors, n_steps=N_STEPS,
+        n_disseminators=4, n_stabilizers=5, n_proxy_leaders=4,
+        grid_rows=2, grid_cols=2, n_replicas=3)
+    res = simulate_transient(sched, bounds, n_clients=64, seeds=SEEDS,
+                             n_steps=N_STEPS)
+    us = (time.perf_counter() - t3) * 1e6
+    wt = res.window_throughput(bounds).mean(axis=1)[0]
+    leader_d = [spaxos_model(payload_factor=p).demands()["leader"]
+                for p in factors]
+    rows.append(("variants/spaxos_payload_ramp", us,
+                 f"P={list(factors)} -> {[f'{x:.0f}' for x in wt]} cmd/s; "
+                 f"leader demand flat at {leader_d[0]:g} msgs/cmd for every "
+                 f"payload (ids only - the protocol's point)"))
+
+    # -- which protocol wins at budget B? ----------------------------------
+    t4 = time.perf_counter()
+    res_v = autotune_variants(budget=19, alpha=alpha, f_write=1.0)
+    us = (time.perf_counter() - t4) * 1e6
+    per = "; ".join(f"{v}: {c.peak:.0f} @ {c.machines}m (bn={c.bottleneck})"
+                    for v, c in sorted(res_v.per_variant.items()))
+    rows.append(("variants/autotune_budget19_write_only", us,
+                 f"winner {res_v.winner.variant} {res_v.winner.peak:.0f} "
+                 f"cmd/s ({res_v.n_candidates} candidates); {per}"))
+    return rows

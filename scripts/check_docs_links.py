@@ -1,11 +1,19 @@
 #!/usr/bin/env python3
-"""Verify that every repo path referenced in the docs actually exists.
+"""Verify that every repo reference in the docs points at something real.
 
-Scans README.md, docs/*.md and benchmarks/README.md for references like
-``src/repro/core/sweep.py``, ``benchmarks/run.py``, ``examples/...`` or
-``tests/...`` (with or without an inline-code backtick wrapper) and fails
-with a listing of any that point at nothing.  Keeps the paper->code map
-honest as the tree is refactored.
+Three checks over README.md, docs/*.md and benchmarks/README.md:
+
+* **paths** - references like ``src/repro/core/sweep.py``,
+  ``benchmarks/run.py``, ``examples/...`` or ``tests/...`` (with or
+  without an inline-code backtick wrapper) must exist on disk;
+* **figures** - every ``Fig. N`` / ``Figs. N-M`` citation must stay
+  inside the source paper's figure range (1..MAX_PAPER_FIG), so a typo'd
+  figure number can't survive a docs pass;
+* **benchmark labels** - every ``--only <labels>`` invocation quoted in
+  the docs must name labels that ``benchmarks/run.py`` actually
+  registers in ``MODULES``.
+
+Keeps the paper->code map honest as the tree is refactored.
 """
 from __future__ import annotations
 
@@ -24,10 +32,24 @@ PATH_RE = re.compile(
     r"(?:/[A-Za-z0-9_.-]+)*"
     r"(?:\.(?:py|md|sh|txt|json)|/))")
 
+# the source paper's figures run 1..33 (Fig. 33 is the skew study)
+MAX_PAPER_FIG = 33
+FIG_RE = re.compile(r"Figs?\.\s*(\d+)(?:[a-z])?(?:\s*[-/]\s*(\d+))?")
+
+ONLY_RE = re.compile(r"--only\s+([a-z0-9_,]+)")
+MODULE_LABEL_RE = re.compile(r'^\s*\("([a-z0-9_]+)",', re.MULTILINE)
+
+
+def registered_labels() -> set[str]:
+    """Benchmark labels from the MODULES table in benchmarks/run.py."""
+    text = (ROOT / "benchmarks" / "run.py").read_text()
+    return set(MODULE_LABEL_RE.findall(text))
+
 
 def main() -> int:
     missing: list[tuple[Path, str]] = []
     checked = 0
+    labels = registered_labels()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -37,6 +59,20 @@ def main() -> int:
             checked += 1
             if not (ROOT / ref.rstrip("/")).exists():
                 missing.append((doc.relative_to(ROOT), ref))
+        for m in FIG_RE.finditer(text):
+            for num in filter(None, m.groups()):
+                checked += 1
+                if not 1 <= int(num) <= MAX_PAPER_FIG:
+                    missing.append((doc.relative_to(ROOT),
+                                    f"{m.group(0)} (paper has figures "
+                                    f"1..{MAX_PAPER_FIG})"))
+        for m in ONLY_RE.finditer(text):
+            for label in m.group(1).split(","):
+                checked += 1
+                if label and label not in labels:
+                    missing.append((doc.relative_to(ROOT),
+                                    f"--only {label} (not a benchmarks/run.py "
+                                    f"MODULES label)"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

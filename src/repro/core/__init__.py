@@ -7,25 +7,43 @@ Correctness plane (deterministic, message-level):
   + linearizability checkers.
 
 Performance plane (JAX, calibrated on the paper's anchors):
-  analytical.* demand tables + bottleneck law, simulator.mva_curve /
-  fluid_throughput / des_throughput.
+  analytical.* demand tables + bottleneck law for every protocol variant
+  (MultiPaxos, Mencius, S-Paxos, CRAQ, unreplicated - the VARIANT_MODELS
+  registry), simulator.mva_curve / fluid_throughput / des_throughput,
+  transient.* scripted dynamics, sweep.* batched mixed-variant surfaces,
+  autotune.* budget search (autotune_variants across protocols).
 """
 from .analytical import (
     STATION_ORDER,
+    VARIANT_MODELS,
     DeploymentModel,
     Station,
     ablation_steps,
     calibrate_alpha,
     compartmentalized_model,
+    craq_chain_model,
     craq_model,
     craq_station_demands,
+    mencius_model,
     mixed_workload_speedup,
     multipaxos_model,
     read_scalability_law,
+    spaxos_model,
     stack_demands,
     unreplicated_model,
+    vanilla_mencius_model,
+    vanilla_spaxos_model,
 )
-from .autotune import AutotuneResult, TraceStep, autotune, bottleneck_trace
+from .autotune import (
+    AutotuneResult,
+    TraceStep,
+    VariantAutotuneResult,
+    VariantChoice,
+    autotune,
+    autotune_variants,
+    bottleneck_trace,
+    variant_candidate_configs,
+)
 from .cluster import Network, Node
 from .craq import CraqDeployment
 from .history import History, Operation
@@ -58,6 +76,8 @@ from .sweep import (
     SweepSpec,
     compile_models,
     compile_sweep,
+    config_variant,
+    model_for,
 )
 from .transient import (
     CRASH,
@@ -65,9 +85,11 @@ from .transient import (
     TransientResult,
     build_schedule,
     failover_schedule,
+    mencius_skip_storm_schedule,
     scale_schedule,
     schedule_from_demands,
     simulate_transient,
+    spaxos_payload_ramp_schedule,
     transient_throughput,
 )
 from .statemachine import AppendLog, KVStore, Register, make_state_machine
@@ -79,15 +101,19 @@ __all__ = [
     "KVStore", "MajorityQuorums", "MenciusDeployment", "Network", "Node",
     "Operation", "Register", "SPaxosDeployment", "STATION_ORDER", "Station",
     "SweepSpec", "TraceStep", "TransientResult", "UnreplicatedStateMachine",
-    "ablation_steps", "autotune", "bottleneck_trace", "build_schedule",
-    "calibrate_alpha", "check_linearizable", "check_register_reads",
-    "check_slot_order", "compartmentalized_model", "compile_models",
-    "compile_sweep", "craq_model", "craq_station_demands", "des_throughput",
+    "VARIANT_MODELS", "VariantAutotuneResult", "VariantChoice",
+    "ablation_steps", "autotune", "autotune_variants", "bottleneck_trace",
+    "build_schedule", "calibrate_alpha", "check_linearizable",
+    "check_register_reads", "check_slot_order", "compartmentalized_model",
+    "compile_models", "compile_sweep", "config_variant", "craq_chain_model",
+    "craq_model", "craq_station_demands", "des_throughput",
     "failover_schedule", "fluid_throughput", "fluid_throughput_batch",
-    "full_compartmentalized", "make_state_machine", "mixed_workload_speedup",
+    "full_compartmentalized", "make_state_machine", "mencius_model",
+    "mencius_skip_storm_schedule", "mixed_workload_speedup", "model_for",
     "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command", "read_scalability_law",
     "scale_schedule", "schedule_from_demands", "simulate_transient",
-    "stack_demands", "transient_throughput", "unreplicated_model",
-    "vanilla_multipaxos",
+    "spaxos_model", "spaxos_payload_ramp_schedule", "stack_demands",
+    "transient_throughput", "unreplicated_model", "vanilla_mencius_model",
+    "vanilla_multipaxos", "vanilla_spaxos_model", "variant_candidate_configs",
 ]

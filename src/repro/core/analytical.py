@@ -14,9 +14,27 @@ are applied one by one.
 
 The model is deliberately parameter-light: ``alpha`` is calibrated on a
 single anchor (vanilla MultiPaxos = 25k cmd/s, paper Fig. 28) and everything
-else is *predicted*.  ``EXPERIMENTS.md`` reports predictions vs the paper's
-measurements, including where the structural model underpredicts (it captures
-message counts, not JVM/Netty implementation effects).
+else is *predicted*.  ``benchmarks/protocol_messages.py`` measures the
+per-role message counts on the real protocol clusters and
+``docs/PERFORMANCE_MODEL.md`` documents where the structural model
+under/over-predicts (it captures message counts, not JVM/Netty
+implementation effects).
+
+Demand tables cover every protocol the paper compartmentalizes, keyed by
+the ``VARIANT_MODELS`` registry the sweep axis dispatches on:
+
+* MultiPaxos (:func:`multipaxos_model` / :func:`compartmentalized_model`),
+* Mencius (:func:`vanilla_mencius_model` / :func:`mencius_model`,
+  paper section 6, Figs. 24-26),
+* S-Paxos (:func:`vanilla_spaxos_model` / :func:`spaxos_model`,
+  paper section 7, Fig. 27),
+* CRAQ (:func:`craq_chain_model` for the sweep axis, :func:`craq_model`
+  for the dirty-read fixed point behind Fig. 33),
+* unreplicated (:func:`unreplicated_model`).
+
+All of them lower to the same canonical :data:`STATION_ORDER` slots, so a
+mixed-variant grid batches into one dense demand tensor
+(:func:`stack_demands` -> :mod:`repro.core.sweep`).
 
 Also here: the paper's closed-form read-scalability law (section 8.3)
 
@@ -42,9 +60,13 @@ PAPER_UNREPLICATED_BATCHED = 1_000_000.0
 # station name any deployment factory emits maps to one fixed slot, so a
 # sweep over heterogeneous deployments lowers to a dense [n_configs, K]
 # tensor whose per-row argmax is directly decodable back to a component name.
+# The tail slots belong to the protocol variants: S-Paxos' data path
+# (disseminator/stabilizer) and CRAQ's chain positions (head/chain/tail).
+# Append-only: existing column indices are load-bearing for compiled sweeps.
 STATION_ORDER: Tuple[str, ...] = (
     "batcher", "leader", "proxy", "acceptor", "replica", "unbatcher",
-    "server", "follower",
+    "server", "follower", "disseminator", "stabilizer", "head", "chain",
+    "tail",
 )
 STATION_INDEX: Dict[str, int] = {name: i for i, name in enumerate(STATION_ORDER)}
 
@@ -227,6 +249,239 @@ def unreplicated_model(batch_size: int = 1, n_batchers: int = 0,
                                 (1 / B + 1) / n_unbatchers))
     return DeploymentModel(name=f"unreplicated(B={batch_size})",
                            stations=tuple(stations))
+
+
+# ---------------------------------------------------------------------------
+# Protocol-variant demand tables (paper sections 6-7: "compartmentalization
+# is a technique, not a protocol")
+# ---------------------------------------------------------------------------
+
+
+def _skip_terms(skip_fraction: float, skip_batch: float) -> float:
+    """Noop slots per real command, amortized by the ``Phase2aRange``
+    batching factor.  ``skip_fraction`` is the fraction of *log slots*
+    filled with noops by lagging leaders; each range message covers
+    ``skip_batch`` noop slots, so the chosen path pays an extra
+    ``skip_fraction / (1 - skip_fraction) / skip_batch`` messages per
+    real command."""
+    if not 0.0 <= skip_fraction < 1.0:
+        raise ValueError(f"skip_fraction must be in [0, 1): {skip_fraction}")
+    if skip_fraction == 0.0:
+        return 0.0
+    return skip_fraction / (1.0 - skip_fraction) / skip_batch
+
+
+def mencius_model(
+    n_leaders: int = 3,
+    f: int = 1,
+    n_proxy_leaders: int = 10,
+    grid_rows: int = 2,
+    grid_cols: int = 2,
+    n_replicas: int = 4,
+    announce_interval: Optional[float] = None,
+    skip_fraction: float = 0.0,
+    skip_batch: float = 10.0,
+) -> DeploymentModel:
+    """Compartmentalized Mencius (paper section 6, Figs. 24-26).
+
+    Round-robin log partitioning: leader ``i`` of ``n_leaders`` owns slots
+    ``{k : k % m == i}``, so per-leader sequencing demand is ``2/m`` (client
+    recv + proxy send for the owned 1/m of commands).  Everything past the
+    leaders is the MultiPaxos compartmentalization: proxy leaders, an
+    ``r x w`` acceptor grid, scaled replicas, leaderless reads.
+
+    Two overhead knobs model Mencius' slot-coordination cost:
+
+    * ``announce_interval`` - a leader advertises its frontier to the other
+      ``m - 1`` leaders every that many owned commands (``None`` = the
+      paper's protocol, where frontiers piggyback on phase-2 traffic at no
+      extra message cost; the correctness plane announces every command,
+      i.e. ``announce_interval=1`` - the parity benchmark uses that).
+    * ``skip_fraction`` - fraction of log slots noop-filled by lagging
+      leaders ("skips").  Ranges amortize ``skip_batch`` noops per message
+      but still traverse proxy -> grid -> replicas, so a skip storm loads
+      the whole chosen path (the transient script
+      :func:`repro.core.transient.mencius_skip_storm_schedule`).
+    """
+    m = n_leaders
+    if m < 1:
+        raise ValueError(f"n_leaders must be >= 1: {m}")
+    r, w = grid_rows, grid_cols
+    col = r  # write-quorum size (one grid column)
+    noop = _skip_terms(skip_fraction, skip_batch)
+    announce = 0.0
+    if announce_interval:
+        # per system command: the owner sends m-1 frontier messages every
+        # announce_interval owned commands and every peer receives one
+        announce = 2.0 * (m - 1) / announce_interval
+
+    leader_w = (2.0 + announce + noop) / m
+    proxy_per_cmd = (1 + 2 * col + n_replicas) * (1.0 + noop)
+    stations = (
+        Station("leader", m, leader_w, 0.0),
+        Station("proxy", max(n_proxy_leaders, 1),
+                proxy_per_cmd / max(n_proxy_leaders, 1), 0.0),
+        Station("acceptor", r * w, 2.0 / w * (1.0 + noop), 2.0 / r),
+        Station("replica", n_replicas,
+                (1.0 + noop) + 1.0 / n_replicas, 2.0 / n_replicas),
+    )
+    return DeploymentModel(
+        name=(f"mencius(m={m},p={n_proxy_leaders},grid={r}x{w},"
+              f"n={n_replicas})"),
+        stations=stations,
+    )
+
+
+def vanilla_mencius_model(
+    f: int = 1,
+    announce_interval: Optional[float] = None,
+    skip_fraction: float = 0.0,
+    skip_batch: float = 10.0,
+) -> DeploymentModel:
+    """Vanilla Mencius (paper Fig. 25 baseline): ``2f + 1`` servers, each
+    simultaneously one of the round-robin leaders, an acceptor and a
+    replica.  Load is symmetric, so a server's demand is the balanced mix
+    of the MultiPaxos leader cost (for its owned ``1/m`` of commands) and
+    the follower cost (for the rest), plus the announce/skip overheads of
+    :func:`mencius_model`.  No leaderless read path: reads are writes."""
+    m = 2 * f + 1
+    quorum = f + 1
+    contacted = quorum  # thrifty
+    leader_cost = 1 + contacted + quorum + m + 1.0 / m
+    follower_cost = 2.0 * contacted / m + 1 + 1.0 / m
+    noop = _skip_terms(skip_fraction, skip_batch)
+    announce = 0.0
+    if announce_interval:
+        announce = 2.0 * (m - 1) / announce_interval
+    per_server = ((leader_cost + (m - 1) * follower_cost) * (1.0 + noop)
+                  + announce) / m
+    return DeploymentModel(
+        name=f"vanilla_mencius(f={f})",
+        stations=(Station("server", m, per_server, per_server),),
+    )
+
+
+def spaxos_model(
+    n_disseminators: int = 2,
+    n_stabilizers: int = 3,
+    f: int = 1,
+    n_proxy_leaders: int = 3,
+    grid_rows: int = 2,
+    grid_cols: int = 2,
+    n_replicas: int = 3,
+    payload_factor: float = 1.0,
+) -> DeploymentModel:
+    """Compartmentalized S-Paxos (paper section 7, Fig. 27).
+
+    Data/control split: disseminators persist command *payloads* on every
+    stabilizer (majority ack), the MultiPaxos leader orders only small
+    command *ids*, and the chosen id is resolved back to a payload by one
+    stabilizer which broadcasts it to the replicas.  ``payload_factor``
+    scales the cost of payload-carrying messages relative to id-sized ones
+    (1.0 = payloads as cheap as ids); the leader's demand is **payload
+    independent** - the paper's point - which the transient script
+    :func:`repro.core.transient.spaxos_payload_ramp_schedule` turns into a
+    dynamics figure.
+
+    Write path (matches ``src/repro/core/spaxos.py`` message for message):
+    client -> disseminator -> all stabilizers (ack) -> leader(id) ->
+    proxy -> grid column -> Chosen(id) -> one stabilizer -> replicas.
+    Reads are the standard leaderless path (grid row + one replica)."""
+    P = float(payload_factor)
+    r, w = grid_rows, grid_cols
+    col = r
+    d = max(n_disseminators, 1)
+    s = max(n_stabilizers, 1)
+    stations = (
+        # recv payload + bcast payload to stabilizers; small: acks + ProposeId
+        Station("disseminator", d, (P * (1 + s) + s + 1) / d, 0.0),
+        # every stabilizer: payload recv + ack; 1/s of commands: Chosen(id)
+        # recv + payload bcast to replicas
+        Station("stabilizer", s, (P + 1) + (1 + P * n_replicas) / s, 0.0),
+        Station("leader", 1, 2.0, 0.0),       # ProposeId recv + Phase2a(id)
+        Station("proxy", max(n_proxy_leaders, 1),
+                (1 + 2 * col + 1) / max(n_proxy_leaders, 1), 0.0),
+        Station("acceptor", r * w, 2.0 / w, 2.0 / r),
+        Station("replica", n_replicas, P + 1.0 / n_replicas,
+                (1.0 + P) / n_replicas),
+    )
+    return DeploymentModel(
+        name=(f"spaxos(d={n_disseminators},s={n_stabilizers},"
+              f"p={n_proxy_leaders},grid={r}x{w},n={n_replicas},P={P:g})"),
+        stations=stations,
+    )
+
+
+def vanilla_spaxos_model(f: int = 1,
+                         payload_factor: float = 1.0) -> DeploymentModel:
+    """Vanilla S-Paxos (paper Fig. 27 baseline): ``2f + 1`` servers, each
+    disseminator + stabilizer + acceptor + replica, with a single Paxos
+    leader (on server 0) ordering ids.  The dissemination/stabilization
+    roles are balanced round-robin; the leader role is not - its id-sized
+    phase-2 fan-out sits on top of the shared data-path work, which is why
+    vanilla S-Paxos still bottlenecks on one machine."""
+    n = 2 * f + 1
+    P = float(payload_factor)
+    quorum = f + 1
+    contacted = quorum  # thrifty
+    # balanced per-server data-path work, per system command
+    dis_share = (P * (1 + n) + n + 1) / n     # 1/n of commands disseminated
+    stab = P + 1.0                            # every server stores + acks
+    acceptor = 2.0 * contacted / n
+    chosen_recv = 1.0                         # id-sized commit broadcast
+    reply_share = P / n                       # round-robin payload replies
+    shared = dis_share + stab + acceptor + chosen_recv + reply_share
+    leader_extra = 1 + contacted + quorum + n  # ProposeId + p2a/p2b + commit
+    return DeploymentModel(
+        name=f"vanilla_spaxos(f={f},P={P:g})",
+        stations=(
+            Station("leader", 1, shared + leader_extra, shared + leader_extra),
+            Station("follower", n - 1, shared, shared),
+        ),
+    )
+
+
+def craq_chain_model(n_nodes: int = 3, skew_p: float = 0.0,
+                     dirty_fraction: float = 0.0) -> DeploymentModel:
+    """CRAQ as a static chain demand table for the variant sweep axis.
+
+    ``head``/``chain``/``tail`` stations carry the chain positions: writes
+    cost 4 messages on every node (+2 client-facing on the head); reads
+    are served locally unless they hit the hot key (probability
+    ``skew_p``) while it is dirty (``dirty_fraction``), in which case they
+    are forwarded to the tail.  This is :func:`craq_station_demands` with
+    the dirty busy-indicator supplied directly instead of solved as a
+    throughput fixed point - use :func:`craq_model` when you want the
+    fixed point (Fig. 33), this factory when you want CRAQ batched into a
+    mixed-variant sweep."""
+    k = n_nodes
+    if k < 2:
+        raise ValueError(f"a chain needs >= 2 nodes: {k}")
+    p_fwd = skew_p * dirty_fraction
+    read_local = (1.0 - p_fwd) * 2.0 / k + p_fwd * 1.0 / k
+    stations = [Station("head", 1, 6.0, read_local)]
+    if k > 2:
+        stations.append(Station("chain", k - 2, 4.0, read_local))
+    stations.append(Station("tail", 1, 4.0, read_local + p_fwd * 2.0))
+    return DeploymentModel(
+        name=f"craq(k={k},p={skew_p:g},dirty={dirty_fraction:g})",
+        stations=tuple(stations),
+    )
+
+
+#: Variant name -> deployment factory: the registry the sweep axis
+#: (:func:`repro.core.sweep.model_for`) dispatches on.  "compartmentalized"
+#: is the default a variant-less config resolves to.
+VARIANT_MODELS = {
+    "multipaxos": multipaxos_model,
+    "compartmentalized": compartmentalized_model,
+    "mencius": mencius_model,
+    "vanilla_mencius": vanilla_mencius_model,
+    "spaxos": spaxos_model,
+    "vanilla_spaxos": vanilla_spaxos_model,
+    "craq": craq_chain_model,
+    "unreplicated": unreplicated_model,
+}
 
 
 def craq_station_demands(n_nodes: int, skew_p: float, f_write: float,

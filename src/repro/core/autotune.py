@@ -28,7 +28,15 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .analytical import DeploymentModel, multipaxos_model
-from .sweep import CompiledSweep, Config, SweepSpec, compile_sweep, model_for
+from .sweep import (
+    CompiledSweep,
+    Config,
+    SweepSpec,
+    compile_models,
+    compile_sweep,
+    config_variant,
+    model_for,
+)
 from .transient import Event
 
 
@@ -58,6 +66,39 @@ class AutotuneResult:
     best_p99: Optional[float] = None  # seed-mean p99 s (fault objectives)
 
 
+@dataclass(frozen=True)
+class VariantChoice:
+    """Best deployment of one protocol variant under the budget."""
+
+    variant: str
+    config: Config
+    model: DeploymentModel
+    peak: float                # cmds/s (bottleneck law)
+    machines: int
+    bottleneck: str
+
+
+@dataclass(frozen=True)
+class VariantAutotuneResult:
+    """Cross-variant budget search: which protocol wins at budget B?"""
+
+    winner: VariantChoice
+    per_variant: Dict[str, VariantChoice]  # best of each variant
+    budget: int
+    n_candidates: int          # feasible configs across all variants
+
+
+def _grids_under(max_cells: int, f: int) -> List[Tuple[int, int]]:
+    """Acceptor grids with write quorums (columns) of >= f + 1 members and
+    at most ``max_cells`` acceptors, plus the (2f+1, 1) majority column."""
+    grids: List[Tuple[int, int]] = [(2 * f + 1, 1)]
+    for rows in range(f + 1, max(max_cells, f + 1) + 1):
+        for cols in range(1, max(max_cells // rows, 1) + 1):
+            if rows * cols <= max_cells and (rows, cols) not in grids:
+                grids.append((rows, cols))
+    return grids
+
+
 def candidate_spec(budget: int, f: int = 1, batching: bool = False,
                    batch_sizes: Tuple[int, ...] = (10, 50, 100)) -> SweepSpec:
     """The discrete config space under a machine budget.
@@ -73,11 +114,7 @@ def candidate_spec(budget: int, f: int = 1, batching: bool = False,
     max_proxies = max(budget - min_rest, 1)
     max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
     max_grid = budget - (1 + 1 + (f + 1))    # leader + 1 proxy + f+1 replicas
-    grids: List[Tuple[int, int]] = [(2 * f + 1, 1)]
-    for rows in range(f + 1, max(max_grid, f + 1) + 1):
-        for cols in range(1, max(max_grid // rows, 1) + 1):
-            if rows * cols <= max_grid and (rows, cols) not in grids:
-                grids.append((rows, cols))
+    grids = _grids_under(max_grid, f)
     if not batching:
         return SweepSpec(
             f=f,
@@ -284,3 +321,101 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
         objective=objective,
         best_p99=best_p99,
     )
+
+
+# ---------------------------------------------------------------------------
+# Cross-variant search: which protocol wins at budget B?
+# ---------------------------------------------------------------------------
+
+
+def variant_candidate_configs(budget: int, f: int = 1,
+                              variants: Tuple[str, ...] = (
+                                  "compartmentalized", "mencius", "spaxos"),
+                              ) -> List[Config]:
+    """The per-variant discrete config spaces under one machine budget.
+
+    Compartmentalized MultiPaxos gets the full :func:`candidate_spec`
+    space; Mencius and S-Paxos get coarsened knob grids (like the batching
+    branch of :func:`candidate_spec`, their extra axes - leaders,
+    disseminators, stabilizers - would otherwise blow up the cartesian
+    product); the vanilla baselines and CRAQ are single configs.
+    Over-budget combinations are kept (the batched eval masks them by
+    ``machines``) so one compiled space serves nearby budgets too."""
+    min_grid = f + 1
+    max_proxies = max(budget - (1 + min_grid + (f + 1)), 1)
+    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
+    grids = ((2 * f + 1, 1), (f + 1, f + 1))
+    configs: List[Config] = []
+    for variant in variants:
+        if variant == "compartmentalized":
+            configs.extend(candidate_spec(budget, f=f).configs())
+        elif variant == "mencius":
+            spec = SweepSpec(
+                f=f, variants=("mencius",),
+                n_leaders=tuple(range(1, min(budget, 5) + 1)),
+                n_proxy_leaders=tuple(range(1, min(max_proxies, 8) + 1)),
+                grids=grids,
+                n_replicas=tuple(range(f + 1, min(max_replicas, f + 7) + 1)))
+            configs.extend(spec.configs())
+        elif variant == "spaxos":
+            spec = SweepSpec(
+                f=f, variants=("spaxos",),
+                n_disseminators=tuple(range(1, min(budget, 6) + 1)),
+                n_stabilizers=(2 * f + 1, 2 * f + 3),
+                n_proxy_leaders=tuple(range(1, min(max_proxies, 6) + 1)),
+                grids=grids,
+                n_replicas=tuple(range(f + 1, min(max_replicas, f + 5) + 1)))
+            configs.extend(spec.configs())
+        elif variant == "craq":
+            configs.extend(SweepSpec(variants=("craq",), chain_nodes=tuple(
+                range(2, min(budget, 7) + 1))).configs())
+        else:  # single-config baselines
+            configs.extend(SweepSpec(f=f, variants=(variant,)).configs())
+    return configs
+
+
+def autotune_variants(budget: int, alpha: float, f_write: float = 1.0,
+                      f: int = 1,
+                      variants: Tuple[str, ...] = (
+                          "compartmentalized", "mencius", "spaxos"),
+                      compiled: Optional[CompiledSweep] = None,
+                      ) -> VariantAutotuneResult:
+    """Search across protocol variants under one machine budget.
+
+    Lowers every variant's candidate space into ONE compiled demand tensor
+    (heterogeneous station sets pad into the canonical slots), evaluates
+    the whole mixed batch with the vectorized bottleneck law, and reports
+    the best deployment of each variant plus the overall winner - the
+    paper's "a technique, not a protocol" claim as a search result.
+    Ties break toward fewer machines, like :func:`autotune`."""
+    if compiled is None:
+        configs = variant_candidate_configs(budget, f=f, variants=variants)
+        compiled = compile_models([model_for(c) for c in configs], configs)
+    if compiled.configs is None:
+        raise ValueError(
+            "compiled sweep carries no configs - build it with compile_sweep "
+            "(or pass configs to compile_models)")
+    feasible = compiled.machines <= budget
+    peaks = np.where(feasible, compiled.peak_throughput(alpha, f_write),
+                     -np.inf)
+    order = np.lexsort((compiled.machines, -peaks))
+    per_variant: Dict[str, VariantChoice] = {}
+    for i in order:
+        i = int(i)
+        if not np.isfinite(peaks[i]) or peaks[i] <= 0:
+            break  # sorted: everything after is infeasible too
+        v = config_variant(compiled.configs[i])
+        if v not in per_variant:
+            m = compiled.models[i]
+            per_variant[v] = VariantChoice(
+                variant=v, config=dict(compiled.configs[i]), model=m,
+                peak=float(peaks[i]), machines=int(compiled.machines[i]),
+                bottleneck=m.bottleneck(f_write)[0])
+    if not per_variant:
+        raise ValueError(
+            f"no candidate of any variant fits budget {budget} "
+            f"(smallest uses {int(compiled.machines.min())} machines)")
+    winner = max(per_variant.values(), key=lambda c: (c.peak, -c.machines))
+    return VariantAutotuneResult(winner=winner, per_variant=per_variant,
+                                 budget=budget,
+                                 n_candidates=int(feasible.sum()))

@@ -2,26 +2,32 @@
 
 The paper's evaluation is not one deployment but a *surface*: throughput as
 a function of every compartmentalization knob (proxy leaders, acceptor grid
-shape, replicas, batchers, batch size) under every workload mix.  This
-module lowers a grid of configurations into dense demand tensors once
+shape, replicas, batchers, batch size) - and, since the paper's sections 6-7
+argue compartmentalization is "a technique, not a protocol", of the
+**protocol variant** itself - under every workload mix.  This module lowers
+a grid of configurations into dense demand tensors once
 (:func:`compile_sweep`) and then answers whole-surface questions with
-vectorized numpy (bottleneck law) or a single jitted JAX call (full MVA /
-fluid curves) instead of a Python loop over ``DeploymentModel`` objects.
+vectorized numpy (bottleneck law), a single jitted JAX call (full MVA /
+fluid curves), or one batched stochastic scan (``.transient``) instead of a
+Python loop over ``DeploymentModel`` objects.
 
 Pipeline:
 
-    SweepSpec  --configs()-->  knob dicts
+    SweepSpec  --configs()-->  knob dicts (one ``variant`` axis value each)
                --compile_sweep-->  CompiledSweep (demand_write/read [M, K])
                --.peak_throughput/.bottlenecks-->  bottleneck-law surface
                --.mva/.fluid-->  one jitted call, X[M, N] curves
+               --.transient-->  one jitted scan, scripted dynamics
 
 ``K = len(STATION_ORDER)`` is the canonical station vocabulary from
 :mod:`repro.core.analytical`; a config's missing components occupy
 zero-demand slots, which are exactly inert under both MVA and the fluid
-model, so heterogeneous deployments batch together losslessly.
+model, so heterogeneous deployments - MultiPaxos next to Mencius next to
+S-Paxos next to CRAQ - batch together losslessly and one vmapped call
+evaluates the whole mixed-variant grid.
 
 :mod:`repro.core.autotune` builds on this to search the config space under
-a machine budget.
+a machine budget (including across variants: ``autotune_variants``).
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ import numpy as np
 
 from .analytical import (
     STATION_ORDER,
+    VARIANT_MODELS,
     DeploymentModel,
     compartmentalized_model,
     stack_demands,
@@ -45,39 +52,94 @@ Config = Dict[str, int]
 
 @dataclass(frozen=True)
 class SweepSpec:
-    """A cartesian grid over the compartmentalization knobs.
+    """A cartesian grid over the compartmentalization knobs, swept per
+    protocol ``variant``.
 
     Each field lists the values that knob takes; :meth:`configs` yields the
-    product.  ``grids`` entries are ``(rows, cols)`` - write quorums are
-    columns (``rows`` members), read quorums are rows (``cols`` members).
+    per-variant product.  ``grids`` entries are ``(rows, cols)`` - write
+    quorums are columns (``rows`` members), read quorums are rows (``cols``
+    members).
+
+    ``variants`` is the protocol axis (keys of
+    :data:`repro.core.analytical.VARIANT_MODELS`).  Each variant consumes
+    the knobs its demand table understands: ``compartmentalized`` takes the
+    full product including batching; ``mencius`` crosses ``n_leaders`` with
+    proxies/grids/replicas; ``spaxos`` crosses
+    ``n_disseminators`` x ``n_stabilizers`` with proxies/grids/replicas;
+    ``craq`` takes ``chain_nodes``; the vanilla baselines
+    (``multipaxos``, ``vanilla_mencius``, ``vanilla_spaxos``,
+    ``unreplicated``) are single knobless configs.  For backward
+    compatibility, configs of the default ``compartmentalized`` variant
+    omit the ``variant`` key (:func:`model_for` defaults it).
     """
 
     f: int = 1
+    variants: Tuple[str, ...] = ("compartmentalized",)
     n_proxy_leaders: Tuple[int, ...] = (10,)
     grids: Tuple[Tuple[int, int], ...] = ((2, 2),)
     n_replicas: Tuple[int, ...] = (4,)
     batch_sizes: Tuple[int, ...] = (1,)
     n_batchers: Tuple[int, ...] = (0,)
     n_unbatchers: Tuple[int, ...] = (0,)
+    n_leaders: Tuple[int, ...] = (3,)          # mencius
+    n_disseminators: Tuple[int, ...] = (2,)    # spaxos
+    n_stabilizers: Tuple[int, ...] = (3,)      # spaxos
+    chain_nodes: Tuple[int, ...] = (3,)        # craq
 
     def size(self) -> int:
-        return (len(self.n_proxy_leaders) * len(self.grids)
-                * len(self.n_replicas) * len(self.batch_sizes)
-                * len(self.n_batchers) * len(self.n_unbatchers))
+        return sum(1 for _ in self.configs())
 
     def configs(self) -> Iterator[Config]:
-        for p, (r, w), n, B, b, u in itertools.product(
-                self.n_proxy_leaders, self.grids, self.n_replicas,
-                self.batch_sizes, self.n_batchers, self.n_unbatchers):
-            yield dict(f=self.f, n_proxy_leaders=p, grid_rows=r, grid_cols=w,
-                       n_replicas=n, batch_size=B, n_batchers=b,
-                       n_unbatchers=u)
+        for variant in self.variants:
+            if variant not in VARIANT_MODELS:
+                raise ValueError(
+                    f"unknown variant {variant!r}; choose from "
+                    f"{sorted(VARIANT_MODELS)}")
+            if variant == "compartmentalized":
+                for p, (r, w), n, B, b, u in itertools.product(
+                        self.n_proxy_leaders, self.grids, self.n_replicas,
+                        self.batch_sizes, self.n_batchers, self.n_unbatchers):
+                    yield dict(f=self.f, n_proxy_leaders=p, grid_rows=r,
+                               grid_cols=w, n_replicas=n, batch_size=B,
+                               n_batchers=b, n_unbatchers=u)
+            elif variant == "mencius":
+                for m, p, (r, w), n in itertools.product(
+                        self.n_leaders, self.n_proxy_leaders, self.grids,
+                        self.n_replicas):
+                    yield dict(variant=variant, f=self.f, n_leaders=m,
+                               n_proxy_leaders=p, grid_rows=r, grid_cols=w,
+                               n_replicas=n)
+            elif variant == "spaxos":
+                for d, s, p, (r, w), n in itertools.product(
+                        self.n_disseminators, self.n_stabilizers,
+                        self.n_proxy_leaders, self.grids, self.n_replicas):
+                    yield dict(variant=variant, f=self.f, n_disseminators=d,
+                               n_stabilizers=s, n_proxy_leaders=p,
+                               grid_rows=r, grid_cols=w, n_replicas=n)
+            elif variant == "craq":
+                for k in self.chain_nodes:
+                    yield dict(variant=variant, n_nodes=k)
+            elif variant == "unreplicated":
+                yield dict(variant=variant)
+            else:  # multipaxos / vanilla_mencius / vanilla_spaxos
+                yield dict(variant=variant, f=self.f)
 
 
 def model_for(config: Config) -> DeploymentModel:
     """The per-config ``DeploymentModel`` a compiled sweep row corresponds
-    to (the scalar reference path the batched path is tested against)."""
-    return compartmentalized_model(**config)
+    to (the scalar reference path the batched path is tested against).
+    Dispatches on ``config["variant"]`` through
+    :data:`repro.core.analytical.VARIANT_MODELS`; a config without the key
+    is a compartmentalized-MultiPaxos knob dict (the pre-variant format
+    the autotuner's greedy moves still emit)."""
+    cfg = dict(config)
+    variant = cfg.pop("variant", "compartmentalized")
+    return VARIANT_MODELS[variant](**cfg)
+
+
+def config_variant(config: Config) -> str:
+    """The variant a sweep config belongs to (display/grouping helper)."""
+    return str(config.get("variant", "compartmentalized"))
 
 
 @dataclass(frozen=True)

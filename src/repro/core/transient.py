@@ -40,7 +40,11 @@ Demands are piecewise-constant in time: ``demands[w]`` holds during steps
 * :func:`scale_schedule` - step a station's demand at one instant
   (component scale-up/down, bottleneck migration in time);
 * :func:`schedule_from_demands` - arbitrary per-window demand matrices
-  (batch fill ramps, time-varying skew via the CRAQ demand mapping).
+  (batch fill ramps, time-varying skew via the CRAQ demand mapping);
+* :func:`mencius_skip_storm_schedule` / :func:`spaxos_payload_ramp_schedule`
+  - protocol-variant scripts (a lagging Mencius leader noop-flooding the
+  chosen path; S-Paxos payloads growing while the id-ordering leader's
+  demand stays flat).
 
 Outputs: per-step completion traces (-> per-window throughput), post-
 warmup mean throughput, and latency mean / p50 / p99 from a log-spaced
@@ -56,7 +60,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .analytical import STATION_INDEX, DeploymentModel
+from .analytical import (
+    STATION_INDEX,
+    DeploymentModel,
+    mencius_model,
+    spaxos_model,
+)
 from .simulator import demand_vector
 
 #: Demand multiplier that effectively freezes a station (a crash: in-flight
@@ -154,6 +163,76 @@ def schedule_from_demands(windows: Sequence[np.ndarray],
     bounds = np.array([int(round(s * n_steps)) for s in starts],
                       dtype=np.int32)
     return np.stack(mats), bounds
+
+
+def _demand_row(model: DeploymentModel, f_write: float = 1.0) -> np.ndarray:
+    """One model's effective demand scattered into canonical slots, [1, K]."""
+    d_w, d_r, _ = model.demand_slots()
+    row = (f_write * np.asarray(d_w, dtype=np.float64)
+           + (1.0 - f_write) * np.asarray(d_r, dtype=np.float64))
+    return row[None, :]
+
+
+def mencius_skip_storm_schedule(
+    alpha: float,
+    n_leaders: int = 3,
+    start: float = 0.35,
+    stop: float = 0.7,
+    skip_fraction: float = 0.5,
+    slow_factor: float = 3.0,
+    skip_batch: float = 10.0,
+    n_steps: int = 4000,
+    f_write: float = 1.0,
+    **mencius_kwargs,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Mencius slow-leader skip storm (paper section 6 dynamics).
+
+    During ``[start, stop)`` one of the ``n_leaders`` lags: its owned slots
+    are noop-filled at ``skip_fraction`` of the log (the Phase2aRange skip
+    traffic loads proxies, the grid and the replicas per
+    :func:`repro.core.analytical.mencius_model`), and the leader station
+    itself drains ``slow_factor`` x slower (the hot lane is the laggard's).
+    After ``stop`` the leader catches up and demands return to the healthy
+    table.  Returns ``(demands[W, 1, K], step_bounds[W])`` ready for
+    :func:`simulate_transient` (demands already divided by ``alpha``)."""
+    healthy = _demand_row(
+        mencius_model(n_leaders=n_leaders, **mencius_kwargs), f_write) / alpha
+    storm = _demand_row(
+        mencius_model(n_leaders=n_leaders, skip_fraction=skip_fraction,
+                      skip_batch=skip_batch, **mencius_kwargs),
+        f_write) / alpha
+    storm = storm.copy()
+    storm[0, STATION_INDEX["leader"]] *= slow_factor
+    return schedule_from_demands([healthy, storm, healthy],
+                                 [0.0, start, stop], n_steps)
+
+
+def spaxos_payload_ramp_schedule(
+    alpha: float,
+    payload_factors: Sequence[float] = (1.0, 2.0, 4.0, 8.0),
+    n_steps: int = 4000,
+    f_write: float = 1.0,
+    **spaxos_kwargs,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """S-Paxos payload-size ramp (paper section 7 dynamics).
+
+    Each window scales payload-carrying messages by the next
+    ``payload_factors`` entry via
+    :func:`repro.core.analytical.spaxos_model`: the data path
+    (disseminators, stabilizers, replicas) drains slower window by window
+    while the id-ordering leader's demand stays exactly flat - the
+    decoupling the protocol exists for, as dynamics.  Returns
+    ``(demands[W, 1, K], step_bounds[W])`` for
+    :func:`simulate_transient` (demands already divided by ``alpha``)."""
+    if len(payload_factors) < 2:
+        raise ValueError("need >= 2 payload windows to ramp")
+    windows = [
+        _demand_row(spaxos_model(payload_factor=p, **spaxos_kwargs),
+                    f_write) / alpha
+        for p in payload_factors
+    ]
+    starts = [i / len(windows) for i in range(len(windows))]
+    return schedule_from_demands(windows, starts, n_steps)
 
 
 # ---------------------------------------------------------------------------

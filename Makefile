@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke docs-links check ci clean
+.PHONY: test bench-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -16,17 +16,28 @@ test:
 bench-smoke:
 	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only fig29,fig30_31,failover,sweep,variants
 
+# every runnable walkthrough, end to end (BENCH_SMOKE=1 shrinks the
+# heavier ones): quickstart, the ablation story, the workload-first
+# autotuner, replicated serving, elastic training
+examples-smoke:
+	@set -e; for ex in examples/*.py; do \
+		echo "== $$ex"; \
+		BENCH_SMOKE=1 $(PYTHON) $$ex; \
+	done
+
 # every src/repro/... (and benchmarks/, examples/, tests/) path mentioned
-# in README.md / docs/*.md / benchmarks/README.md must exist
+# in README.md / docs/*.md / benchmarks/README.md must exist, and every
+# variant name the docs cite must be registered in repro.core.api
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test bench-smoke
+check: docs-links test bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
 	JAX_PLATFORMS=cpu $(MAKE) test
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
+	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 
 # stray bytecode trees under src/repro/** (configs, kernels, models, optim,
 # runtime, ...) can shadow edited modules after refactors - scrub them all

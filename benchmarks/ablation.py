@@ -18,6 +18,7 @@ from repro.core.analytical import (
     calibrate_alpha,
     compartmentalized_model,
 )
+from repro.core.api import Workload
 from repro.core.autotune import bottleneck_trace
 from repro.core.sweep import compile_models
 
@@ -44,7 +45,7 @@ def run():
 
     # autotuner greedy trace: does the machine walk the same staircase?
     t1 = time.perf_counter()
-    trace = bottleneck_trace(budget=19, alpha=alpha, f_write=1.0)
+    trace = bottleneck_trace(budget=19, alpha=alpha, workload=Workload())
     trace_us = (time.perf_counter() - t1) * 1e6
     path = " -> ".join(f"{t.bottleneck}" for t in trace)
     rows.append(("fig29/autotune_trace", trace_us,

@@ -13,6 +13,9 @@ one jitted ``lax.scan`` call.  Rows:
   leader (compartmentalization as a *runtime* action).
 * batch fill: ramp the batch size 1 -> 100 across windows on the batched
   deployment - throughput ramps accordingly.
+* bursty arrivals: the same deployment under ``Workload(arrival="bursty")``
+  - demand-surge windows inflate p99 while the steady mean barely moves
+  (the workload-first API's arrival hint, lowered to scripted events).
 * autotune: rank budget-19 configs by p99 *under the leader crash* - the
   fault-tolerant pick vs the steady-state-mean pick.
 """
@@ -22,6 +25,7 @@ import numpy as np
 
 from repro.core import (
     Event,
+    Workload,
     autotune,
     calibrate_alpha,
     compartmentalized_model,
@@ -43,7 +47,8 @@ def run():
                                     grid_cols=2, n_replicas=4)
     compiled = compile_models([mp, cmp_u])
     t0 = time.perf_counter()
-    res = compiled.transient(alpha, events=[Event("leader", 0.4, 0.6, 1e9)],
+    res = compiled.transient(alpha, workload=Workload(),
+                             events=[Event("leader", 0.4, 0.6, 1e9)],
                              n_clients=64, seeds=8, n_steps=6000)
     us = (time.perf_counter() - t0) * 1e6
     _, trace = res.throughput_trace(n_windows=30)
@@ -65,7 +70,7 @@ def run():
                                   grid_cols=1, n_replicas=2)  # proxy-bound
     t0 = time.perf_counter()
     res = compile_models([prx]).transient(
-        alpha, events=[Event("proxy", 0.5, 1.0, 0.5)],
+        alpha, workload=Workload(), events=[Event("proxy", 0.5, 1.0, 0.5)],
         n_clients=64, seeds=8, n_steps=6000)
     us = (time.perf_counter() - t0) * 1e6
     _, trace = res.throughput_trace(n_windows=20)
@@ -101,10 +106,26 @@ def run():
                  f"{[f'{x:.0f}' for x in xm]} cmd/s "
                  f"({xm[-1]/xm[0]:.1f}x ramp as batches fill)"))
 
+    # -- bursty arrivals via the Workload API ------------------------------
+    sweep = compile_models([cmp_u])
+    t0 = time.perf_counter()
+    steady = sweep.transient(alpha, workload=Workload(), n_clients=64,
+                             seeds=6, n_steps=4000)
+    bursty = sweep.transient(
+        alpha, workload=Workload(arrival="bursty", burst_factor=4.0,
+                                 burst_fraction=0.25),
+        n_clients=64, seeds=6, n_steps=4000)
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("failover/bursty_arrivals_p99", us,
+                 f"steady p99 {steady.seed_mean_p99()[0]*1e3:.2f} ms -> "
+                 f"bursty p99 {bursty.seed_mean_p99()[0]*1e3:.2f} ms "
+                 f"(4x surges, 25% of the run; one Workload value, "
+                 f"lowered to scripted demand windows)"))
+
     # -- autotune by p99 under faults --------------------------------------
     t0 = time.perf_counter()
-    res_p = autotune(budget=19, alpha=alpha, f_write=1.0)
-    res_f = autotune(budget=19, alpha=alpha, f_write=1.0,
+    res_p = autotune(budget=19, alpha=alpha, workload=Workload())
+    res_f = autotune(budget=19, alpha=alpha, workload=Workload(),
                      objective="p99_under_failover",
                      transient_kwargs=dict(seeds=6, n_steps=2500))
     us = (time.perf_counter() - t0) * 1e6

@@ -23,11 +23,13 @@ from repro.core.analytical import (
     multipaxos_model,
     unreplicated_model,
 )
+from repro.core.api import Workload
 from repro.core.sweep import compile_models
 
 
 def run():
     alpha = calibrate_alpha(PAPER_MULTIPAXOS_UNBATCHED)
+    workload = Workload(name="write_only")  # Fig. 28 is the write-only mix
     mp = multipaxos_model(f=1)
     cmp_u = compartmentalized_model(f=1, n_proxy_leaders=10, grid_rows=2,
                                     grid_cols=2, n_replicas=4)
@@ -40,12 +42,13 @@ def run():
 
     t0 = time.perf_counter()
     compiled = compile_models([mp, cmp_u, unrep, mp_b, cmp_b])
-    _, xs, rs = compiled.mva(alpha, n_clients_max=512)
+    _, xs, rs = compiled.mva(alpha, n_clients_max=512, workload=workload)
     sweep_us = (time.perf_counter() - t0) * 1e6
 
     peaks = xs.max(axis=1)
     t0 = time.perf_counter()
-    res = compiled.transient(alpha, n_clients=128, seeds=8, n_steps=4000)
+    res = compiled.transient(alpha, n_clients=128, workload=workload,
+                             seeds=8, n_steps=4000)
     sim_us = (time.perf_counter() - t0) * 1e6
     sim_x = res.seed_mean_throughput()
 

@@ -18,11 +18,15 @@ import time
 from repro.core import (
     MenciusDeployment,
     SPaxosDeployment,
+    Workload,
     full_compartmentalized,
     mencius_model,
     spaxos_model,
     vanilla_multipaxos,
 )
+
+#: The measured clusters run a put-only op stream, i.e. the write-only mix.
+MEASURED_WORKLOAD = Workload(name="write_only")
 
 
 def station_msgs_per_cmd(nodes, n_cmds):
@@ -61,7 +65,7 @@ def measure_mencius(n_ops_per_client=20):
     if n_noops and n_ranges:
         kwargs.update(skip_fraction=n_noops / n_slots,
                       skip_batch=n_noops / n_ranges)
-    model = mencius_model(**kwargs).demands(f_write=1.0)
+    model = mencius_model(**kwargs).demands(MEASURED_WORKLOAD)
     return measured, model, n_ranges, n_noops
 
 
@@ -85,7 +89,7 @@ def measure_spaxos(n_ops_per_client=20):
     }
     model = spaxos_model(n_disseminators=2, n_stabilizers=3,
                          n_proxy_leaders=3, grid_rows=2, grid_cols=2,
-                         n_replicas=3).demands(f_write=1.0)
+                         n_replicas=3).demands(MEASURED_WORKLOAD)
     return measured, model
 
 

@@ -12,6 +12,7 @@ from repro.core.analytical import (
     calibrate_alpha,
     read_scalability_law,
 )
+from repro.core.api import Workload
 from repro.core.sweep import SweepSpec, compile_sweep
 
 
@@ -24,7 +25,8 @@ def run():
     compiled = compile_sweep(SweepSpec(n_proxy_leaders=(10,), grids=((4, 4),),
                                        n_replicas=(2, 3, 4, 5, 6)))
     for frac_read in (0.0, 0.6, 0.9, 1.0):
-        peaks = list(compiled.peak_throughput(alpha, f_write=1.0 - frac_read))
+        peaks = list(compiled.peak_throughput(alpha,
+                                              Workload.read_mix(frac_read)))
         scale = peaks[-1] / peaks[0]
         rows.append((f"fig30/reads_{int(frac_read*100)}pct", 0.0,
                      f"n=2..6 -> {[f'{p:.0f}' for p in peaks]} "

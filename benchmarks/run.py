@@ -64,7 +64,8 @@ benchmarks (label: paper target, typical runtime on one CPU core):
             leader crash -> throughput dips to zero and recovers to
             the plateau (p99 carries the stall), mid-run proxy
             scale-up migrating the bottleneck, batch fill ramp
-            B:1->100, and p99-under-crash autotuning             (~25 s)
+            B:1->100, bursty-arrival p99 via Workload(arrival=
+            "bursty"), and p99-under-crash autotuning            (~30 s)
   msgcount  section 3  measured per-role message counts on the real
             protocol cluster (validates every demand table)     (~30 s)
   sweep     section 9  "how should a system be compartmentalized":

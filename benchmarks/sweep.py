@@ -10,6 +10,7 @@ justifies each answer.
 import time
 
 from repro.core.analytical import PAPER_MULTIPAXOS_UNBATCHED, calibrate_alpha
+from repro.core.api import Workload
 from repro.core.autotune import autotune, candidate_spec
 from repro.core.sweep import SweepSpec, compile_models, compile_sweep, model_for
 
@@ -36,12 +37,13 @@ def run():
 
     # peak surface: bottleneck law, vectorized over all configs
     t1 = time.perf_counter()
-    peaks_w = compiled.peak_throughput(alpha, f_write=1.0)
+    peaks_w = compiled.peak_throughput(alpha, Workload())
     law_us = (time.perf_counter() - t1) * 1e6
 
     # full MVA surface: one jitted call over the whole grid
     t2 = time.perf_counter()
-    clients, X, _ = compiled.mva(alpha, n_clients_max=256, f_write=1.0)
+    clients, X, _ = compiled.mva(alpha, n_clients_max=256,
+                                 workload=Workload())
     mva_us = (time.perf_counter() - t2) * 1e6
 
     rows = [
@@ -54,8 +56,8 @@ def run():
          f"single jitted call"),
     ]
 
-    for i, (idx, peak, bn) in enumerate(compiled.top_k(alpha, k=3,
-                                                       f_write=0.1)):
+    for i, (idx, peak, bn) in enumerate(
+            compiled.top_k(alpha, k=3, workload=Workload.read_mix(0.9))):
         cfg = compiled.configs[idx]
         rows.append((f"sweep/top{i+1}_90pct_reads", 0.0,
                      f"{peak:.0f} cmd/s (bn={bn}) p={cfg['n_proxy_leaders']} "
@@ -65,10 +67,12 @@ def run():
 
     # one compiled candidate space serves all three workload mixes
     candidates = compile_sweep(candidate_spec(budget=19))
-    for f_w, label in ((1.0, "write_only"), (0.5, "50pct_reads"),
-                       (0.1, "90pct_reads")):
+    for workload in (Workload(f_write=1.0, name="write_only"),
+                     Workload(f_write=0.5, name="50pct_reads"),
+                     Workload(f_write=0.1, name="90pct_reads")):
+        label = workload.name
         t3 = time.perf_counter()
-        res = autotune(budget=19, alpha=alpha, f_write=f_w,
+        res = autotune(budget=19, alpha=alpha, workload=workload,
                        compiled=candidates)
         us = (time.perf_counter() - t3) * 1e6
         migration = " -> ".join(t.bottleneck for t in res.trace)

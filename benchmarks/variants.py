@@ -24,12 +24,14 @@ import time
 
 from repro.core import (
     SweepSpec,
+    Workload,
     autotune_variants,
     calibrate_alpha,
     compile_models,
     compile_sweep,
     mencius_model,
     mencius_skip_storm_schedule,
+    registered_variants,
     simulate_transient,
     spaxos_model,
     spaxos_payload_ramp_schedule,
@@ -89,9 +91,9 @@ def run():
     grid = compile_sweep(spec)
     compile_us = (time.perf_counter() - t0) * 1e6
     t1 = time.perf_counter()
-    _, X, _ = grid.mva(alpha, n_clients_max=128)
+    _, X, _ = grid.mva(alpha, n_clients_max=128, workload=Workload())
     mva_us = (time.perf_counter() - t1) * 1e6
-    gp = grid.peak_throughput(alpha)
+    gp = grid.peak_throughput(alpha, Workload())
     by_variant = {}
     for i, cfg in enumerate(grid.configs):
         v = cfg.get("variant", "compartmentalized")
@@ -99,7 +101,9 @@ def run():
             by_variant[v] = i
     best = ", ".join(f"{v}={gp[i]:.0f}" for v, i in sorted(by_variant.items()))
     rows.append((f"variants/fig28_mixed_grid_{len(grid)}_configs", compile_us,
-                 f"{len(spec.variants)} variants in one demand tensor"))
+                 f"{len(spec.variants)} of the {len(registered_variants())} "
+                 f"registered variants in one demand tensor "
+                 f"({spec.size()} configs, size() arithmetic)"))
     rows.append((f"variants/fig28_mva_one_call_{X.shape[0]}x{X.shape[1]}",
                  mva_us, f"best peak per variant (cmd/s): {best}"))
 
@@ -143,7 +147,7 @@ def run():
 
     # -- which protocol wins at budget B? ----------------------------------
     t4 = time.perf_counter()
-    res_v = autotune_variants(budget=19, alpha=alpha, f_write=1.0)
+    res_v = autotune_variants(budget=19, alpha=alpha, workload=Workload())
     us = (time.perf_counter() - t4) * 1e6
     per = "; ".join(f"{v}: {c.peak:.0f} @ {c.machines}m (bn={c.bottleneck})"
                     for v, c in sorted(res_v.per_variant.items()))

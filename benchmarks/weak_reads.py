@@ -19,6 +19,7 @@ from repro.core.analytical import (
     calibrate_alpha,
     compartmentalized_model,
 )
+from repro.core.api import Workload
 from repro.core.sweep import compile_models
 
 REPLICAS = (2, 4, 6)
@@ -52,8 +53,8 @@ def run():
            for n in REPLICAS])
     for frac_read in (0.9, 1.0):
         t1 = time.perf_counter()
-        res = compiled.transient(alpha, f_write=1 - frac_read, n_clients=64,
-                                 seeds=8, n_steps=3000)
+        res = compiled.transient(alpha, workload=Workload.read_mix(frac_read),
+                                 n_clients=64, seeds=8, n_steps=3000)
         us = (time.perf_counter() - t1) * 1e6
         x = res.seed_mean_throughput()
         p99 = res.seed_mean_p99() * 1e3

@@ -10,21 +10,23 @@ rediscovered by the machine for any workload mix.
 """
 import sys
 
-from repro.core import autotune, calibrate_alpha
+from repro.core import Workload, autotune, calibrate_alpha
 from repro.core.analytical import PAPER_MULTIPAXOS_UNBATCHED
 
 budget = int(sys.argv[1]) if len(sys.argv) > 1 else 19
 alpha = calibrate_alpha(PAPER_MULTIPAXOS_UNBATCHED)
 print(f"machine budget: {budget}  (paper's hand-tuned deployment uses 19)\n")
 
-for f_write, label in ((1.0, "write-only"), (0.5, "50% reads"),
-                       (0.1, "90% reads")):
+for workload in (Workload(name="write-only"),
+                 Workload(f_write=0.5, name="50% reads"),
+                 Workload.read_mix(0.9, name="90% reads")):
     try:
-        res = autotune(budget=budget, alpha=alpha, f_write=f_write)
+        res = autotune(budget=budget, alpha=alpha, workload=workload)
     except ValueError as e:
         raise SystemExit(f"error: {e}")
     c = res.best_config
-    print(f"== {label}: best of {res.n_candidates} candidate deployments ==")
+    print(f"== {workload.name}: best of {res.n_candidates} "
+          f"candidate deployments ==")
     print(f"   {res.best_peak:,.0f} cmd/s on {res.machines} machines "
           f"(bottleneck: {res.best_bottleneck})")
     print(f"   proxies={c['n_proxy_leaders']} "
@@ -37,8 +39,21 @@ for f_write, label in ((1.0, "write-only"), (0.5, "50% reads"),
     print()
 
 print("with batching enabled (amortizes the sequencing leader):")
-res = autotune(budget=budget, alpha=alpha, f_write=1.0, batching=True)
+try:
+    res = autotune(budget=budget, alpha=alpha, workload=Workload(),
+                   batching=True)
+except ValueError as e:
+    raise SystemExit(f"error: {e}")
 c = res.best_config
 print(f"   {res.best_peak:,.0f} cmd/s on {res.machines} machines "
       f"(bottleneck: {res.best_bottleneck}); batchers={c['n_batchers']} "
       f"unbatchers={c['n_unbatchers']} B={c['batch_size']}")
+
+print("\nsame budget when batches only half fill (bursty arrivals close "
+      "them early):")
+res = autotune(budget=budget, alpha=alpha,
+               workload=Workload(batch_fill=0.5, arrival="bursty"),
+               batching=True)
+print(f"   {res.best_peak:,.0f} cmd/s on {res.machines} machines "
+      f"(bottleneck: {res.best_bottleneck}) - the Workload carries the "
+      f"fill hint; no per-call kwargs")

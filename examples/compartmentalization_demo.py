@@ -4,6 +4,7 @@ watch the bottleneck move and throughput climb (Fig. 29 live).
   PYTHONPATH=src python examples/compartmentalization_demo.py
 """
 from repro.core import (
+    Workload,
     ablation_steps,
     calibrate_alpha,
     compartmentalized_model,
@@ -24,11 +25,13 @@ for name, model in ablation_steps():
     bar = "#" * int(peak / 3500)
     print(f"{name:58s} {peak:12,.0f}  {bn:8s} {bar}")
 
-print("\nmixed workloads (the 16x headline):")
-for f_w, label in ((1.0, "write-only"), (0.5, "50% reads"),
-                   (0.1, "90% reads"), (0.0, "100% reads")):
-    mp, cm, speedup = mixed_workload_speedup(f_w, alpha)
-    print(f"  {label:12s}: MultiPaxos {mp:9,.0f} -> "
+print("\nmixed workloads (the 16x headline), one Workload value each:")
+for w in (Workload(name="write-only"),
+          Workload(f_write=0.5, name="50% reads"),
+          Workload.read_mix(0.9, name="90% reads"),
+          Workload.read_mix(1.0, name="100% reads")):
+    mp, cm, speedup = mixed_workload_speedup(w, alpha)
+    print(f"  {w.name:12s}: MultiPaxos {mp:9,.0f} -> "
           f"Compartmentalized {cm:9,.0f}  ({speedup:.1f}x)")
 
 print("\nlatency-throughput knee (MVA, 512 closed-loop clients):")

@@ -4,13 +4,22 @@ with watermark consistency (paper sections 3.4/3.6 with inference as the
 read op).
 
   PYTHONPATH=src python examples/serve_replicated.py
+
+``BENCH_SMOKE=1`` (set by ``make examples-smoke``) shrinks the request
+counts so the walkthrough finishes faster on CI.
 """
+import os
+
 import jax
 
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serving.scheduler import ContinuousBatcher, Request
 from repro.serving.server import ServingDeployment
+
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+N_INFER = 3 if SMOKE else 6
+N_BATCHED = 4 if SMOKE else 8
 
 cfg = get_config("granite-3-2b").smoke()
 params = init_params(cfg, jax.random.key(0))
@@ -21,7 +30,7 @@ fleet = ServingDeployment(cfg, n_replicas=3, n_clients=2,
 v = fleet.push_weights(params)
 print(f"weights v{v} committed through the log")
 
-for i in range(6):
+for i in range(N_INFER):
     version, toks = fleet.infer([1 + i, 2, 3], max_new=4, client=i % 2)
     print(f"request {i}: served at {version}, tokens={list(toks)}")
 
@@ -36,10 +45,11 @@ print(f"post-update read served at {version} (read-your-committed-writes)")
 
 # --- continuous batching on one replica ------------------------------------
 cb = ContinuousBatcher(cfg, params, n_slots=3, max_len=32)
-reqs = [Request(rid=i, prompt=[1, 2, 3, 4], max_new=3) for i in range(8)]
+reqs = [Request(rid=i, prompt=[1, 2, 3, 4], max_new=3)
+        for i in range(N_BATCHED)]
 for r in reqs:
     cb.submit(r)
 cb.run_until_drained()
-print(f"continuous batching: 8 requests over 3 slots, "
+print(f"continuous batching: {N_BATCHED} requests over 3 slots, "
       f"mean occupancy {cb.mean_occupancy:.2f}, "
       f"outputs ok: {all(len(r.out) == 3 for r in reqs)}")

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Verify that every repo reference in the docs points at something real.
 
-Three checks over README.md, docs/*.md and benchmarks/README.md:
+Four checks over README.md, docs/*.md and benchmarks/README.md:
 
 * **paths** - references like ``src/repro/core/sweep.py``,
   ``benchmarks/run.py``, ``examples/...`` or ``tests/...`` (with or
@@ -11,14 +11,24 @@ Three checks over README.md, docs/*.md and benchmarks/README.md:
   figure number can't survive a docs pass;
 * **benchmark labels** - every ``--only <labels>`` invocation quoted in
   the docs must name labels that ``benchmarks/run.py`` actually
-  registers in ``MODULES``.
+  registers in ``MODULES``;
+* **variant names** - every protocol variant cited in a
+  ``variants=("...", ...)`` snippet must be registered in the
+  ``repro.core.api`` variant registry (names a snippet itself registers
+  via ``register_variant(... name="...")`` are exempt, so the
+  add-a-variant walkthrough can introduce new ones).
+
+The registry is loaded through a synthetic two-module package
+(``api.py`` + ``analytical.py``) so this script never imports JAX.
 
 Keeps the paper->code map honest as the tree is refactored.
 """
 from __future__ import annotations
 
+import importlib.util
 import re
 import sys
+import types
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -39,6 +49,15 @@ FIG_RE = re.compile(r"Figs?\.\s*(\d+)(?:[a-z])?(?:\s*[-/]\s*(\d+))?")
 ONLY_RE = re.compile(r"--only\s+([a-z0-9_,]+)")
 MODULE_LABEL_RE = re.compile(r'^\s*\("([a-z0-9_]+)",', re.MULTILINE)
 
+# variants=("a", "b", ...) tuples quoted in doc code snippets
+VARIANTS_TUPLE_RE = re.compile(r"variants\s*=\s*\(([^)]*)\)")
+QUOTED_NAME_RE = re.compile(r'"([a-z0-9_]+)"')
+# a snippet registering its own variant exempts that name - scoped to
+# register_variant(...) call sites so unrelated name="..." kwargs (e.g.
+# Workload(name="50pct_reads")) don't leak into the exemption set
+DOC_LOCAL_VARIANT_RE = re.compile(
+    r'register_variant\([\s\S]{0,200}?name\s*=\s*"([a-z0-9_]+)"')
+
 
 def registered_labels() -> set[str]:
     """Benchmark labels from the MODULES table in benchmarks/run.py."""
@@ -46,10 +65,36 @@ def registered_labels() -> set[str]:
     return set(MODULE_LABEL_RE.findall(text))
 
 
+def registry_variants() -> set[str]:
+    """Variant names registered in repro.core.api, loaded WITHOUT the
+    repro package __init__ chain (which would import JAX): api.py and
+    analytical.py are stitched into a synthetic package and analytical's
+    built-in ``register_variant`` calls run on import."""
+    core = ROOT / "src" / "repro" / "core"
+    pkg = types.ModuleType("_docscheck_core")
+    pkg.__path__ = [str(core)]  # makes `from .api import ...` resolvable
+    sys.modules["_docscheck_core"] = pkg
+    try:
+        mods = {}
+        for name in ("api", "analytical"):
+            spec = importlib.util.spec_from_file_location(
+                f"_docscheck_core.{name}", core / f"{name}.py")
+            mod = importlib.util.module_from_spec(spec)
+            sys.modules[f"_docscheck_core.{name}"] = mod
+            spec.loader.exec_module(mod)
+            mods[name] = mod
+        return set(mods["api"].registered_variants())
+    finally:
+        for key in list(sys.modules):
+            if key.startswith("_docscheck_core"):
+                del sys.modules[key]
+
+
 def main() -> int:
     missing: list[tuple[Path, str]] = []
     checked = 0
     labels = registered_labels()
+    variants = registry_variants()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -73,6 +118,15 @@ def main() -> int:
                     missing.append((doc.relative_to(ROOT),
                                     f"--only {label} (not a benchmarks/run.py "
                                     f"MODULES label)"))
+        doc_local = set(DOC_LOCAL_VARIANT_RE.findall(text))
+        for m in VARIANTS_TUPLE_RE.finditer(text):
+            for name in QUOTED_NAME_RE.findall(m.group(1)):
+                checked += 1
+                if name not in variants and name not in doc_local:
+                    missing.append((doc.relative_to(ROOT),
+                                    f'variants=...{name!r} (not registered '
+                                    f"in repro.core.api; known: "
+                                    f"{sorted(variants)})"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

@@ -7,12 +7,27 @@ Correctness plane (deterministic, message-level):
   + linearizability checkers.
 
 Performance plane (JAX, calibrated on the paper's anchors):
-  analytical.* demand tables + bottleneck law for every protocol variant
-  (MultiPaxos, Mencius, S-Paxos, CRAQ, unreplicated - the VARIANT_MODELS
-  registry), simulator.mva_curve / fluid_throughput / des_throughput,
-  transient.* scripted dynamics, sweep.* batched mixed-variant surfaces,
-  autotune.* budget search (autotune_variants across protocols).
+  api.* the public surface: the pluggable variant registry
+  (VariantSpec / register_variant - a protocol is a declared knob space,
+  not a branch in a sweep loop) and the Workload dataclass (write mix,
+  skew, arrival and batch-fill hints, passed once), analytical.* demand
+  tables + bottleneck law for every registered variant,
+  simulator.mva_curve / fluid_throughput / des_throughput, transient.*
+  scripted dynamics, sweep.* batched mixed-variant surfaces, autotune.*
+  budget search (autotune_variants across protocols).
 """
+from .api import (
+    Knob,
+    VariantSpec,
+    Workload,
+    as_f_write,
+    knob,
+    register_variant,
+    registered_variants,
+    resolve_workload,
+    unregister_variant,
+    variant_spec,
+)
 from .analytical import (
     STATION_ORDER,
     VARIANT_MODELS,
@@ -24,6 +39,8 @@ from .analytical import (
     craq_chain_model,
     craq_model,
     craq_station_demands,
+    effective_batch_size,
+    grids_under,
     mencius_model,
     mixed_workload_speedup,
     multipaxos_model,
@@ -84,6 +101,7 @@ from .transient import (
     Event,
     TransientResult,
     build_schedule,
+    burst_events,
     failover_schedule,
     mencius_skip_storm_schedule,
     scale_schedule,
@@ -98,22 +116,26 @@ __all__ = [
     "AppendLog", "AutotuneResult", "CRASH", "Command",
     "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
     "DeploymentConfig", "DeploymentModel", "Event", "GridQuorums", "History",
-    "KVStore", "MajorityQuorums", "MenciusDeployment", "Network", "Node",
-    "Operation", "Register", "SPaxosDeployment", "STATION_ORDER", "Station",
-    "SweepSpec", "TraceStep", "TransientResult", "UnreplicatedStateMachine",
-    "VARIANT_MODELS", "VariantAutotuneResult", "VariantChoice",
-    "ablation_steps", "autotune", "autotune_variants", "bottleneck_trace",
-    "build_schedule", "calibrate_alpha", "check_linearizable",
-    "check_register_reads", "check_slot_order", "compartmentalized_model",
-    "compile_models", "compile_sweep", "config_variant", "craq_chain_model",
-    "craq_model", "craq_station_demands", "des_throughput",
+    "KVStore", "Knob", "MajorityQuorums", "MenciusDeployment", "Network",
+    "Node", "Operation", "Register", "SPaxosDeployment", "STATION_ORDER",
+    "Station", "SweepSpec", "TraceStep", "TransientResult",
+    "UnreplicatedStateMachine", "VARIANT_MODELS", "VariantAutotuneResult",
+    "VariantChoice", "VariantSpec", "Workload",
+    "ablation_steps", "as_f_write", "autotune", "autotune_variants",
+    "bottleneck_trace", "build_schedule", "burst_events", "calibrate_alpha",
+    "check_linearizable", "check_register_reads", "check_slot_order",
+    "compartmentalized_model", "compile_models", "compile_sweep",
+    "config_variant", "craq_chain_model", "craq_model",
+    "craq_station_demands", "des_throughput", "effective_batch_size",
     "failover_schedule", "fluid_throughput", "fluid_throughput_batch",
-    "full_compartmentalized", "make_state_machine", "mencius_model",
-    "mencius_skip_storm_schedule", "mixed_workload_speedup", "model_for",
-    "multipaxos_model", "mva_curve", "mva_curves_batch",
+    "full_compartmentalized", "grids_under", "knob", "make_state_machine",
+    "mencius_model", "mencius_skip_storm_schedule", "mixed_workload_speedup",
+    "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command", "read_scalability_law",
+    "register_variant", "registered_variants", "resolve_workload",
     "scale_schedule", "schedule_from_demands", "simulate_transient",
     "spaxos_model", "spaxos_payload_ramp_schedule", "stack_demands",
-    "transient_throughput", "unreplicated_model", "vanilla_mencius_model",
-    "vanilla_multipaxos", "vanilla_spaxos_model", "variant_candidate_configs",
+    "transient_throughput", "unregister_variant", "unreplicated_model",
+    "vanilla_mencius_model", "vanilla_multipaxos", "vanilla_spaxos_model",
+    "variant_candidate_configs", "variant_spec",
 ]

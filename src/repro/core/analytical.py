@@ -46,7 +46,17 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from .api import (
+    STATION_INDEX,
+    STATION_ORDER,
+    VARIANT_MODELS,
+    Workload,
+    as_f_write,
+    knob,
+    register_variant,
+)
 
 # Paper anchor points (commands/sec), Fig. 28.
 PAPER_MULTIPAXOS_UNBATCHED = 25_000.0
@@ -56,19 +66,15 @@ PAPER_MULTIPAXOS_BATCHED = 200_000.0
 PAPER_COMPARTMENTALIZED_BATCHED = 800_000.0
 PAPER_UNREPLICATED_BATCHED = 1_000_000.0
 
-# Canonical station vocabulary for batched/stacked demand export.  Every
-# station name any deployment factory emits maps to one fixed slot, so a
-# sweep over heterogeneous deployments lowers to a dense [n_configs, K]
-# tensor whose per-row argmax is directly decodable back to a component name.
-# The tail slots belong to the protocol variants: S-Paxos' data path
-# (disseminator/stabilizer) and CRAQ's chain positions (head/chain/tail).
-# Append-only: existing column indices are load-bearing for compiled sweeps.
-STATION_ORDER: Tuple[str, ...] = (
-    "batcher", "leader", "proxy", "acceptor", "replica", "unbatcher",
-    "server", "follower", "disseminator", "stabilizer", "head", "chain",
-    "tail",
-)
-STATION_INDEX: Dict[str, int] = {name: i for i, name in enumerate(STATION_ORDER)}
+# The canonical station vocabulary (STATION_ORDER / STATION_INDEX) is
+# *derived* from the variant registry in :mod:`repro.core.api`: every
+# station name a registered variant declares maps to one fixed,
+# append-ordered slot, so a sweep over heterogeneous deployments lowers to
+# a dense [n_configs, K] tensor whose per-row argmax is directly decodable
+# back to a component name.  The built-in registrations at the bottom of
+# this module allocate the historical order (batcher..tail); runtime
+# variants with new station names append after them.  Existing column
+# indices are load-bearing for compiled sweeps and never change.
 
 
 @dataclass(frozen=True)
@@ -82,8 +88,9 @@ class Station:
     demand_write: float
     demand_read: float = 0.0
 
-    def demand(self, f_write: float) -> float:
-        return f_write * self.demand_write + (1.0 - f_write) * self.demand_read
+    def demand(self, f_write: Union[float, Workload]) -> float:
+        f_w = as_f_write(f_write)
+        return f_w * self.demand_write + (1.0 - f_w) * self.demand_read
 
 
 @dataclass(frozen=True)
@@ -91,15 +98,22 @@ class DeploymentModel:
     name: str
     stations: Tuple[Station, ...]
 
-    def demands(self, f_write: float = 1.0) -> Dict[str, float]:
+    def demands(self, f_write: Union[float, Workload] = 1.0
+                ) -> Dict[str, float]:
+        """Per-station effective demand at a write fraction (a scalar or a
+        :class:`~repro.core.api.Workload`, whose ``f_write`` is used - the
+        scalar plane blends only; workload *adaptation* happens at model
+        construction via the registry's ``workload_adapter``)."""
         return {s.name: s.demand(f_write) for s in self.stations}
 
-    def bottleneck(self, f_write: float = 1.0) -> Tuple[str, float]:
+    def bottleneck(self, f_write: Union[float, Workload] = 1.0
+                   ) -> Tuple[str, float]:
         ds = self.demands(f_write)
         name = max(ds, key=ds.get)  # type: ignore[arg-type]
         return name, ds[name]
 
-    def peak_throughput(self, alpha: float, f_write: float = 1.0) -> float:
+    def peak_throughput(self, alpha: float,
+                        f_write: Union[float, Workload] = 1.0) -> float:
         _, d = self.bottleneck(f_write)
         return alpha / d if d > 0 else math.inf
 
@@ -469,19 +483,9 @@ def craq_chain_model(n_nodes: int = 3, skew_p: float = 0.0,
     )
 
 
-#: Variant name -> deployment factory: the registry the sweep axis
-#: (:func:`repro.core.sweep.model_for`) dispatches on.  "compartmentalized"
-#: is the default a variant-less config resolves to.
-VARIANT_MODELS = {
-    "multipaxos": multipaxos_model,
-    "compartmentalized": compartmentalized_model,
-    "mencius": mencius_model,
-    "vanilla_mencius": vanilla_mencius_model,
-    "spaxos": spaxos_model,
-    "vanilla_spaxos": vanilla_spaxos_model,
-    "craq": craq_chain_model,
-    "unreplicated": unreplicated_model,
-}
+# (The pre-registry VARIANT_MODELS dict lived here; it is now a live view
+# of the :mod:`repro.core.api` registry, populated by the built-in
+# registrations at the bottom of this module.)
 
 
 def craq_station_demands(n_nodes: int, skew_p: float, f_write: float,
@@ -496,6 +500,7 @@ def craq_station_demands(n_nodes: int, skew_p: float, f_write: float,
     uniform cold key.  A read of a *dirty* key is forwarded to the tail;
     the hot key is dirty whenever one of its writes is in flight
     (M/G/inf busy indicator with commit time ``C``)."""
+    f_write = as_f_write(f_write)
     k = n_nodes
     lam_w_hot = T * f_write * skew_p
     C = commit_latency_cmds * (2.0 * k) / alpha
@@ -550,9 +555,10 @@ def calibrate_alpha(anchor_throughput: float = PAPER_MULTIPAXOS_UNBATCHED,
     return anchor_throughput * d
 
 
-def read_scalability_law(n_replicas: float, f_write: float,
+def read_scalability_law(n_replicas: float, f_write: Union[float, Workload],
                          alpha_replica: float) -> float:
     """Paper section 8.3:  T = n*alpha / (n*f_w + f_r)."""
+    f_write = as_f_write(f_write)
     f_read = 1.0 - f_write
     return n_replicas * alpha_replica / (n_replicas * f_write + f_read)
 
@@ -597,3 +603,190 @@ def mixed_workload_speedup(f_write: float, alpha: float,
                                         grid_cols=4, n_replicas=n_replicas)
     cm = cmp_model.peak_throughput(alpha, f_write=f_write)
     return mp, cm, cm / mp
+
+
+# ---------------------------------------------------------------------------
+# Built-in variant registrations (the registry the whole performance plane
+# dispatches on - see repro.core.api; runtime variants register the same
+# way with ZERO edits to this file)
+# ---------------------------------------------------------------------------
+
+
+def grids_under(max_cells: int, f: int) -> List[Tuple[int, int]]:
+    """Acceptor grids with write quorums (columns) of >= f + 1 members and
+    at most ``max_cells`` acceptors, plus the (2f+1, 1) majority column."""
+    grids: List[Tuple[int, int]] = [(2 * f + 1, 1)]
+    for rows in range(f + 1, max(max_cells, f + 1) + 1):
+        for cols in range(1, max(max_cells // rows, 1) + 1):
+            if rows * cols <= max_cells and (rows, cols) not in grids:
+                grids.append((rows, cols))
+    return grids
+
+
+def effective_batch_size(batch_size: int, batch_fill: float) -> int:
+    """Batch size actually achieved at a fill fraction: under sparse or
+    bursty arrivals batches close before ``B`` commands accumulate, so the
+    amortization a batcher buys shrinks to ``1 + (B - 1) * fill``."""
+    return max(1, int(round(1 + (batch_size - 1) * batch_fill)))
+
+
+def _batch_fill_adapter(config: Dict, workload: Workload) -> Dict:
+    """Workload adapter for batched variants: scale the config's batch
+    size by the workload's fill hint (no-op at full batches)."""
+    B = int(config.get("batch_size", 1))
+    if workload.batch_fill >= 1.0 or B <= 1:
+        return config
+    return {**config, "batch_size": effective_batch_size(B, workload.batch_fill)}
+
+
+def _craq_workload_adapter(config: Dict, workload: Workload) -> Dict:
+    """Workload adapter for CRAQ: skewed reads hit the hot key with
+    probability ``skew_p`` and forward to the tail while it is dirty -
+    the config inherits the workload's skew hints unless it pins its own."""
+    if workload.skew_p <= 0.0 or "skew_p" in config:
+        return config
+    return {**config, "skew_p": workload.skew_p,
+            "dirty_fraction": workload.dirty_fraction}
+
+
+def _compartmentalized_candidates(budget: int, f: int) -> Dict[str, tuple]:
+    """The unbatched discrete config space under a machine budget (knob
+    ranges clipped so the smallest other components still fit)."""
+    min_grid = f + 1                       # the (f+1, 1) column grid
+    min_rest = 1 + min_grid + (f + 1)      # leader + smallest grid + replicas
+    max_proxies = max(budget - min_rest, 1)
+    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
+    max_grid = budget - (1 + 1 + (f + 1))  # leader + 1 proxy + f+1 replicas
+    return {
+        "n_proxy_leaders": tuple(range(1, max_proxies + 1)),
+        "grids": tuple(grids_under(max_grid, f)),
+        "n_replicas": tuple(range(f + 1, max_replicas + 1)),
+    }
+
+
+def _mencius_candidates(budget: int, f: int) -> Dict[str, tuple]:
+    """Coarsened Mencius candidate space (the extra leader axis would
+    otherwise blow up the cartesian product)."""
+    min_grid = f + 1
+    max_proxies = max(budget - (1 + min_grid + (f + 1)), 1)
+    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
+    return {
+        "n_leaders": tuple(range(1, min(budget, 5) + 1)),
+        "n_proxy_leaders": tuple(range(1, min(max_proxies, 8) + 1)),
+        "grids": ((2 * f + 1, 1), (f + 1, f + 1)),
+        "n_replicas": tuple(range(f + 1, min(max_replicas, f + 7) + 1)),
+    }
+
+
+def _spaxos_candidates(budget: int, f: int) -> Dict[str, tuple]:
+    """Coarsened S-Paxos candidate space (disseminator/stabilizer axes)."""
+    min_grid = f + 1
+    max_proxies = max(budget - (1 + min_grid + (f + 1)), 1)
+    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
+    return {
+        "n_disseminators": tuple(range(1, min(budget, 6) + 1)),
+        "n_stabilizers": (2 * f + 1, 2 * f + 3),
+        "n_proxy_leaders": tuple(range(1, min(max_proxies, 6) + 1)),
+        "grids": ((2 * f + 1, 1), (f + 1, f + 1)),
+        "n_replicas": tuple(range(f + 1, min(max_replicas, f + 5) + 1)),
+    }
+
+
+def _craq_candidates(budget: int, f: int) -> Dict[str, tuple]:
+    return {"chain_nodes": tuple(range(2, min(budget, 7) + 1))}
+
+
+# Registration order is load-bearing for *new* station names only: this
+# sequence reproduces the historical STATION_ORDER slot layout exactly
+# (batcher, leader, proxy, acceptor, replica, unbatcher, server, follower,
+# disseminator, stabilizer, head, chain, tail).
+register_variant(
+    name="compartmentalized",
+    factory=compartmentalized_model,
+    stations=("batcher", "leader", "proxy", "acceptor", "replica",
+              "unbatcher"),
+    knobs=(
+        knob("n_proxy_leaders", (10,)),
+        knob("grids", ((2, 2),), keys=("grid_rows", "grid_cols")),
+        knob("n_replicas", (4,)),
+        knob("batch_sizes", (1,), keys=("batch_size",)),
+        knob("n_batchers", (0,)),
+        knob("n_unbatchers", (0,)),
+    ),
+    takes_f=True,
+    implicit_variant_key=True,  # pre-registry config dicts omit "variant"
+    workload_adapter=_batch_fill_adapter,
+    candidate_knobs=_compartmentalized_candidates,
+    description="Compartmentalized MultiPaxos (paper sections 3-4)",
+)
+
+register_variant(
+    name="unreplicated",
+    factory=unreplicated_model,
+    stations=("server", "batcher", "unbatcher"),
+    takes_f=False,
+    workload_adapter=_batch_fill_adapter,
+    description="Unreplicated state machine baseline (paper Fig. 28)",
+)
+
+register_variant(
+    name="multipaxos",
+    factory=multipaxos_model,
+    stations=("leader", "follower"),
+    description="Vanilla MultiPaxos baseline (2f+1 fused servers)",
+)
+
+register_variant(
+    name="mencius",
+    factory=mencius_model,
+    stations=("leader", "proxy", "acceptor", "replica"),
+    knobs=(
+        knob("n_leaders", (3,)),
+        knob("n_proxy_leaders", (10,)),
+        knob("grids", ((2, 2),), keys=("grid_rows", "grid_cols")),
+        knob("n_replicas", (4,)),
+    ),
+    candidate_knobs=_mencius_candidates,
+    description="Compartmentalized Mencius (paper section 6, Figs. 24-26)",
+)
+
+register_variant(
+    name="vanilla_mencius",
+    factory=vanilla_mencius_model,
+    stations=("server",),
+    description="Vanilla Mencius baseline (paper Fig. 25)",
+)
+
+register_variant(
+    name="spaxos",
+    factory=spaxos_model,
+    stations=("disseminator", "stabilizer", "leader", "proxy", "acceptor",
+              "replica"),
+    knobs=(
+        knob("n_disseminators", (2,)),
+        knob("n_stabilizers", (3,)),
+        knob("n_proxy_leaders", (10,)),
+        knob("grids", ((2, 2),), keys=("grid_rows", "grid_cols")),
+        knob("n_replicas", (4,)),
+    ),
+    candidate_knobs=_spaxos_candidates,
+    description="Compartmentalized S-Paxos (paper section 7, Fig. 27)",
+)
+
+register_variant(
+    name="vanilla_spaxos",
+    factory=vanilla_spaxos_model,
+    stations=("leader", "follower"),
+    description="Vanilla S-Paxos baseline (paper Fig. 27)",
+)
+
+register_variant(
+    name="craq",
+    factory=craq_chain_model,
+    stations=("head", "chain", "tail"),
+    knobs=(knob("chain_nodes", (3,), keys=("n_nodes",)),),
+    takes_f=False,
+    workload_adapter=_craq_workload_adapter,
+    candidate_knobs=_craq_candidates,
+    description="CRAQ chain comparison (paper section 8.4, Fig. 33)",
+)

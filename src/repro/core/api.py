@@ -1,0 +1,546 @@
+"""The performance-plane public API: a pluggable protocol-variant registry
+and a workload-first evaluation surface.
+
+The paper's closing argument is that compartmentalization is "a technique,
+not a protocol": practitioners should be able to apply it to *their*
+protocol incrementally.  This module makes that claim executable.  A
+protocol variant is not a branch in a sweep loop - it is a declarative
+:class:`VariantSpec`: a name, a knob space (knob name -> value iterable,
+including coupled knobs like ``(rows, cols)`` acceptor grids), a model
+factory, and the station slots the variant's demand table emits.
+:func:`register_variant` installs it, after which the variant rides the
+entire batched stack with **zero core-file edits**:
+
+* ``SweepSpec(variants=(..., "your_variant"))`` enumerates its knob
+  product (``repro.core.sweep``),
+* the canonical station vocabulary (:data:`STATION_ORDER`) grows by
+  stable, append-ordered allocation, so its demand rows batch into the
+  same dense tensors as every built-in protocol,
+* ``autotune_variants`` searches it under a machine budget via its
+  declared ``candidate_knobs``,
+* ``CompiledSweep.transient`` scripts it through time.
+
+The second abstraction is :class:`Workload`: "90% reads, Zipf-skewed on a
+hot key, bursty arrivals, batches half full" is **one value passed once**
+instead of an ``f_write`` scalar plus scattered kwargs.  Engines consume
+the parts they understand: every engine blends write/read demand by
+``f_write``; variants that declare a ``workload_adapter`` additionally
+reshape their demand tables under skew or partial batch fill (CRAQ's
+dirty-read forwarding, batcher amortization); the transient engine turns
+``arrival="bursty"`` into scripted demand-surge windows.
+
+This module is dependency-light on purpose (stdlib only): the registry
+must be importable by tooling (``scripts/check_docs_links.py`` validates
+variant names cited in the docs) without dragging in JAX.
+
+Legacy compatibility: every evaluation entry point that used to take a
+bare ``f_write=`` scalar still accepts it, funneled through
+:func:`resolve_workload`, which emits a ``DeprecationWarning`` and wraps
+the scalar in a :class:`Workload`.
+"""
+from __future__ import annotations
+
+import itertools
+import warnings
+from collections import abc
+from dataclasses import dataclass
+from typing import (
+    Any,
+    Callable,
+    Dict,
+    Iterator,
+    List,
+    Mapping,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
+
+Config = Dict[str, Any]
+
+#: Reserved sweep-axis names a knob may not shadow (``SweepSpec`` fields
+#: that are not knob value iterables).
+_RESERVED_KNOB_NAMES = frozenset({"f", "variants", "knob_values"})
+
+
+# ---------------------------------------------------------------------------
+# Workload: the evaluation point, passed once
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Workload:
+    """A workload mix as one value: write fraction, per-key skew, arrival
+    pattern and batch-fill hints.
+
+    Fields and which engine consumes them:
+
+    * ``f_write`` - fraction of commands that are writes.  Every engine:
+      the effective demand is ``f_w * d_write + (1 - f_w) * d_read``.
+    * ``skew_p`` - probability an operation targets the hot key (0 =
+      uniform).  Consumed by variants whose :class:`VariantSpec` declares
+      a ``workload_adapter`` (CRAQ: skewed dirty reads forward to the
+      tail); key-agnostic variants ignore it - which is exactly the
+      paper's Fig. 33 claim.
+    * ``dirty_fraction`` - fraction of hot-key reads that find the key
+      dirty (write in flight).  A hint for adapters that do not solve the
+      throughput fixed point (``craq_model`` does; the sweep-axis table
+      takes the hint).
+    * ``arrival`` - ``"steady"`` (default) or ``"bursty"``.  The
+      transient engine scripts bursty arrivals as demand-surge windows:
+      during a burst every station's demand is multiplied by
+      ``burst_factor`` (offered load transiently exceeds provisioned
+      capacity), for ``burst_fraction`` of the run split across
+      ``n_bursts`` evenly spaced surges.
+    * ``batch_fill`` - fraction of batch slots that actually fill (1.0 =
+      full batches).  Variants with batchers amortize downstream demand
+      by the *effective* batch size ``1 + (B - 1) * batch_fill`` - under
+      sparse arrivals batching buys less (paper Figs. 30-31 as a knob).
+    """
+
+    f_write: float = 1.0
+    skew_p: float = 0.0
+    dirty_fraction: float = 0.5
+    arrival: str = "steady"
+    burst_factor: float = 4.0
+    burst_fraction: float = 0.25
+    n_bursts: int = 3
+    batch_fill: float = 1.0
+    name: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        for fname in ("f_write", "skew_p", "dirty_fraction", "batch_fill"):
+            v = getattr(self, fname)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"Workload.{fname} must be in [0, 1]: {v}")
+        if self.arrival not in ("steady", "bursty"):
+            raise ValueError(
+                f"Workload.arrival must be 'steady' or 'bursty': "
+                f"{self.arrival!r}")
+        if not 0.0 < self.burst_fraction < 1.0:
+            raise ValueError(
+                f"Workload.burst_fraction must be in (0, 1): "
+                f"{self.burst_fraction}")
+        if self.burst_factor <= 0.0:
+            raise ValueError(
+                f"Workload.burst_factor must be positive: {self.burst_factor}")
+        if self.n_bursts < 1:
+            raise ValueError(f"Workload.n_bursts must be >= 1: {self.n_bursts}")
+
+    @property
+    def f_read(self) -> float:
+        return 1.0 - self.f_write
+
+    @classmethod
+    def read_mix(cls, read_fraction: float, **kwargs: Any) -> "Workload":
+        """Workload from a read fraction (``read_mix(0.9)`` = 90% reads)."""
+        return cls(f_write=1.0 - read_fraction, **kwargs)
+
+    @property
+    def adapts_demands(self) -> bool:
+        """True when variant ``workload_adapter``s must be consulted (the
+        workload reshapes demand tables beyond the write/read blend)."""
+        return self.skew_p > 0.0 or self.batch_fill < 1.0
+
+    def describe(self) -> str:
+        parts = [f"{100 * self.f_read:.0f}% reads"]
+        if self.skew_p > 0:
+            parts.append(f"skew p={self.skew_p:g}")
+        if self.arrival != "steady":
+            parts.append(f"{self.arrival} x{self.burst_factor:g}")
+        if self.batch_fill < 1.0:
+            parts.append(f"batch fill {self.batch_fill:g}")
+        label = ", ".join(parts)
+        return f"{self.name} ({label})" if self.name else label
+
+
+#: Common evaluation points (the paper's three workload mixes).
+WRITE_ONLY = Workload(f_write=1.0, name="write_only")
+MIXED_50_50 = Workload(f_write=0.5, name="50pct_reads")
+READ_HEAVY = Workload(f_write=0.1, name="90pct_reads")
+
+
+def as_f_write(workload_or_f: Union["Workload", float]) -> float:
+    """The scalar write fraction of either a :class:`Workload` or a bare
+    float (the scalar model plane's native blend parameter)."""
+    if isinstance(workload_or_f, Workload):
+        return workload_or_f.f_write
+    return float(workload_or_f)
+
+
+def resolve_workload(workload: Optional[Union["Workload", float]] = None,
+                     f_write: Optional[float] = None,
+                     *,
+                     default: Optional["Workload"] = None,
+                     where: str = "this call") -> "Workload":
+    """Coerce the ``(workload, legacy f_write kwarg)`` pair to a Workload.
+
+    The deprecation shim behind every evaluation entry point: passing the
+    old ``f_write=`` scalar (or a bare float where a Workload is
+    expected) still works but warns; pass ``Workload(f_write=...)``
+    instead."""
+    if f_write is not None:
+        if workload is not None:
+            raise TypeError(
+                f"{where}: pass either workload= or the legacy f_write=, "
+                f"not both")
+        warnings.warn(
+            f"{where}: f_write= is deprecated; pass "
+            f"workload=Workload(f_write=...) instead",
+            DeprecationWarning, stacklevel=3)
+        return Workload(f_write=float(f_write))
+    if workload is None:
+        return default if default is not None else Workload()
+    if isinstance(workload, Workload):
+        return workload
+    if isinstance(workload, (int, float)) and not isinstance(workload, bool):
+        warnings.warn(
+            f"{where}: a bare write-fraction scalar is deprecated; pass "
+            f"workload=Workload(f_write=...) instead",
+            DeprecationWarning, stacklevel=3)
+        return Workload(f_write=float(workload))
+    raise TypeError(f"{where}: expected a Workload (or legacy float), got "
+                    f"{type(workload).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Knobs + VariantSpec: a protocol variant as a declaration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Knob:
+    """One axis of a variant's knob space.
+
+    ``name`` is the public sweep-axis name (a ``SweepSpec`` field for the
+    built-ins, a ``knob_values`` key for runtime variants); ``keys`` are
+    the config-dict entries one value sets.  A coupled knob has several
+    keys and tuple values - e.g. the acceptor grid: ``name="grids"``,
+    ``keys=("grid_rows", "grid_cols")``, values like ``(2, 2)``."""
+
+    name: str
+    keys: Tuple[str, ...]
+    values: Tuple[Any, ...]
+
+    def __post_init__(self) -> None:
+        if not self.keys:
+            raise ValueError(f"knob {self.name!r} has no config keys")
+        if self.name in _RESERVED_KNOB_NAMES:
+            raise ValueError(f"knob name {self.name!r} is reserved")
+
+    def entries(self, value: Any) -> Iterator[Tuple[str, Any]]:
+        """(config key, value) pairs one knob value expands to."""
+        if len(self.keys) == 1:
+            yield self.keys[0], value
+            return
+        vt = tuple(value)
+        if len(vt) != len(self.keys):
+            raise ValueError(
+                f"knob {self.name!r} couples {len(self.keys)} keys "
+                f"{self.keys} but got value {value!r}")
+        yield from zip(self.keys, vt)
+
+
+def knob(name: str, values: Sequence[Any],
+         keys: Optional[Sequence[str]] = None) -> Knob:
+    """Convenience :class:`Knob` builder (``keys`` defaults to ``name``)."""
+    return Knob(name=name, keys=tuple(keys) if keys is not None else (name,),
+                values=tuple(values))
+
+
+@dataclass(frozen=True)
+class VariantSpec:
+    """A protocol variant, declaratively.
+
+    * ``factory(**config)`` builds the variant's ``DeploymentModel``
+      (the demand table);
+    * ``stations`` are the canonical slot names the table emits -
+      registration allocates any new name an append-ordered column in
+      :data:`STATION_ORDER`;
+    * ``knobs`` is the default sweep space (``SweepSpec`` fields and
+      ``knob_values`` override per-knob);
+    * ``takes_f`` - configs carry the fault-tolerance parameter ``f``;
+    * ``implicit_variant_key`` - configs omit the ``variant`` key (the
+      default ``compartmentalized`` variant, for backward compatibility
+      with pre-registry config dicts);
+    * ``workload_adapter(config, workload) -> config`` - optional hook
+      reshaping the config under a :class:`Workload` (skew, batch fill).
+      Consulted only when ``workload.adapts_demands``; must return the
+      input dict *itself* (identity, not a copy) when it has nothing to
+      do - callers use that to skip rebuilding the row's model;
+    * ``candidate_knobs(budget, f) -> {knob name: values}`` - optional
+      knob-space generator for the budgeted cross-variant autotuner
+      (``autotune_variants``); variants without one contribute their
+      default knob product (a single config for knobless baselines).
+    """
+
+    name: str
+    factory: Callable[..., Any]
+    stations: Tuple[str, ...]
+    knobs: Tuple[Knob, ...] = ()
+    takes_f: bool = True
+    implicit_variant_key: bool = False
+    workload_adapter: Optional[Callable[[Config, "Workload"], Config]] = None
+    candidate_knobs: Optional[
+        Callable[[int, int], Mapping[str, Sequence[Any]]]] = None
+    description: str = ""
+
+    def __post_init__(self) -> None:
+        if not self.name or not self.name.replace("_", "a").isalnum():
+            raise ValueError(f"variant name must be a [a-z0-9_] identifier: "
+                             f"{self.name!r}")
+        if not self.stations:
+            raise ValueError(f"variant {self.name!r} declares no stations")
+        names = [k.name for k in self.knobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"variant {self.name!r} has duplicate knob "
+                             f"names: {names}")
+        keys = [key for k in self.knobs for key in k.keys]
+        if len(set(keys)) != len(keys):
+            raise ValueError(f"variant {self.name!r} has overlapping knob "
+                             f"config keys: {keys}")
+
+    def knob_names(self) -> Tuple[str, ...]:
+        return tuple(k.name for k in self.knobs)
+
+    def _values_for(self, k: Knob,
+                    overrides: Mapping[str, Sequence[Any]]) -> Tuple[Any, ...]:
+        values = tuple(overrides.get(k.name, k.values))
+        if not values:
+            raise ValueError(
+                f"variant {self.name!r}: knob {k.name!r} has no values")
+        return values
+
+    def configs(self, f: int = 1,
+                overrides: Mapping[str, Sequence[Any]] = {},
+                ) -> Iterator[Config]:
+        """The variant's knob product as config dicts.
+
+        ``overrides`` replaces any declared knob's value iterable by
+        name; unknown override names are rejected (a typo'd knob name
+        silently sweeping nothing is the failure mode this API exists to
+        kill)."""
+        unknown = set(overrides) - set(self.knob_names())
+        if unknown:
+            raise ValueError(
+                f"variant {self.name!r} has no knob(s) {sorted(unknown)}; "
+                f"declared: {list(self.knob_names())}")
+        spaces = [
+            [tuple(k.entries(v)) for v in self._values_for(k, overrides)]
+            for k in self.knobs
+        ]
+        for combo in itertools.product(*spaces):
+            cfg: Config = {}
+            if not self.implicit_variant_key:
+                cfg["variant"] = self.name
+            if self.takes_f:
+                cfg["f"] = f
+            for entries in combo:
+                cfg.update(entries)
+            yield cfg
+
+    def size(self, overrides: Mapping[str, Sequence[Any]] = {}) -> int:
+        """Cardinality of :meth:`configs` - computed arithmetically from
+        the knob-space cardinalities, never by enumeration."""
+        n = 1
+        for k in self.knobs:
+            n *= len(self._values_for(k, overrides))
+        return n
+
+    def adapt(self, config: Config,
+              workload: Optional["Workload"]) -> Config:
+        """The config with the ``variant`` key stripped and, when the
+        workload carries demand-shaping hints, the ``workload_adapter``
+        applied.  Returns the *same* dict object the adapter received
+        when the adapter had nothing to do (callers key off identity to
+        skip model rebuilds)."""
+        cfg = {k: v for k, v in config.items() if k != "variant"}
+        if (workload is not None and workload.adapts_demands
+                and self.workload_adapter is not None):
+            return self.workload_adapter(cfg, workload)
+        return cfg
+
+    def build(self, config: Config) -> Any:
+        """``factory(**config)`` plus a station check: every station the
+        model emits must be declared in ``stations`` (i.e. have a
+        registered column), otherwise batched lowering would die with a
+        bare ``KeyError`` deep in ``demand_slots``."""
+        model = self.factory(**config)
+        undeclared = [s.name for s in getattr(model, "stations", ())
+                      if s.name not in _STATION_SLOTS]
+        if undeclared:
+            raise ValueError(
+                f"variant {self.name!r} built a model emitting "
+                f"station(s) {undeclared} that have no registered column "
+                f"- list every station name the factory can emit in "
+                f"register_variant(stations=...)")
+        return model
+
+    def model(self, config: Config,
+              workload: Optional["Workload"] = None) -> Any:
+        """Build the deployment model for one config, optionally adapted
+        to a workload (skew / batch-fill hints)."""
+        return self.build(self.adapt(config, workload))
+
+
+# ---------------------------------------------------------------------------
+# The registry + the derived canonical station vocabulary
+# ---------------------------------------------------------------------------
+
+_REGISTRY: "Dict[str, VariantSpec]" = {}
+_STATIONS: List[str] = []
+_STATION_SLOTS: Dict[str, int] = {}
+
+
+def _allocate_stations(names: Sequence[str]) -> None:
+    for n in names:
+        if n not in _STATION_SLOTS:
+            _STATION_SLOTS[n] = len(_STATIONS)
+            _STATIONS.append(n)
+
+
+def register_variant(spec: Optional[VariantSpec] = None, *,
+                     override: bool = False,
+                     **kwargs: Any) -> Union[VariantSpec, Callable]:
+    """Install a :class:`VariantSpec` in the registry.
+
+    Three call shapes::
+
+        register_variant(VariantSpec(...))            # direct
+        register_variant(name=..., factory=..., ...)  # kwargs
+        @register_variant(name=..., stations=..., ...)  # decorator on the
+        def my_model(...): ...                          # model factory
+
+    Station slots are allocated append-ordered and never reclaimed
+    (compiled sweeps address stations by column index), so registration
+    order is load-bearing only for *new* station names.  Re-registering
+    an existing name requires ``override=True``."""
+    if spec is None and "factory" not in kwargs:
+        def _decorate(factory: Callable[..., Any]) -> Callable[..., Any]:
+            register_variant(VariantSpec(factory=factory, **kwargs),
+                             override=override)
+            return factory
+        return _decorate
+    if spec is None:
+        spec = VariantSpec(**kwargs)
+    elif kwargs:
+        raise TypeError("pass either a VariantSpec or keyword fields, "
+                        "not both")
+    if not isinstance(spec, VariantSpec):
+        raise TypeError(f"expected a VariantSpec, got {type(spec).__name__}")
+    if spec.name in _REGISTRY and not override:
+        raise ValueError(
+            f"variant {spec.name!r} is already registered; pass "
+            f"override=True to replace it")
+    _allocate_stations(spec.stations)
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_variant(name: str) -> None:
+    """Remove a variant from the registry (tests / plugin teardown).
+
+    Its station slots stay allocated - the vocabulary is append-only
+    because compiled demand tensors address columns by index."""
+    if name not in _REGISTRY:
+        raise ValueError(f"variant {name!r} is not registered")
+    del _REGISTRY[name]
+
+
+def variant_spec(name: str) -> VariantSpec:
+    """Look up a registered variant (ValueError names the known set)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown variant {name!r}; choose from "
+                         f"{sorted(_REGISTRY)}") from None
+
+
+def registered_variants() -> Tuple[str, ...]:
+    """Registered variant names, in registration order."""
+    return tuple(_REGISTRY)
+
+
+class _StationOrder(abc.Sequence):
+    """Live, registry-derived view of the canonical station vocabulary.
+
+    Behaves like the tuple it replaced (indexing, ``len``, iteration,
+    ``.index``, containment) but grows append-ordered as variants with
+    new station names register.  Existing column indices never change."""
+
+    def __getitem__(self, i):  # supports slices like a tuple
+        return tuple(_STATIONS)[i] if isinstance(i, slice) else _STATIONS[i]
+
+    def __len__(self) -> int:
+        return len(_STATIONS)
+
+    def __contains__(self, name: object) -> bool:
+        return name in _STATION_SLOTS
+
+    def index(self, name: str, *args: Any) -> int:
+        if args:  # honor tuple.index's start/stop bounds
+            return tuple(_STATIONS).index(name, *args)
+        try:
+            return _STATION_SLOTS[name]
+        except KeyError:
+            raise ValueError(f"{name!r} is not a registered station") from None
+
+    def __eq__(self, other: object) -> bool:
+        return tuple(_STATIONS) == other
+
+    def __hash__(self):  # keep usable as a dict key like the old tuple
+        return hash(tuple(_STATIONS))
+
+    def __repr__(self) -> str:
+        return f"StationOrder{tuple(_STATIONS)!r}"
+
+
+class _StationIndex(abc.Mapping):
+    """Live ``station name -> column`` mapping (see :class:`_StationOrder`)."""
+
+    def __getitem__(self, name: str) -> int:
+        return _STATION_SLOTS[name]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(_STATIONS)
+
+    def __len__(self) -> int:
+        return len(_STATIONS)
+
+    def __repr__(self) -> str:
+        return f"StationIndex({dict(_STATION_SLOTS)!r})"
+
+
+class _VariantModels(abc.Mapping):
+    """Live ``variant name -> model factory`` view of the registry (the
+    pre-registry ``VARIANT_MODELS`` dict, kept as a compatibility
+    surface)."""
+
+    def __getitem__(self, name: str) -> Callable[..., Any]:
+        return _REGISTRY[name].factory
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(_REGISTRY)
+
+    def __len__(self) -> int:
+        return len(_REGISTRY)
+
+    def __repr__(self) -> str:
+        return (f"VariantModels({{" +
+                ", ".join(f"{n!r}: {s.factory.__name__}"
+                          for n, s in _REGISTRY.items()) + "})")
+
+
+#: Canonical station vocabulary - one fixed, append-ordered column per
+#: station name any registered variant emits.  Derived from the registry;
+#: import the *object* (it is live), never snapshot it at import time if
+#: runtime variant registration matters to you.
+STATION_ORDER = _StationOrder()
+
+#: Live ``station name -> column index`` mapping over :data:`STATION_ORDER`.
+STATION_INDEX = _StationIndex()
+
+#: Live ``variant name -> factory`` mapping (compatibility view of the
+#: registry; prefer :func:`variant_spec` for the full declaration).
+VARIANT_MODELS = _VariantModels()

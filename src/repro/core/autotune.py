@@ -23,11 +23,12 @@ The greedy trace explains the optimum; the exhaustive search certifies it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from .analytical import DeploymentModel, multipaxos_model
+from .api import Workload, resolve_workload, variant_spec
 from .sweep import (
     CompiledSweep,
     Config,
@@ -88,17 +89,6 @@ class VariantAutotuneResult:
     n_candidates: int          # feasible configs across all variants
 
 
-def _grids_under(max_cells: int, f: int) -> List[Tuple[int, int]]:
-    """Acceptor grids with write quorums (columns) of >= f + 1 members and
-    at most ``max_cells`` acceptors, plus the (2f+1, 1) majority column."""
-    grids: List[Tuple[int, int]] = [(2 * f + 1, 1)]
-    for rows in range(f + 1, max(max_cells, f + 1) + 1):
-        for cols in range(1, max(max_cells // rows, 1) + 1):
-            if rows * cols <= max_cells and (rows, cols) not in grids:
-                grids.append((rows, cols))
-    return grids
-
-
 def candidate_spec(budget: int, f: int = 1, batching: bool = False,
                    batch_sizes: Tuple[int, ...] = (10, 50, 100)) -> SweepSpec:
     """The discrete config space under a machine budget.
@@ -107,23 +97,24 @@ def candidate_spec(budget: int, f: int = 1, batching: bool = False,
     failures are survivable; the ``(2f+1, 1)`` column is the
     majority-quorum degenerate case the ablation starts from.  Knob ranges
     are clipped so the *smallest* other components still fit: anything
-    larger can never be feasible and would only bloat the batch.
+    larger can never be feasible and would only bloat the batch.  The
+    unbatched clipping is the compartmentalized variant's registered
+    ``candidate_knobs`` - one source of truth shared with
+    :func:`autotune_variants`.
     """
-    min_grid = f + 1                       # the (f+1, 1) column grid
-    min_rest = 1 + min_grid + (f + 1)      # leader + smallest grid + replicas
-    max_proxies = max(budget - min_rest, 1)
-    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
-    max_grid = budget - (1 + 1 + (f + 1))    # leader + 1 proxy + f+1 replicas
-    grids = _grids_under(max_grid, f)
+    knobs = variant_spec("compartmentalized").candidate_knobs(budget, f)
+    max_proxies = knobs["n_proxy_leaders"][-1]
+    max_replicas = knobs["n_replicas"][-1]
     if not batching:
         return SweepSpec(
             f=f,
-            n_proxy_leaders=tuple(range(1, max_proxies + 1)),
-            grids=tuple(grids),
-            n_replicas=tuple(range(f + 1, max_replicas + 1)),
+            n_proxy_leaders=knobs["n_proxy_leaders"],
+            grids=knobs["grids"],
+            n_replicas=knobs["n_replicas"],
         )
     # batched spec: batchers/unbatchers dominate, everything else is cheap
     # per-batch - coarsen the other knobs to keep the product tractable
+    min_rest = 1 + (f + 1) + (f + 1)       # leader + smallest grid + replicas
     max_bu = max(budget - min_rest - 1, 1)
     return SweepSpec(
         f=f,
@@ -136,16 +127,16 @@ def candidate_spec(budget: int, f: int = 1, batching: bool = False,
     )
 
 
-def _eval(config: Config, alpha: float, f_write: float
+def _eval(config: Config, alpha: float, workload: Workload
           ) -> Tuple[float, str, int, float]:
     """(peak, bottleneck, machines, total demand).  Total demand is the
     plateau tie-breaker: a move that keeps the peak flat but lowers the
     summed demand (e.g. +1 batcher shifting the bottleneck to the
     unbatcher) is still progress toward the next rung."""
-    m = model_for(config)
-    bn, _ = m.bottleneck(f_write)
-    total = sum(m.demands(f_write).values())
-    return m.peak_throughput(alpha, f_write), bn, m.total_machines(), total
+    m = model_for(config, workload)
+    bn, _ = m.bottleneck(workload)
+    total = sum(m.demands(workload).values())
+    return m.peak_throughput(alpha, workload), bn, m.total_machines(), total
 
 
 # knob-turn candidates per bottleneck station: (label, config transform)
@@ -176,7 +167,9 @@ def _moves(config: Config, batching: bool) -> Dict[str, List[Tuple[str, Config]]
     return moves
 
 
-def bottleneck_trace(budget: int, alpha: float, f_write: float = 1.0,
+def bottleneck_trace(budget: int, alpha: float,
+                     workload: Optional[Union[Workload, float]] = None,
+                     f_write: Optional[float] = None,
                      f: int = 1, batching: bool = False,
                      max_steps: int = 64) -> List[TraceStep]:
     """Greedy bottleneck-following from vanilla MultiPaxos up to the budget.
@@ -187,19 +180,20 @@ def bottleneck_trace(budget: int, alpha: float, f_write: float = 1.0,
     fits the budget).  Stops when the bottleneck has no scaling knob left
     (the sequencing leader, in unbatched mode) or no move improves.
     """
+    w = resolve_workload(workload, f_write, where="bottleneck_trace")
     mp = multipaxos_model(f=f)
     trace: List[TraceStep] = [TraceStep(
         step=0, label="vanilla MultiPaxos", config=None,
         machines=mp.total_machines(),
-        peak=mp.peak_throughput(alpha, f_write),
-        bottleneck=mp.bottleneck(f_write)[0])]
+        peak=mp.peak_throughput(alpha, w),
+        bottleneck=mp.bottleneck(w)[0])]
 
     # paper Fig. 29a step 1: decouple into 2 proxies, 2f+1 acceptors, f+1
     # replicas (1 proxy would *lose* throughput vs the fused leader)
     config: Config = dict(f=f, n_proxy_leaders=2, grid_rows=2 * f + 1,
                           grid_cols=1, n_replicas=f + 1, batch_size=1,
                           n_batchers=0, n_unbatchers=0)
-    peak, bn, machines, total = _eval(config, alpha, f_write)
+    peak, bn, machines, total = _eval(config, alpha, w)
     if machines > budget:
         return trace
     trace.append(TraceStep(step=1, label="decouple (2 proxy leaders)",
@@ -213,7 +207,7 @@ def bottleneck_trace(budget: int, alpha: float, f_write: float = 1.0,
             key = tuple(sorted(cand.items()))
             if key in seen:
                 continue
-            p, b, m, tot = _eval(cand, alpha, f_write)
+            p, b, m, tot = _eval(cand, alpha, w)
             if m > budget:
                 continue
             if best is None or (p, -tot) > (best[0], -best[1]):
@@ -231,7 +225,9 @@ def bottleneck_trace(budget: int, alpha: float, f_write: float = 1.0,
     return trace
 
 
-def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
+def autotune(budget: int, alpha: float,
+             workload: Optional[Union[Workload, float]] = None,
+             f_write: Optional[float] = None, f: int = 1,
              batching: bool = False,
              compiled: Optional[CompiledSweep] = None,
              objective: str = "peak",
@@ -240,6 +236,10 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
              transient_kwargs: Optional[Dict] = None) -> AutotuneResult:
     """Best deployment for a machine budget, plus the greedy
     bottleneck-migration trace that explains it.
+
+    ``workload`` is the evaluation point (write mix, skew, arrival and
+    batch-fill hints - one :class:`~repro.core.api.Workload` value; the
+    legacy ``f_write=`` scalar still works behind a deprecation shim).
 
     ``objective`` selects the figure of merit:
 
@@ -253,6 +253,7 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
 
     ``compiled`` lets callers reuse an already-compiled candidate space
     (e.g. to autotune many workload mixes against one batch)."""
+    w = resolve_workload(workload, f_write, where="autotune")
     # smallest deployment the candidate space contains: leader + 1 proxy +
     # the (f+1, 1) column grid + f+1 replicas
     if budget < 1 + 1 + (f + 1) + (f + 1):
@@ -270,7 +271,7 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
         raise ValueError(
             f"no candidate in the compiled sweep fits budget {budget} "
             f"(smallest uses {int(compiled.machines.min())} machines)")
-    peaks = np.where(feasible, compiled.peak_throughput(alpha, f_write),
+    peaks = np.where(feasible, compiled.peak_throughput(alpha, w),
                      -np.inf)
     # argmax; ties break toward fewer machines
     order = np.lexsort((compiled.machines, -peaks))
@@ -283,7 +284,7 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
         short = [int(i) for i in order[:shortlist] if np.isfinite(peaks[i])]
         sub = compiled.subset(short)
         events = fault_events or [Event("leader", 0.4, 0.6, 1e9)]
-        res = sub.transient(alpha, f_write=f_write, events=events,
+        res = sub.transient(alpha, workload=w, events=events,
                             **(transient_kwargs or {}))
         p99 = res.seed_mean_p99()
         pick = int(np.lexsort((sub.machines, p99))[0])
@@ -292,12 +293,16 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
     else:
         raise ValueError(f"unknown objective {objective!r}")
     best_config = dict(compiled.configs[best_i])
-    best_model = compiled.models[best_i]
+    # report the workload-*adapted* model (when the workload reshapes
+    # demands, the compiled row's peak came from it - the unadapted model
+    # would name a different bottleneck and disagree with best_peak)
+    best_model = (model_for(best_config, w) if w.adapts_demands
+                  else compiled.models[best_i])
     best_peak = float(peaks[best_i])
-    best_bn = best_model.bottleneck(f_write)[0]
+    best_bn = best_model.bottleneck(w)[0]
     machines = int(compiled.machines[best_i])
 
-    trace = tuple(bottleneck_trace(budget, alpha, f_write=f_write, f=f,
+    trace = tuple(bottleneck_trace(budget, alpha, workload=w, f=f,
                                    batching=batching))
     # the greedy climber can escape a coarsened exhaustive grid (it has no
     # cartesian-product blowup to worry about) - keep whichever won.  Only
@@ -306,7 +311,7 @@ def autotune(budget: int, alpha: float, f_write: float = 1.0, f: int = 1,
     if objective == "peak" and last.config is not None \
             and last.peak > best_peak:
         best_config = dict(last.config)
-        best_model = model_for(best_config)
+        best_model = model_for(best_config, w)
         best_peak, best_bn, machines = (last.peak, last.bottleneck,
                                         last.machines)
     return AutotuneResult(
@@ -334,47 +339,28 @@ def variant_candidate_configs(budget: int, f: int = 1,
                               ) -> List[Config]:
     """The per-variant discrete config spaces under one machine budget.
 
-    Compartmentalized MultiPaxos gets the full :func:`candidate_spec`
-    space; Mencius and S-Paxos get coarsened knob grids (like the batching
-    branch of :func:`candidate_spec`, their extra axes - leaders,
-    disseminators, stabilizers - would otherwise blow up the cartesian
-    product); the vanilla baselines and CRAQ are single configs.
+    One generic loop over the variant registry: each
+    :class:`~repro.core.api.VariantSpec` that declares ``candidate_knobs``
+    contributes its budget-clipped knob product (compartmentalized
+    MultiPaxos gets the full :func:`candidate_spec` space; Mencius and
+    S-Paxos declare coarsened grids - their extra axes would otherwise
+    blow up the cartesian product); variants without one contribute their
+    default knob product (a single config for the knobless baselines).
     Over-budget combinations are kept (the batched eval masks them by
-    ``machines``) so one compiled space serves nearby budgets too."""
-    min_grid = f + 1
-    max_proxies = max(budget - (1 + min_grid + (f + 1)), 1)
-    max_replicas = max(budget - (1 + 1 + min_grid), f + 1)
-    grids = ((2 * f + 1, 1), (f + 1, f + 1))
+    ``machines``) so one compiled space serves nearby budgets too.
+    Runtime-registered variants ride this search with no edits here."""
     configs: List[Config] = []
     for variant in variants:
-        if variant == "compartmentalized":
-            configs.extend(candidate_spec(budget, f=f).configs())
-        elif variant == "mencius":
-            spec = SweepSpec(
-                f=f, variants=("mencius",),
-                n_leaders=tuple(range(1, min(budget, 5) + 1)),
-                n_proxy_leaders=tuple(range(1, min(max_proxies, 8) + 1)),
-                grids=grids,
-                n_replicas=tuple(range(f + 1, min(max_replicas, f + 7) + 1)))
-            configs.extend(spec.configs())
-        elif variant == "spaxos":
-            spec = SweepSpec(
-                f=f, variants=("spaxos",),
-                n_disseminators=tuple(range(1, min(budget, 6) + 1)),
-                n_stabilizers=(2 * f + 1, 2 * f + 3),
-                n_proxy_leaders=tuple(range(1, min(max_proxies, 6) + 1)),
-                grids=grids,
-                n_replicas=tuple(range(f + 1, min(max_replicas, f + 5) + 1)))
-            configs.extend(spec.configs())
-        elif variant == "craq":
-            configs.extend(SweepSpec(variants=("craq",), chain_nodes=tuple(
-                range(2, min(budget, 7) + 1))).configs())
-        else:  # single-config baselines
-            configs.extend(SweepSpec(f=f, variants=(variant,)).configs())
+        spec = variant_spec(variant)
+        overrides = (spec.candidate_knobs(budget, f)
+                     if spec.candidate_knobs is not None else {})
+        configs.extend(spec.configs(f=f, overrides=overrides))
     return configs
 
 
-def autotune_variants(budget: int, alpha: float, f_write: float = 1.0,
+def autotune_variants(budget: int, alpha: float,
+                      workload: Optional[Union[Workload, float]] = None,
+                      f_write: Optional[float] = None,
                       f: int = 1,
                       variants: Tuple[str, ...] = (
                           "compartmentalized", "mencius", "spaxos"),
@@ -384,10 +370,12 @@ def autotune_variants(budget: int, alpha: float, f_write: float = 1.0,
 
     Lowers every variant's candidate space into ONE compiled demand tensor
     (heterogeneous station sets pad into the canonical slots), evaluates
-    the whole mixed batch with the vectorized bottleneck law, and reports
-    the best deployment of each variant plus the overall winner - the
-    paper's "a technique, not a protocol" claim as a search result.
-    Ties break toward fewer machines, like :func:`autotune`."""
+    the whole mixed batch with the vectorized bottleneck law at one
+    :class:`~repro.core.api.Workload`, and reports the best deployment of
+    each variant plus the overall winner - the paper's "a technique, not
+    a protocol" claim as a search result.  Ties break toward fewer
+    machines, like :func:`autotune`."""
+    w = resolve_workload(workload, f_write, where="autotune_variants")
     if compiled is None:
         configs = variant_candidate_configs(budget, f=f, variants=variants)
         compiled = compile_models([model_for(c) for c in configs], configs)
@@ -396,7 +384,7 @@ def autotune_variants(budget: int, alpha: float, f_write: float = 1.0,
             "compiled sweep carries no configs - build it with compile_sweep "
             "(or pass configs to compile_models)")
     feasible = compiled.machines <= budget
-    peaks = np.where(feasible, compiled.peak_throughput(alpha, f_write),
+    peaks = np.where(feasible, compiled.peak_throughput(alpha, w),
                      -np.inf)
     order = np.lexsort((compiled.machines, -peaks))
     per_variant: Dict[str, VariantChoice] = {}
@@ -406,15 +394,26 @@ def autotune_variants(budget: int, alpha: float, f_write: float = 1.0,
             break  # sorted: everything after is infeasible too
         v = config_variant(compiled.configs[i])
         if v not in per_variant:
-            m = compiled.models[i]
+            # workload-adapted model: consistent with the peak the row
+            # was ranked by (skew/batch-fill reshape the demand table)
+            m = (model_for(compiled.configs[i], w) if w.adapts_demands
+                 else compiled.models[i])
             per_variant[v] = VariantChoice(
                 variant=v, config=dict(compiled.configs[i]), model=m,
                 peak=float(peaks[i]), machines=int(compiled.machines[i]),
-                bottleneck=m.bottleneck(f_write)[0])
+                bottleneck=m.bottleneck(w)[0])
     if not per_variant:
+        # name each variant's smallest deployment so the caller can see
+        # how far off the budget is, per protocol
+        mins: Dict[str, int] = {}
+        for i, cfg in enumerate(compiled.configs):
+            v = config_variant(cfg)
+            m = int(compiled.machines[i])
+            mins[v] = min(mins.get(v, m), m)
+        detail = ", ".join(f"{v} needs >= {m}" for v, m in sorted(mins.items()))
         raise ValueError(
             f"no candidate of any variant fits budget {budget} "
-            f"(smallest uses {int(compiled.machines.min())} machines)")
+            f"(per-variant minimum machines: {detail})")
     winner = max(per_variant.values(), key=lambda c: (c.peak, -c.machines))
     return VariantAutotuneResult(winner=winner, per_variant=per_variant,
                                  budget=budget,

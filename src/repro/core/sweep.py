@@ -4,7 +4,7 @@ The paper's evaluation is not one deployment but a *surface*: throughput as
 a function of every compartmentalization knob (proxy leaders, acceptor grid
 shape, replicas, batchers, batch size) - and, since the paper's sections 6-7
 argue compartmentalization is "a technique, not a protocol", of the
-**protocol variant** itself - under every workload mix.  This module lowers
+**protocol variant** itself - under every workload.  This module lowers
 a grid of configurations into dense demand tensors once
 (:func:`compile_sweep`) and then answers whole-surface questions with
 vectorized numpy (bottleneck law), a single jitted JAX call (full MVA /
@@ -19,35 +19,55 @@ Pipeline:
                --.mva/.fluid-->  one jitted call, X[M, N] curves
                --.transient-->  one jitted scan, scripted dynamics
 
-``K = len(STATION_ORDER)`` is the canonical station vocabulary from
-:mod:`repro.core.analytical`; a config's missing components occupy
-zero-demand slots, which are exactly inert under both MVA and the fluid
-model, so heterogeneous deployments - MultiPaxos next to Mencius next to
-S-Paxos next to CRAQ - batch together losslessly and one vmapped call
-evaluates the whole mixed-variant grid.
+The variant axis is the **registry** (:mod:`repro.core.api`): every
+registered :class:`~repro.core.api.VariantSpec` declares its knob space,
+so :meth:`SweepSpec.configs`, :func:`model_for` and the autotuner's
+candidate generators are generic loops with zero per-variant branches -
+a variant registered at runtime sweeps here with no edits to this file.
+``K = len(STATION_ORDER)`` is the canonical (registry-derived) station
+vocabulary; a config's missing components occupy zero-demand slots, which
+are exactly inert under both MVA and the fluid model, so heterogeneous
+deployments - MultiPaxos next to Mencius next to S-Paxos next to CRAQ -
+batch together losslessly and one vmapped call evaluates the whole
+mixed-variant grid.
+
+Evaluation methods take a :class:`~repro.core.api.Workload` - write
+fraction, per-key skew, arrival pattern, batch-fill hints, passed once -
+with the legacy ``f_write=`` scalar kwarg kept behind a
+``DeprecationWarning`` shim.
 
 :mod:`repro.core.autotune` builds on this to search the config space under
 a machine budget (including across variants: ``autotune_variants``).
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .analytical import (
     STATION_ORDER,
-    VARIANT_MODELS,
     DeploymentModel,
-    compartmentalized_model,
     stack_demands,
 )
+from .api import Config, Workload, resolve_workload, variant_spec
 from .simulator import fluid_throughput_from_demands, mva_curves_from_demands
-from .transient import Event, TransientResult, build_schedule, simulate_transient
+from .transient import (
+    Event,
+    TransientResult,
+    build_schedule,
+    burst_events,
+    simulate_transient,
+)
 
-Config = Dict[str, int]
+#: SweepSpec fields that are knob value iterables for the built-in
+#: variants (knob name == field name); everything else is sweep plumbing.
+_LEGACY_KNOB_FIELDS = (
+    "n_proxy_leaders", "grids", "n_replicas", "batch_sizes", "n_batchers",
+    "n_unbatchers", "n_leaders", "n_disseminators", "n_stabilizers",
+    "chain_nodes",
+)
 
 
 @dataclass(frozen=True)
@@ -55,22 +75,22 @@ class SweepSpec:
     """A cartesian grid over the compartmentalization knobs, swept per
     protocol ``variant``.
 
-    Each field lists the values that knob takes; :meth:`configs` yields the
-    per-variant product.  ``grids`` entries are ``(rows, cols)`` - write
-    quorums are columns (``rows`` members), read quorums are rows (``cols``
-    members).
+    ``variants`` is the protocol axis: any name in the variant registry
+    (:func:`repro.core.api.registered_variants`), including variants
+    registered at runtime.  Each variant consumes exactly the knobs its
+    :class:`~repro.core.api.VariantSpec` declares; per-knob values come
+    from (highest priority first):
 
-    ``variants`` is the protocol axis (keys of
-    :data:`repro.core.analytical.VARIANT_MODELS`).  Each variant consumes
-    the knobs its demand table understands: ``compartmentalized`` takes the
-    full product including batching; ``mencius`` crosses ``n_leaders`` with
-    proxies/grids/replicas; ``spaxos`` crosses
-    ``n_disseminators`` x ``n_stabilizers`` with proxies/grids/replicas;
-    ``craq`` takes ``chain_nodes``; the vanilla baselines
-    (``multipaxos``, ``vanilla_mencius``, ``vanilla_spaxos``,
-    ``unreplicated``) are single knobless configs.  For backward
-    compatibility, configs of the default ``compartmentalized`` variant
-    omit the ``variant`` key (:func:`model_for` defaults it).
+    1. ``knob_values`` - generic ``((knob name, values), ...)`` overrides,
+       the only way to sweep knobs of runtime-registered variants;
+    2. the named legacy field below, when the knob name matches one
+       (``grids`` entries are ``(rows, cols)`` - write quorums are
+       columns with ``rows`` members, read quorums rows with ``cols``);
+    3. the variant's declared knob defaults.
+
+    For backward compatibility, configs of the default
+    ``compartmentalized`` variant omit the ``variant`` key
+    (:func:`model_for` defaults it).
     """
 
     f: int = 1
@@ -85,56 +105,48 @@ class SweepSpec:
     n_disseminators: Tuple[int, ...] = (2,)    # spaxos
     n_stabilizers: Tuple[int, ...] = (3,)      # spaxos
     chain_nodes: Tuple[int, ...] = (3,)        # craq
+    knob_values: Tuple[Tuple[str, Tuple[Any, ...]], ...] = ()
+
+    def knob_space(self, variant: str) -> Dict[str, Tuple[Any, ...]]:
+        """The per-knob value overrides this spec supplies for one
+        variant (only knobs the variant declares; see class docstring
+        for precedence)."""
+        spec = variant_spec(variant)
+        generic = {name: tuple(values) for name, values in self.knob_values}
+        space: Dict[str, Tuple[Any, ...]] = {}
+        for name in spec.knob_names():
+            if name in generic:
+                space[name] = generic[name]
+            elif name in _LEGACY_KNOB_FIELDS:
+                space[name] = tuple(getattr(self, name))
+        return space
 
     def size(self) -> int:
-        return sum(1 for _ in self.configs())
+        """Number of configs - computed arithmetically from the knob-space
+        cardinalities (O(#variants)), never by enumerating the product."""
+        return sum(variant_spec(v).size(self.knob_space(v))
+                   for v in self.variants)
 
     def configs(self) -> Iterator[Config]:
+        """One generic loop over the registry: each variant's declared
+        knob space crossed into config dicts (zero per-variant branches)."""
         for variant in self.variants:
-            if variant not in VARIANT_MODELS:
-                raise ValueError(
-                    f"unknown variant {variant!r}; choose from "
-                    f"{sorted(VARIANT_MODELS)}")
-            if variant == "compartmentalized":
-                for p, (r, w), n, B, b, u in itertools.product(
-                        self.n_proxy_leaders, self.grids, self.n_replicas,
-                        self.batch_sizes, self.n_batchers, self.n_unbatchers):
-                    yield dict(f=self.f, n_proxy_leaders=p, grid_rows=r,
-                               grid_cols=w, n_replicas=n, batch_size=B,
-                               n_batchers=b, n_unbatchers=u)
-            elif variant == "mencius":
-                for m, p, (r, w), n in itertools.product(
-                        self.n_leaders, self.n_proxy_leaders, self.grids,
-                        self.n_replicas):
-                    yield dict(variant=variant, f=self.f, n_leaders=m,
-                               n_proxy_leaders=p, grid_rows=r, grid_cols=w,
-                               n_replicas=n)
-            elif variant == "spaxos":
-                for d, s, p, (r, w), n in itertools.product(
-                        self.n_disseminators, self.n_stabilizers,
-                        self.n_proxy_leaders, self.grids, self.n_replicas):
-                    yield dict(variant=variant, f=self.f, n_disseminators=d,
-                               n_stabilizers=s, n_proxy_leaders=p,
-                               grid_rows=r, grid_cols=w, n_replicas=n)
-            elif variant == "craq":
-                for k in self.chain_nodes:
-                    yield dict(variant=variant, n_nodes=k)
-            elif variant == "unreplicated":
-                yield dict(variant=variant)
-            else:  # multipaxos / vanilla_mencius / vanilla_spaxos
-                yield dict(variant=variant, f=self.f)
+            spec = variant_spec(variant)  # raises on unknown variants
+            yield from spec.configs(f=self.f,
+                                    overrides=self.knob_space(variant))
 
 
-def model_for(config: Config) -> DeploymentModel:
+def model_for(config: Config,
+              workload: Optional[Workload] = None) -> DeploymentModel:
     """The per-config ``DeploymentModel`` a compiled sweep row corresponds
     to (the scalar reference path the batched path is tested against).
-    Dispatches on ``config["variant"]`` through
-    :data:`repro.core.analytical.VARIANT_MODELS`; a config without the key
-    is a compartmentalized-MultiPaxos knob dict (the pre-variant format
-    the autotuner's greedy moves still emit)."""
-    cfg = dict(config)
-    variant = cfg.pop("variant", "compartmentalized")
-    return VARIANT_MODELS[variant](**cfg)
+    Dispatches on ``config["variant"]`` through the variant registry; a
+    config without the key is a compartmentalized-MultiPaxos knob dict
+    (the pre-variant format the autotuner's greedy moves still emit).
+    With a ``workload``, the variant's ``workload_adapter`` (if any) may
+    reshape the config first (skew, batch-fill hints)."""
+    variant = config.get("variant", "compartmentalized")
+    return variant_spec(variant).model(config, workload)
 
 
 def config_variant(config: Config) -> str:
@@ -148,7 +160,9 @@ class CompiledSweep:
 
     ``demand_write``/``demand_read`` are [M, K] per-server service demands
     in canonical :data:`STATION_ORDER` slots; ``machines`` is [M] total
-    servers.  All evaluation methods are vectorized over the M axis.
+    servers.  All evaluation methods are vectorized over the M axis and
+    take a :class:`~repro.core.api.Workload` (legacy ``f_write=`` kwarg
+    shimmed with a ``DeprecationWarning``).
     """
 
     models: Tuple[DeploymentModel, ...]
@@ -160,53 +174,104 @@ class CompiledSweep:
     def __len__(self) -> int:
         return len(self.models)
 
-    def demands(self, f_write: float = 1.0) -> np.ndarray:
-        """Effective [M, K] demand matrix at write fraction ``f_write``."""
-        return (f_write * self.demand_write
-                + (1.0 - f_write) * self.demand_read)
+    def demands(self, workload: Optional[Union[Workload, float]] = None,
+                f_write: Optional[float] = None) -> np.ndarray:
+        """Effective [M, K] demand matrix under a workload.
 
-    def peak_throughput(self, alpha: float, f_write: float = 1.0) -> np.ndarray:
+        The write/read blend is a vectorized re-weighting of the
+        precompiled tensors.  When the workload carries demand-*shaping*
+        hints (skew, partial batch fill) and this sweep carries configs,
+        rows of variants that declare a ``workload_adapter`` are
+        recomputed through it (CRAQ rows pick up dirty-read forwarding,
+        batched rows lose amortization)."""
+        w = resolve_workload(workload, f_write, where="CompiledSweep.demands")
+        out = (w.f_write * self.demand_write
+               + (1.0 - w.f_write) * self.demand_read)
+        if not (w.adapts_demands and self.configs is not None):
+            return out
+        k = out.shape[1]
+        for i, cfg in enumerate(self.configs):
+            spec = variant_spec(config_variant(cfg))
+            if spec.workload_adapter is None:
+                continue
+            stripped = {key: v for key, v in cfg.items() if key != "variant"}
+            adapted = spec.workload_adapter(stripped, w)
+            if adapted is stripped:
+                continue  # adapter no-op: the precompiled row stands
+            model = spec.build(adapted)
+            d_w, d_r, _ = model.demand_slots()
+            row = (w.f_write * np.asarray(d_w[:k])
+                   + (1.0 - w.f_write) * np.asarray(d_r[:k]))
+            if len(d_w) > k and (any(d_w[k:]) or any(d_r[k:])):
+                raise ValueError(
+                    f"config {i} ({model.name}) emits stations beyond this "
+                    f"compiled sweep's {k} columns - recompile the sweep")
+            out[i] = row
+        return out
+
+    def peak_throughput(self, alpha: float,
+                        workload: Optional[Union[Workload, float]] = None,
+                        f_write: Optional[float] = None) -> np.ndarray:
         """Bottleneck-law peak throughput, [M] cmds/s."""
-        d_max = self.demands(f_write).max(axis=1)
+        d_max = self.demands(workload, f_write).max(axis=1)
         with np.errstate(divide="ignore"):
             return np.where(d_max > 0, alpha / np.maximum(d_max, 1e-300),
                             np.inf)
 
-    def bottleneck_indices(self, f_write: float = 1.0) -> np.ndarray:
-        return self.demands(f_write).argmax(axis=1)
+    def bottleneck_indices(self,
+                           workload: Optional[Union[Workload, float]] = None,
+                           f_write: Optional[float] = None) -> np.ndarray:
+        return self.demands(workload, f_write).argmax(axis=1)
 
-    def bottlenecks(self, f_write: float = 1.0) -> List[str]:
+    def bottlenecks(self, workload: Optional[Union[Workload, float]] = None,
+                    f_write: Optional[float] = None) -> List[str]:
         """Name of the saturating station per config, [M]."""
-        return [STATION_ORDER[i] for i in self.bottleneck_indices(f_write)]
+        return [STATION_ORDER[i]
+                for i in self.bottleneck_indices(workload, f_write)]
 
     def mva(self, alpha: float, n_clients_max: int = 512,
-            f_write: float = 1.0
+            workload: Optional[Union[Workload, float]] = None,
+            f_write: Optional[float] = None,
             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Full closed-loop latency-throughput surface in ONE jitted call.
 
         Returns (clients[N], X[M, N] cmds/s, R[M, N] seconds)."""
-        return mva_curves_from_demands(self.demands(f_write) / alpha,
-                                       n_clients_max)
+        return mva_curves_from_demands(
+            self.demands(workload, f_write) / alpha, n_clients_max)
 
-    def fluid(self, alpha: float, n_clients: int, f_write: float = 1.0,
+    def fluid(self, alpha: float, n_clients: int,
+              workload: Optional[Union[Workload, float]] = None,
+              f_write: Optional[float] = None,
               sim_time: float = 1.0, n_steps: int = 2000) -> np.ndarray:
         """Batched fluid cross-check, [M] cmds/s in one jitted call."""
-        return fluid_throughput_from_demands(self.demands(f_write) / alpha,
-                                             n_clients, sim_time, n_steps)
+        return fluid_throughput_from_demands(
+            self.demands(workload, f_write) / alpha, n_clients, sim_time,
+            n_steps)
 
     def transient(self, alpha: float, n_clients: int = 64,
-                  f_write: float = 1.0,
+                  workload: Optional[Union[Workload, float]] = None,
+                  f_write: Optional[float] = None,
                   events: Optional[Sequence[Event]] = None,
                   n_steps: int = 4000, **kwargs) -> TransientResult:
         """Batched stochastic transient run over every config in ONE jitted
         call: (M deployments x S seeds) lanes of the scan engine, with
         optional scripted :class:`~repro.core.transient.Event`s (leader
-        crash, scale-up, ...) applied to the demand tensor mid-run.
-        Returns per-window throughput traces and latency p50/p99 - the
-        figure-of-merit surface the autotuner ranks by under faults."""
-        base = self.demands(f_write) / alpha
-        if events:
-            sched, bounds = build_schedule(base, events, n_steps)
+        crash, scale-up, ...) applied to the demand tensor mid-run.  A
+        workload with ``arrival="bursty"`` contributes demand-surge
+        windows (composable with explicit events - a crash during a
+        burst is one schedule).  Returns per-window throughput traces and
+        latency p50/p99 - the figure-of-merit surface the autotuner ranks
+        by under faults."""
+        w = resolve_workload(workload, f_write,
+                             where="CompiledSweep.transient")
+        base = self.demands(w) / alpha
+        evs = list(events) if events else []
+        if w.arrival == "bursty":
+            evs.extend(burst_events(base.shape[1], factor=w.burst_factor,
+                                    fraction=w.burst_fraction,
+                                    n_bursts=w.n_bursts))
+        if evs:
+            sched, bounds = build_schedule(base, evs, n_steps)
         else:
             sched, bounds = base[None, :, :], None
         return simulate_transient(sched, bounds, n_clients=n_clients,
@@ -224,17 +289,20 @@ class CompiledSweep:
             configs=(tuple(self.configs[i] for i in idx)
                      if self.configs is not None else None))
 
-    def top_k(self, alpha: float, k: int = 5, f_write: float = 1.0,
+    def top_k(self, alpha: float, k: int = 5,
+              workload: Optional[Union[Workload, float]] = None,
+              f_write: Optional[float] = None,
               budget: Optional[int] = None) -> List[Tuple[int, float, str]]:
         """Best configs by bottleneck-law peak: [(index, peak, bottleneck)].
 
         Ties in peak break toward fewer machines; ``budget`` masks out
         deployments using more than that many servers."""
-        peaks = self.peak_throughput(alpha, f_write)
+        w = resolve_workload(workload, f_write, where="CompiledSweep.top_k")
+        peaks = self.peak_throughput(alpha, w)
         if budget is not None:
             peaks = np.where(self.machines <= budget, peaks, -np.inf)
         order = np.lexsort((self.machines, -peaks))
-        names = self.bottlenecks(f_write)
+        names = self.bottlenecks(w)
         return [(int(i), float(peaks[i]), names[i])
                 for i in order[:k] if np.isfinite(peaks[i]) and peaks[i] > 0]
 

@@ -66,6 +66,7 @@ from .analytical import (
     mencius_model,
     spaxos_model,
 )
+from .api import Workload, resolve_workload
 from .simulator import demand_vector
 
 #: Demand multiplier that effectively freezes a station (a crash: in-flight
@@ -144,6 +145,30 @@ def scale_schedule(base: np.ndarray, station: Union[str, int], at: float,
     return build_schedule(base, [Event(station, at, 1.0, factor)], n_steps)
 
 
+def burst_events(n_stations: int, factor: float = 4.0,
+                 fraction: float = 0.25, n_bursts: int = 3) -> List[Event]:
+    """Arrival bursts as scripted events: ``n_bursts`` evenly spaced
+    surge windows covering ``fraction`` of the run, during which EVERY
+    station's demand is multiplied by ``factor`` (offered load transiently
+    exceeding provisioned capacity, in the closed-network approximation).
+    One :class:`Event` per station column per surge, so bursts compose
+    multiplicatively with any other scripted event (a leader crash during
+    a burst is just one schedule).  This is how
+    ``Workload(arrival="bursty")`` lowers onto the engine."""
+    if n_bursts < 1:
+        raise ValueError(f"n_bursts must be >= 1: {n_bursts}")
+    if not 0.0 < fraction < 1.0:
+        raise ValueError(f"burst fraction must be in (0, 1): {fraction}")
+    events: List[Event] = []
+    seg = 1.0 / n_bursts
+    surge = fraction * seg
+    for b in range(n_bursts):
+        start = b * seg + (seg - surge) / 2.0
+        events.extend(Event(k, start, start + surge, factor)
+                      for k in range(n_stations))
+    return events
+
+
 def schedule_from_demands(windows: Sequence[np.ndarray],
                           starts: Sequence[float], n_steps: int
                           ) -> Tuple[np.ndarray, np.ndarray]:
@@ -182,7 +207,8 @@ def mencius_skip_storm_schedule(
     slow_factor: float = 3.0,
     skip_batch: float = 10.0,
     n_steps: int = 4000,
-    f_write: float = 1.0,
+    workload: Optional[Workload] = None,
+    f_write: Optional[float] = None,
     **mencius_kwargs,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Mencius slow-leader skip storm (paper section 6 dynamics).
@@ -195,12 +221,15 @@ def mencius_skip_storm_schedule(
     After ``stop`` the leader catches up and demands return to the healthy
     table.  Returns ``(demands[W, 1, K], step_bounds[W])`` ready for
     :func:`simulate_transient` (demands already divided by ``alpha``)."""
+    w = resolve_workload(workload, f_write,
+                         where="mencius_skip_storm_schedule")
     healthy = _demand_row(
-        mencius_model(n_leaders=n_leaders, **mencius_kwargs), f_write) / alpha
+        mencius_model(n_leaders=n_leaders, **mencius_kwargs),
+        w.f_write) / alpha
     storm = _demand_row(
         mencius_model(n_leaders=n_leaders, skip_fraction=skip_fraction,
                       skip_batch=skip_batch, **mencius_kwargs),
-        f_write) / alpha
+        w.f_write) / alpha
     storm = storm.copy()
     storm[0, STATION_INDEX["leader"]] *= slow_factor
     return schedule_from_demands([healthy, storm, healthy],
@@ -211,7 +240,8 @@ def spaxos_payload_ramp_schedule(
     alpha: float,
     payload_factors: Sequence[float] = (1.0, 2.0, 4.0, 8.0),
     n_steps: int = 4000,
-    f_write: float = 1.0,
+    workload: Optional[Workload] = None,
+    f_write: Optional[float] = None,
     **spaxos_kwargs,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """S-Paxos payload-size ramp (paper section 7 dynamics).
@@ -226,9 +256,11 @@ def spaxos_payload_ramp_schedule(
     :func:`simulate_transient` (demands already divided by ``alpha``)."""
     if len(payload_factors) < 2:
         raise ValueError("need >= 2 payload windows to ramp")
+    w = resolve_workload(workload, f_write,
+                         where="spaxos_payload_ramp_schedule")
     windows = [
         _demand_row(spaxos_model(payload_factor=p, **spaxos_kwargs),
-                    f_write) / alpha
+                    w.f_write) / alpha
         for p in payload_factors
     ]
     starts = [i / len(windows) for i in range(len(windows))]
@@ -540,9 +572,12 @@ def simulate_transient(
 
 
 def transient_throughput(model: DeploymentModel, alpha: float,
-                         n_clients: int = 64, f_write: float = 1.0,
+                         n_clients: int = 64,
+                         workload: Optional[Workload] = None,
+                         f_write: Optional[float] = None,
                          **kwargs) -> TransientResult:
     """Single-deployment convenience wrapper (M = 1): the transient
     engine's answer to :func:`simulator.mva_curve`'s steady state."""
-    d = demand_vector(model, f_write) / alpha
+    w = resolve_workload(workload, f_write, where="transient_throughput")
+    d = demand_vector(model, w.f_write) / alpha
     return simulate_transient(d[None, :], n_clients=n_clients, **kwargs)

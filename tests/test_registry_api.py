@@ -1,0 +1,404 @@
+"""The pluggable variant registry + workload-first evaluation API
+(``repro.core.api``).
+
+The acceptance-critical claim: a protocol variant registered **at
+runtime** - with its own knob space, demand table and even a brand-new
+station name - sweeps (``SweepSpec.variants``), budget-autotunes
+(``autotune_variants``) and transient-simulates with ZERO edits to
+``sweep.py`` / ``analytical.py`` / ``autotune.py``.  Plus: arithmetic
+``SweepSpec.size()``, the legacy ``f_write=`` deprecation shims, the
+per-variant minimums in ``autotune_variants``'s empty-feasible error, and
+``CompiledSweep.subset`` / ``top_k`` edge paths on mixed-variant sweeps.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    STATION_ORDER,
+    VARIANT_MODELS,
+    DeploymentModel,
+    Station,
+    SweepSpec,
+    Workload,
+    autotune,
+    autotune_variants,
+    bottleneck_trace,
+    calibrate_alpha,
+    compile_models,
+    compile_sweep,
+    knob,
+    mencius_skip_storm_schedule,
+    model_for,
+    register_variant,
+    registered_variants,
+    transient_throughput,
+    unregister_variant,
+    variant_spec,
+)
+from repro.core.analytical import multipaxos_model
+
+ALPHA = calibrate_alpha()
+
+
+# ---------------------------------------------------------------------------
+# A demo variant: scaled-read Raft, registered at runtime
+# ---------------------------------------------------------------------------
+
+
+def scaled_read_raft_model(f: int = 1, n_followers: int = 4,
+                           n_read_replicas: int = 2) -> DeploymentModel:
+    """Raft with the read path compartmentalized onto dedicated read
+    replicas (a new ``read_replica`` station the built-in vocabulary has
+    never seen): the leader replicates to ``n_followers`` and streams
+    applied entries to the read replicas, which serve all reads."""
+    n = n_followers
+    quorum = f + 1
+    leader_w = 2 + n + quorum + n_read_replicas  # client rt + append/acks + apply
+    stations = (
+        Station("leader", 1, float(leader_w), 0.0),
+        Station("follower", n, 2.0, 0.0),
+        Station("read_replica", n_read_replicas, 1.0, 2.0 / n_read_replicas),
+    )
+    return DeploymentModel(
+        name=f"raft_scaled_read(f={f},n={n},rr={n_read_replicas})",
+        stations=stations)
+
+
+def _raft_candidates(budget: int, f: int):
+    top = max(budget - 2, f + 1)
+    return {"n_followers": tuple(range(f + 1, min(top, 6) + 1)),
+            "n_read_replicas": tuple(range(1, min(top, 6) + 1))}
+
+
+@pytest.fixture
+def raft_variant():
+    spec = register_variant(
+        name="raft_scaled_read",
+        factory=scaled_read_raft_model,
+        stations=("leader", "follower", "read_replica"),
+        knobs=(knob("n_followers", (2, 4)), knob("n_read_replicas", (1, 2))),
+        candidate_knobs=_raft_candidates,
+        description="runtime-registered demo variant",
+    )
+    yield spec
+    unregister_variant("raft_scaled_read")
+
+
+def test_runtime_variant_rides_the_whole_stack(raft_variant):
+    """Registered at runtime -> appears in SweepSpec.variants sweeps, in
+    autotune_variants, and runs .transient - no core-file edits."""
+    assert "raft_scaled_read" in registered_variants()
+    assert VARIANT_MODELS["raft_scaled_read"] is scaled_read_raft_model
+
+    # sweeps: crossed with a built-in variant in one compiled grid
+    spec = SweepSpec(variants=("compartmentalized", "raft_scaled_read"))
+    compiled = compile_sweep(spec)
+    assert spec.size() == len(compiled) == 1 + 4
+    raft_rows = [i for i, c in enumerate(compiled.configs)
+                 if c.get("variant") == "raft_scaled_read"]
+    assert len(raft_rows) == 4
+    peaks = compiled.peak_throughput(ALPHA, Workload(f_write=0.5))
+    for i in raft_rows:
+        scalar = model_for(compiled.configs[i]).peak_throughput(
+            ALPHA, f_write=0.5)
+        assert peaks[i] == pytest.approx(scalar, rel=1e-12)
+
+    # the new station occupies a real, decodable slot
+    bns = compiled.bottlenecks(Workload.read_mix(0.97))
+    assert "read_replica" in {bns[i] for i in raft_rows}
+
+    # budget search across variants, including the runtime one
+    res = autotune_variants(budget=12, alpha=ALPHA, workload=Workload(),
+                            variants=("compartmentalized",
+                                      "raft_scaled_read"))
+    assert "raft_scaled_read" in res.per_variant
+    assert res.per_variant["raft_scaled_read"].machines <= 12
+
+    # transient dynamics on the same compiled grid, one jitted call
+    tr = compiled.transient(ALPHA, n_clients=16, workload=Workload(),
+                            n_steps=600, seeds=2)
+    assert tr.throughput.shape == (len(compiled), 2)
+    assert np.all(tr.seed_mean_throughput() > 0)
+
+
+def test_runtime_variant_station_allocation_is_append_only(raft_variant):
+    base = ("batcher", "leader", "proxy", "acceptor", "replica", "unbatcher",
+            "server", "follower", "disseminator", "stabilizer", "head",
+            "chain", "tail")
+    assert tuple(STATION_ORDER)[:len(base)] == base
+    assert "read_replica" in STATION_ORDER
+    assert STATION_ORDER.index("read_replica") >= len(base)
+    # unregistering must NOT reclaim the slot (column indices are
+    # load-bearing for compiled sweeps) - pinned by the fixture teardown
+    # plus this re-check in a later test run of the same session
+
+
+def test_factory_emitting_undeclared_station_is_diagnosed():
+    """A factory whose model emits a station with no registered column
+    must fail with a ValueError naming the variant and the remedy, not a
+    bare KeyError deep in demand_slots."""
+    def bad_model():
+        return DeploymentModel(name="bad",
+                               stations=(Station("warp_core", 1, 1.0),))
+    register_variant(name="bad_stations", factory=bad_model,
+                     stations=("leader",), takes_f=False)
+    try:
+        with pytest.raises(ValueError, match="warp_core.*stations="):
+            compile_sweep(SweepSpec(variants=("bad_stations",)))
+    finally:
+        unregister_variant("bad_stations")
+
+
+def test_autotune_reports_workload_adapted_model():
+    """Under a demand-shaping workload the reported model/bottleneck must
+    be the *adapted* one the peak was ranked by (an unadapted CRAQ chain
+    under heavy skew names the head; the adapted one names the tail)."""
+    w = Workload(f_write=0.05, skew_p=0.9, dirty_fraction=1.0)
+    res = autotune_variants(budget=7, alpha=ALPHA, workload=w,
+                            variants=("craq",))
+    choice = res.per_variant["craq"]
+    assert choice.bottleneck == choice.model.bottleneck(w)[0]
+    assert choice.peak == pytest.approx(
+        choice.model.peak_throughput(ALPHA, w))
+    assert choice.bottleneck == "tail"  # skewed dirty reads forward here
+
+
+def test_adapter_noop_keeps_precompiled_rows():
+    """A skew-only workload must leave batched (adapter-bearing but
+    unaffected) rows exactly equal to the precompiled blend."""
+    compiled = compile_sweep(SweepSpec(batch_sizes=(100,), n_batchers=(2,),
+                                       n_unbatchers=(3,)))
+    plain = compiled.demands(Workload(f_write=0.5))
+    skewed = compiled.demands(Workload(f_write=0.5, skew_p=0.9))
+    np.testing.assert_array_equal(plain, skewed)
+
+
+def test_station_order_index_honors_bounds():
+    assert STATION_ORDER.index("leader") == 1
+    with pytest.raises(ValueError):
+        STATION_ORDER.index("leader", 2)
+
+
+def test_register_variant_validates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_variant(name="mencius", factory=scaled_read_raft_model,
+                         stations=("leader",))
+    with pytest.raises(ValueError, match="no stations"):
+        register_variant(name="empty_variant",
+                         factory=scaled_read_raft_model, stations=())
+    with pytest.raises(ValueError, match="reserved"):
+        knob("variants", (1, 2))
+    with pytest.raises(ValueError, match="not registered"):
+        unregister_variant("never_registered")
+    with pytest.raises(ValueError, match="unknown variant"):
+        list(SweepSpec(variants=("no_such_protocol",)).configs())
+
+
+def test_knob_values_override_runtime_knobs(raft_variant):
+    spec = SweepSpec(variants=("raft_scaled_read",),
+                     knob_values=(("n_followers", (2, 3, 4, 5)),
+                                  ("n_read_replicas", (1,))))
+    cfgs = list(spec.configs())
+    assert spec.size() == len(cfgs) == 4
+    assert [c["n_followers"] for c in cfgs] == [2, 3, 4, 5]
+    assert all(c["n_read_replicas"] == 1 for c in cfgs)
+    with pytest.raises(ValueError, match="no knob"):
+        list(variant_spec("raft_scaled_read").configs(
+            overrides={"n_wizards": (1,)}))
+
+
+# ---------------------------------------------------------------------------
+# SweepSpec.size(): arithmetic, not enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_size_is_arithmetic_and_matches_enumeration():
+    spec = SweepSpec(
+        variants=("multipaxos", "compartmentalized", "mencius", "spaxos",
+                  "craq", "unreplicated"),
+        n_proxy_leaders=(1, 2, 5, 10),
+        grids=((3, 1), (2, 2), (3, 3)),
+        n_replicas=(2, 4, 6),
+        batch_sizes=(1, 100),
+        n_batchers=(0, 2),
+        n_leaders=(1, 2, 3),
+        n_disseminators=(2, 4),
+        n_stabilizers=(3,),
+        chain_nodes=(2, 3, 5),
+    )
+    enumerated = sum(1 for _ in spec.configs())
+    assert spec.size() == enumerated
+    # the arithmetic: mp(1) + comp(4*3*3*2*2*1) + mencius(3*4*3*3)
+    #                + spaxos(2*1*4*3*3) + craq(3) + unreplicated(1)
+    assert spec.size() == 1 + 144 + 108 + 72 + 3 + 1
+
+
+# ---------------------------------------------------------------------------
+# Legacy f_write= kwargs: shimmed, warning, value-identical
+# ---------------------------------------------------------------------------
+
+
+def _deprecated(fn, *args, **kwargs):
+    with pytest.warns(DeprecationWarning, match="f_write"):
+        return fn(*args, **kwargs)
+
+
+def test_legacy_f_write_kwargs_warn_and_agree():
+    compiled = compile_sweep(SweepSpec(n_proxy_leaders=(2, 10),
+                                       n_replicas=(2, 4)))
+    w = Workload(f_write=0.3)
+    np.testing.assert_allclose(
+        _deprecated(compiled.peak_throughput, ALPHA, f_write=0.3),
+        compiled.peak_throughput(ALPHA, w))
+    np.testing.assert_allclose(
+        _deprecated(compiled.demands, f_write=0.3), compiled.demands(w))
+    assert (_deprecated(compiled.bottlenecks, f_write=0.3)
+            == compiled.bottlenecks(w))
+    _, x_old, _ = _deprecated(compiled.mva, ALPHA, 16, f_write=0.3)
+    _, x_new, _ = compiled.mva(ALPHA, 16, w)
+    np.testing.assert_allclose(x_old, x_new)
+    assert (_deprecated(compiled.top_k, ALPHA, k=2, f_write=0.3)
+            == compiled.top_k(ALPHA, k=2, workload=w))
+
+    old = _deprecated(autotune, budget=12, alpha=ALPHA, f_write=0.3)
+    new = autotune(budget=12, alpha=ALPHA, workload=w)
+    assert old.best_config == new.best_config
+    assert old.best_peak == new.best_peak
+
+    old_v = _deprecated(autotune_variants, budget=19, alpha=ALPHA,
+                        f_write=0.3)
+    assert old_v.winner.config == autotune_variants(
+        budget=19, alpha=ALPHA, workload=w).winner.config
+
+    old_t = _deprecated(bottleneck_trace, budget=12, alpha=ALPHA,
+                        f_write=0.3)
+    assert [t.peak for t in old_t] == [
+        t.peak for t in bottleneck_trace(budget=12, alpha=ALPHA, workload=w)]
+
+    sched_old, _ = _deprecated(mencius_skip_storm_schedule, ALPHA,
+                               n_steps=100, f_write=0.3)
+    sched_new, _ = mencius_skip_storm_schedule(ALPHA, n_steps=100,
+                                               workload=w)
+    np.testing.assert_allclose(sched_old, sched_new)
+
+
+def test_bare_float_workload_warns():
+    compiled = compile_models([multipaxos_model()])
+    with pytest.warns(DeprecationWarning, match="scalar"):
+        peaks = compiled.peak_throughput(ALPHA, 0.5)
+    np.testing.assert_allclose(
+        peaks, compiled.peak_throughput(ALPHA, Workload(f_write=0.5)))
+
+
+def test_workload_and_f_write_together_is_an_error():
+    compiled = compile_models([multipaxos_model()])
+    with pytest.raises(TypeError, match="not both"):
+        compiled.peak_throughput(ALPHA, Workload(), f_write=0.5)
+
+
+def test_workload_validation():
+    with pytest.raises(ValueError, match="f_write"):
+        Workload(f_write=1.5)
+    with pytest.raises(ValueError, match="arrival"):
+        Workload(arrival="chaotic")
+    with pytest.raises(ValueError, match="burst_fraction"):
+        Workload(burst_fraction=1.0)
+    assert Workload.read_mix(0.9).f_write == pytest.approx(0.1)
+    assert "90% reads" in Workload.read_mix(0.9).describe()
+
+
+def test_transient_throughput_shim():
+    with pytest.warns(DeprecationWarning, match="f_write"):
+        res = transient_throughput(multipaxos_model(), ALPHA, n_clients=8,
+                                   f_write=0.5, n_steps=400, seeds=2)
+    assert res.throughput.shape == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# autotune_variants: empty-feasible error names per-variant minimums
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_variants_empty_budget_names_per_variant_minimums():
+    with pytest.raises(ValueError) as exc:
+        autotune_variants(budget=5, alpha=ALPHA, workload=Workload())
+    msg = str(exc.value)
+    assert "per-variant minimum machines" in msg
+    for variant in ("compartmentalized", "mencius", "spaxos"):
+        assert f"{variant} needs >= " in msg
+    # the quoted minimums are real: one machine more than the smallest
+    # quoted requirement must make at least that variant feasible
+    smallest = min(int(part.split(">= ")[1])
+                   for part in msg.split("(")[1].rstrip(")").split(", "))
+    res = autotune_variants(budget=smallest, alpha=ALPHA, workload=Workload())
+    assert res.winner.machines <= smallest
+
+
+# ---------------------------------------------------------------------------
+# CompiledSweep.subset + top_k on mixed-variant sweeps
+# ---------------------------------------------------------------------------
+
+
+def mixed_compiled():
+    return compile_sweep(SweepSpec(
+        variants=("multipaxos", "compartmentalized", "mencius", "craq"),
+        n_proxy_leaders=(10, 11),
+        grids=((2, 2),),
+        n_replicas=(4,),
+        n_leaders=(3,),
+        chain_nodes=(3, 5),
+    ))
+
+
+def test_subset_round_trips_configs_and_tensors():
+    compiled = mixed_compiled()
+    idx = [len(compiled) - 1, 0, 2]
+    sub = compiled.subset(idx)
+    assert len(sub) == 3
+    for j, i in enumerate(idx):
+        assert sub.configs[j] == compiled.configs[i]
+        assert sub.models[j] is compiled.models[i]
+        assert sub.machines[j] == compiled.machines[i]
+        np.testing.assert_array_equal(sub.demand_write[j],
+                                      compiled.demand_write[i])
+    # evaluation on the subset matches the parent rows elementwise
+    np.testing.assert_allclose(
+        sub.peak_throughput(ALPHA, Workload(f_write=0.5)),
+        compiled.peak_throughput(ALPHA, Workload(f_write=0.5))[idx])
+
+
+def test_subset_without_configs_keeps_configs_none():
+    compiled = compile_models([multipaxos_model(),
+                               model_for(dict(variant="craq", n_nodes=3))])
+    assert compiled.configs is None
+    sub = compiled.subset([1])
+    assert sub.configs is None
+    assert len(sub) == 1
+
+
+def test_top_k_budget_masks_expensive_configs():
+    compiled = mixed_compiled()
+    unbounded = compiled.top_k(ALPHA, k=len(compiled), workload=Workload())
+    assert len(unbounded) == len(compiled)  # every config has a finite peak
+    budget = 10
+    bounded = compiled.top_k(ALPHA, k=len(compiled), workload=Workload(),
+                             budget=budget)
+    assert bounded  # craq(3)/multipaxos fit
+    assert all(compiled.machines[i] <= budget for i, _, _ in bounded)
+    assert len(bounded) < len(unbounded)
+
+
+def test_top_k_ties_break_toward_fewer_machines():
+    compiled = mixed_compiled()
+    # p=10 and p=11 compartmentalized rows are both leader-bound at
+    # f_write=1: identical peak, 19 vs 20 machines
+    rows = {c.get("n_proxy_leaders"): i
+            for i, c in enumerate(compiled.configs)
+            if c.get("variant") is None}
+    peaks = compiled.peak_throughput(ALPHA, Workload())
+    assert peaks[rows[10]] == pytest.approx(peaks[rows[11]])
+    ranked = compiled.top_k(ALPHA, k=len(compiled), workload=Workload())
+    pos = {i: rank for rank, (i, _, _) in enumerate(ranked)}
+    assert pos[rows[10]] < pos[rows[11]]

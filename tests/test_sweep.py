@@ -8,6 +8,7 @@ import pytest
 from repro.core import (
     STATION_ORDER,
     SweepSpec,
+    Workload,
     ablation_steps,
     autotune,
     bottleneck_trace,
@@ -59,8 +60,9 @@ def test_compiled_peaks_match_per_model_bottleneck_law():
     compiled = compile_sweep(big_spec())
     assert len(compiled) == 100
     for f_write in (1.0, 0.5, 0.1):
-        peaks = compiled.peak_throughput(ALPHA, f_write=f_write)
-        bns = compiled.bottlenecks(f_write=f_write)
+        w = Workload(f_write=f_write)
+        peaks = compiled.peak_throughput(ALPHA, w)
+        bns = compiled.bottlenecks(w)
         for i, m in enumerate(compiled.models):
             assert peaks[i] == pytest.approx(
                 m.peak_throughput(ALPHA, f_write=f_write), rel=1e-12)
@@ -96,7 +98,8 @@ def test_batched_mva_read_mix_matches_scalar():
     compiled = compile_sweep(SweepSpec(n_proxy_leaders=(5, 10),
                                        grids=((2, 2),),
                                        n_replicas=(4, 6)))
-    _, X, _ = compiled.mva(ALPHA, n_clients_max=32, f_write=0.1)
+    _, X, _ = compiled.mva(ALPHA, n_clients_max=32,
+                           workload=Workload.read_mix(0.9))
     for i, m in enumerate(compiled.models):
         _, x_single, _ = mva_curve(m, ALPHA, n_clients_max=32, f_write=0.1)
         np.testing.assert_allclose(X[i], x_single, rtol=1e-6)
@@ -133,7 +136,7 @@ def test_autotune_meets_paper_deployment_at_same_budget():
     paper = compartmentalized_model(f=1, n_proxy_leaders=10, grid_rows=2,
                                     grid_cols=2, n_replicas=4)
     budget = paper.total_machines()  # 19: leader + 10 proxies + 4 acc + 4 repl
-    res = autotune(budget=budget, alpha=ALPHA, f_write=1.0)
+    res = autotune(budget=budget, alpha=ALPHA, workload=Workload())
     assert res.best_peak >= paper.peak_throughput(ALPHA) * (1 - 1e-9)
     assert res.machines <= budget
     # fully compartmentalized write path still bottlenecks on the leader
@@ -142,7 +145,7 @@ def test_autotune_meets_paper_deployment_at_same_budget():
 
 def test_autotune_trace_walks_paper_bottleneck_migration():
     """Fig. 29a narrative: leader -> proxies (scaled until) -> leader."""
-    trace = bottleneck_trace(budget=19, alpha=ALPHA, f_write=1.0)
+    trace = bottleneck_trace(budget=19, alpha=ALPHA, workload=Workload())
     bns = [t.bottleneck for t in trace]
     assert bns[0] == "leader"          # vanilla MultiPaxos
     assert bns[1] == "proxy"           # right after decoupling
@@ -154,8 +157,8 @@ def test_autotune_trace_walks_paper_bottleneck_migration():
 
 
 def test_autotune_read_heavy_scales_replicas():
-    res = autotune(budget=19, alpha=ALPHA, f_write=0.1)
-    res_w = autotune(budget=19, alpha=ALPHA, f_write=1.0)
+    res = autotune(budget=19, alpha=ALPHA, workload=Workload.read_mix(0.9))
+    res_w = autotune(budget=19, alpha=ALPHA, workload=Workload())
     assert res.best_peak > 2.0 * res_w.best_peak
     assert res.best_config["n_replicas"] > 2
     # the read-heavy staircase must scale replicas at some point
@@ -164,15 +167,17 @@ def test_autotune_read_heavy_scales_replicas():
 
 
 def test_autotune_batching_beats_unbatched():
-    res_b = autotune(budget=19, alpha=ALPHA, f_write=1.0, batching=True)
-    res_u = autotune(budget=19, alpha=ALPHA, f_write=1.0)
+    res_b = autotune(budget=19, alpha=ALPHA, workload=Workload(),
+                     batching=True)
+    res_u = autotune(budget=19, alpha=ALPHA, workload=Workload())
     assert res_b.best_peak > 2.0 * res_u.best_peak
     assert res_b.best_config["n_batchers"] >= 1
 
 
 def test_autotune_respects_budget():
     for budget in (9, 12, 19):
-        res = autotune(budget=budget, alpha=ALPHA, f_write=0.5)
+        res = autotune(budget=budget, alpha=ALPHA,
+                       workload=Workload(f_write=0.5))
         assert res.machines <= budget
         assert all(t.machines <= budget for t in res.trace)
     with pytest.raises(ValueError):
@@ -180,6 +185,7 @@ def test_autotune_respects_budget():
 
 
 def test_autotune_more_budget_never_hurts():
-    peaks = [autotune(budget=b, alpha=ALPHA, f_write=0.1).best_peak
+    peaks = [autotune(budget=b, alpha=ALPHA,
+                      workload=Workload.read_mix(0.9)).best_peak
              for b in (10, 14, 19, 24)]
     assert all(b >= a * (1 - 1e-9) for a, b in zip(peaks, peaks[1:]))

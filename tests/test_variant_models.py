@@ -18,6 +18,7 @@ from benchmarks.protocol_messages import measure_mencius, measure_spaxos
 from repro.core import (
     STATION_ORDER,
     SweepSpec,
+    Workload,
     autotune_variants,
     calibrate_alpha,
     compartmentalized_model,
@@ -154,8 +155,9 @@ def test_mixed_variant_sweep_matches_scalar_elementwise():
                 for c in compiled.configs}
     assert len(variants) >= 3
     for f_write in (1.0, 0.5):
-        peaks = compiled.peak_throughput(ALPHA, f_write=f_write)
-        bns = compiled.bottlenecks(f_write=f_write)
+        w = Workload(f_write=f_write)
+        peaks = compiled.peak_throughput(ALPHA, w)
+        bns = compiled.bottlenecks(w)
         for i, m in enumerate(compiled.models):
             assert peaks[i] == pytest.approx(
                 m.peak_throughput(ALPHA, f_write=f_write), rel=1e-12)
@@ -226,7 +228,7 @@ def test_payload_ramp_transient_monotone_while_leader_flat():
 
 
 def test_autotune_variants_budget_and_winner():
-    res = autotune_variants(budget=19, alpha=ALPHA, f_write=1.0)
+    res = autotune_variants(budget=19, alpha=ALPHA, workload=Workload())
     assert set(res.per_variant) == {"compartmentalized", "mencius", "spaxos"}
     for choice in res.per_variant.values():
         assert choice.machines <= 19

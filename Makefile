@@ -4,10 +4,17 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke examples-smoke docs-links check ci clean
+.PHONY: test bench-smoke parity-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
+
+# measured-vs-analytical msgs/cmd parity for every variant that declares
+# an execution plane (validate_variant over executable_variants(), shrunk
+# command counts): runs the real clusters, checks linearizability, and
+# fails on any station outside its declared tolerance
+parity-smoke:
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only msgcount
 
 # cheap figures + the sweep, transient and variant engines: exercises the
 # batched MVA kernel, the stochastic scan engine (failover benchmark), the
@@ -31,11 +38,12 @@ examples-smoke:
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test bench-smoke examples-smoke
+check: docs-links test parity-smoke bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
 	JAX_PLATFORMS=cpu $(MAKE) test
+	JAX_PLATFORMS=cpu $(MAKE) parity-smoke
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
 	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 

@@ -1,155 +1,71 @@
-"""Message-count microbenchmark on the *real* protocol clusters - validates
-the demand tables every analytical figure is built from.
+"""Message-count parity on the *real* protocol clusters - validates the
+demand tables every analytical figure is built from.
 
 Paper section 3.1: vanilla leader handles >= 3f+4 messages per command;
 the compartmentalized leader handles 2.  Grid section 3.2: each acceptor
-sees 1/w of writes.  These counts are measured, not modelled.
+sees 1/w of writes.  Sections 6-7: the Mencius and S-Paxos clusters match
+their tables (the S-Paxos leader measures **exactly 2** id-only msgs/cmd).
+These counts are measured, not modelled.
 
-The variant clusters are cross-checked the same way: the measured
-per-station messages per command of a Mencius deployment (section 6) and
-an S-Paxos deployment (section 7) are compared against
-``repro.core.analytical.mencius_model`` / ``spaxos_model`` - the demand
-tables ``benchmarks/variants.py`` and the mixed-variant sweep axis are
-built from.  ``tests/test_variant_models.py`` pins the same parity with
-tolerances.
+Since the execution plane joined the registry this module is ONE
+zero-branch loop: every variant that declares an
+:class:`~repro.core.api.ExecutableSpec` is executed by
+``repro.core.execution.validate_variant`` - closed-loop workload, history
+collection, linearizability check, measured per-station msgs/cmd bucketed
+into canonical ``STATION_ORDER`` slots - and parity-checked against its
+own registered demand table.  Per-variant physics (address -> station
+bucketing, measured announce/skip/forwarding feedback, tolerances, which
+stations are message-exact) is *data* in the registry, not branches here.
+A variant registered at runtime with an executable shows up in this
+benchmark with zero edits.
+
+``tests/test_variant_models.py`` and ``tests/test_execution.py`` pin the
+same parity; ``make parity-smoke`` runs this module shrunk.
 """
+import os
 import time
 
 from repro.core import (
-    MenciusDeployment,
-    SPaxosDeployment,
-    Workload,
-    full_compartmentalized,
-    mencius_model,
-    spaxos_model,
-    vanilla_multipaxos,
+    MIXED_50_50,
+    WRITE_ONLY,
+    calibrate_alpha,
+    executable_variants,
+    validate_variant,
 )
 
-#: The measured clusters run a put-only op stream, i.e. the write-only mix.
-MEASURED_WORKLOAD = Workload(name="write_only")
+#: The paper states its message-count tables for the write-only mix; the
+#: 50/50 mix exercises the read paths (leaderless reads, CRAQ chains).
+WORKLOADS = (WRITE_ONLY, MIXED_50_50)
 
-
-def station_msgs_per_cmd(nodes, n_cmds):
-    """Measured (sent + received) messages per command per server."""
-    total = sum(n.msgs_sent + n.msgs_received for n in nodes)
-    return total / n_cmds / len(nodes)
-
-
-def measure_mencius(n_ops_per_client=20):
-    """Per-station msgs/cmd of a balanced 3-leader Mencius run, plus the
-    matching model demands.  Two model quirks of the correctness plane are
-    fed back into the table so the comparison is apples-to-apples:
-    ``announce_interval=1`` (the plane announces its frontier on every
-    command, where the paper's protocol piggybacks it) and the *measured*
-    noop-skip parameters (lagging leaders range-fill vacant slots; the
-    effective ``skip_fraction`` and per-range amortization ``skip_batch``
-    are read off the run instead of assumed)."""
-    dep = MenciusDeployment(n_leaders=3, n_proxy_leaders=4, grid=(2, 2),
-                            n_replicas=3, n_clients=3)
-    for c in dep.clients:
-        c.run_ops([("put", f"{c.addr}-k{i}", i) for i in range(n_ops_per_client)])
-    dep.net.run(max_steps=500_000)
-    assert all(c.done for c in dep.clients)
-    n_cmds = 3 * n_ops_per_client
-    measured = {
-        "leader": station_msgs_per_cmd(dep.leaders, n_cmds),
-        "proxy": station_msgs_per_cmd(dep.proxies, n_cmds),
-        "acceptor": station_msgs_per_cmd(dep.acceptors, n_cmds),
-        "replica": station_msgs_per_cmd(dep.replicas, n_cmds),
-    }
-    n_ranges = dep.total_skips()
-    n_slots = max(r.executed_upto for r in dep.replicas) + 1
-    n_noops = max(n_slots - n_cmds, 0)
-    kwargs = dict(n_leaders=3, n_proxy_leaders=4, grid_rows=2, grid_cols=2,
-                  n_replicas=3, announce_interval=1.0)
-    if n_noops and n_ranges:
-        kwargs.update(skip_fraction=n_noops / n_slots,
-                      skip_batch=n_noops / n_ranges)
-    model = mencius_model(**kwargs).demands(MEASURED_WORKLOAD)
-    return measured, model, n_ranges, n_noops
-
-
-def measure_spaxos(n_ops_per_client=20):
-    """Per-station msgs/cmd of an S-Paxos run vs the model demands; the
-    leader must measure exactly 2 (ProposeId in, Phase2a(id) out) - it
-    never touches payloads."""
-    dep = SPaxosDeployment(n_clients=2)  # d=2, s=3, p=3, grid 2x2, n=3
-    for c in dep.clients:
-        c.run_ops([("put", f"{c.addr}-k{i}", i) for i in range(n_ops_per_client)])
-    dep.net.run(max_steps=500_000)
-    assert all(c.done for c in dep.clients)
-    n_cmds = 2 * n_ops_per_client
-    measured = {
-        "disseminator": station_msgs_per_cmd(dep.disseminators, n_cmds),
-        "stabilizer": station_msgs_per_cmd(dep.stabilizers, n_cmds),
-        "leader": station_msgs_per_cmd([dep.leader], n_cmds),
-        "proxy": station_msgs_per_cmd(dep.proxies, n_cmds),
-        "acceptor": station_msgs_per_cmd(dep.acceptors, n_cmds),
-        "replica": station_msgs_per_cmd(dep.replicas, n_cmds),
-    }
-    model = spaxos_model(n_disseminators=2, n_stabilizers=3,
-                         n_proxy_leaders=3, grid_rows=2, grid_cols=2,
-                         n_replicas=3).demands(MEASURED_WORKLOAD)
-    return measured, model
-
-
-def _parity_row(name, measured, model, note=""):
-    pairs = ", ".join(
-        f"{k} {measured[k]:.2f}/{model[k]:.2f}" for k in measured)
-    return (name, 0.0, f"measured/modelled msgs per cmd per server: {pairs}"
-            + (f" ({note})" if note else ""))
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
 
 
 def run():
-    n_ops = 50
-    t0 = time.perf_counter()
+    n_commands = 24 if SMOKE else 60
     rows = []
+    failures = []
 
-    vp = vanilla_multipaxos(f=1, n_clients=1)
-    vp.clients[0].run_ops([("put", f"k{i}", i) for i in range(n_ops)])
-    vp.run_to_quiescence()
-    vl = vp.leaders[0]
-    vanilla = (vl.msgs_sent + vl.msgs_received) / n_ops
+    for name in executable_variants():
+        for workload in WORKLOADS:
+            t0 = time.perf_counter()
+            report = validate_variant(name, workload=workload,
+                                      n_commands=n_commands, seed=0)
+            wall_us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"msgcount/{name}_parity_{workload.name}", wall_us,
+                         report.summary()))
+            if not report.passed:
+                failures.append(str(report))
 
-    cp = full_compartmentalized(f=1, n_clients=1, grid=(2, 3), n_replicas=3)
-    cp.clients[0].run_ops([("put", f"k{i}", i) for i in range(n_ops)])
-    cp.run_to_quiescence()
-    cl = cp.leaders[0]
-    comp = (cl.msgs_sent + cl.msgs_received) / n_ops
-    per_acceptor = [a.msgs_received / n_ops for a in cp.acceptors]
-    proxy_total = sum(p.msgs_sent + p.msgs_received for p in cp.proxies) / n_ops
-
-    # read path: linearizable read touches one acceptor row + one replica
-    cp.clients[0].run_ops([("get", "k0")] * 20)
-    before = {a.addr: a.msgs_received for a in cp.acceptors}
-    cp.run_to_quiescence()
-    read_msgs = sum(a.msgs_received - before[a.addr] for a in cp.acceptors) / 20
-
+    # the measured calibration anchor: alpha from an *executed* vanilla run
+    t0 = time.perf_counter()
+    alpha_measured = calibrate_alpha(measured=True,
+                                     n_commands=n_commands, seed=0)
     wall_us = (time.perf_counter() - t0) * 1e6
-    rows.append(("msgcount/cluster_run", wall_us, f"{2*n_ops+20} ops end-to-end"))
-    rows.append(("msgcount/vanilla_leader_per_cmd", 0.0,
-                 f"{vanilla:.2f} msgs/cmd (paper: >= 3f+4 = 7)"))
-    rows.append(("msgcount/compartmentalized_leader_per_cmd", 0.0,
-                 f"{comp:.2f} msgs/cmd (paper: 2)"))
-    rows.append(("msgcount/proxy_leaders_per_cmd", 0.0,
-                 f"{proxy_total:.2f} msgs/cmd across proxies (3f+4 + replicas)"))
-    rows.append(("msgcount/acceptor_write_share_2x3_grid", 0.0,
-                 f"per-acceptor recv {[f'{x:.2f}' for x in per_acceptor]} "
-                 f"msgs/cmd (1/w = 0.33 expected; send+recv = 2/w)"))
-    rows.append(("msgcount/read_acceptor_msgs", 0.0,
-                 f"{read_msgs:.2f} acceptor msgs/read (one row x Preread+Ack "
-                 f"= 2*w/row-count expected ~3)"))
+    rows.append(("msgcount/alpha_measured_anchor", wall_us,
+                 f"alpha = {alpha_measured:.0f} msgs/s from the executed "
+                 f"vanilla run (table-derived: {calibrate_alpha():.0f})"))
 
-    # variant clusters vs their demand tables (sections 6-7)
-    t1 = time.perf_counter()
-    m_measured, m_model, skips, noops = measure_mencius()
-    s_measured, s_model = measure_spaxos()
-    wall_us = (time.perf_counter() - t1) * 1e6
-    rows.append(("msgcount/variant_cluster_run", wall_us,
-                 "mencius + spaxos end-to-end"))
-    rows.append(_parity_row("msgcount/mencius_parity", m_measured, m_model,
-                            note=f"{skips} skip ranges / {noops} noop slots "
-                                 f"fed back into the table's skip knobs"))
-    rows.append(_parity_row("msgcount/spaxos_parity", s_measured, s_model,
-                            note="leader exactly 2: ids only, no payloads"))
+    if failures:
+        raise AssertionError(
+            "measured-vs-analytical parity failed:\n" + "\n".join(failures))
     return rows

@@ -6,7 +6,7 @@
   fig32  weakly consistent reads
   fig33  skew tolerance vs CRAQ (incl. scripted skew ramp)
   failover  transient dynamics: leader crash, mid-run scale-up, batch fill
-  msgcount  measured per-role message counts (validates the demand tables)
+  msgcount  measured-vs-analytical parity per executable variant (registry loop)
   sweep  whole-surface config sweep + budget autotune (one jitted call)
   variants  protocol-variant plane: Mencius + S-Paxos vs baselines (Figs. 24-28)
   roofline  dry-run roofline readout (40 cells x 2 meshes)
@@ -66,8 +66,10 @@ benchmarks (label: paper target, typical runtime on one CPU core):
             scale-up migrating the bottleneck, batch fill ramp
             B:1->100, bursty-arrival p99 via Workload(arrival=
             "bursty"), and p99-under-crash autotuning            (~30 s)
-  msgcount  section 3  measured per-role message counts on the real
-            protocol cluster (validates every demand table)     (~30 s)
+  msgcount  sections 3/6/7  measured-vs-analytical msgs/cmd parity for
+            every executable variant (one registry loop: executes the
+            real clusters, checks linearizability, validates every
+            demand table; BENCH_SMOKE=1 shrinks = make parity-smoke) (~10 s)
   sweep     section 9  "how should a system be compartmentalized":
             300-config surface in one jitted call + budget-19
             autotune for three workload mixes                   (~5 s)

@@ -16,10 +16,15 @@ Four checks over README.md, docs/*.md and benchmarks/README.md:
   ``variants=("...", ...)`` snippet must be registered in the
   ``repro.core.api`` variant registry (names a snippet itself registers
   via ``register_variant(... name="...")`` are exempt, so the
-  add-a-variant walkthrough can introduce new ones).
+  add-a-variant walkthrough can introduce new ones);
+* **executable-variant names** - every variant a doc snippet *executes*
+  (``run_variant("...")`` / ``validate_variant("...")``) must declare an
+  execution plane in the registry (doc-locally registered names, via
+  ``register_variant`` or ``register_executable``, are exempt).
 
-The registry is loaded through a synthetic two-module package
-(``api.py`` + ``analytical.py``) so this script never imports JAX.
+The registry is loaded through a synthetic package (``api.py`` +
+``analytical.py`` + ``execution.py`` and the correctness-plane modules it
+pulls in - all stdlib) so this script never imports JAX.
 
 Keeps the paper->code map honest as the tree is refactored.
 """
@@ -57,6 +62,12 @@ QUOTED_NAME_RE = re.compile(r'"([a-z0-9_]+)"')
 # Workload(name="50pct_reads")) don't leak into the exemption set
 DOC_LOCAL_VARIANT_RE = re.compile(
     r'register_variant\([\s\S]{0,200}?name\s*=\s*"([a-z0-9_]+)"')
+# names a snippet executes must declare an execution plane; a snippet
+# attaching one itself (register_executable("name", ...)) is exempt
+EXECUTED_VARIANT_RE = re.compile(
+    r'(?:run_variant|validate_variant)\(\s*"([a-z0-9_]+)"')
+DOC_LOCAL_EXECUTABLE_RE = re.compile(
+    r'register_executable\(\s*"([a-z0-9_]+)"')
 
 
 def registered_labels() -> set[str]:
@@ -65,25 +76,22 @@ def registered_labels() -> set[str]:
     return set(MODULE_LABEL_RE.findall(text))
 
 
-def registry_variants() -> set[str]:
-    """Variant names registered in repro.core.api, loaded WITHOUT the
-    repro package __init__ chain (which would import JAX): api.py and
-    analytical.py are stitched into a synthetic package and analytical's
-    built-in ``register_variant`` calls run on import."""
+def registry_variants() -> tuple[set[str], set[str]]:
+    """(registered, executable) variant names from repro.core.api, loaded
+    WITHOUT the repro package __init__ chain (which would import JAX):
+    api.py, analytical.py and execution.py (plus the stdlib-only
+    correctness-plane modules execution pulls in through the package
+    machinery) are stitched into a synthetic package; the built-in
+    ``register_variant`` / ``register_executable`` calls run on import."""
     core = ROOT / "src" / "repro" / "core"
     pkg = types.ModuleType("_docscheck_core")
     pkg.__path__ = [str(core)]  # makes `from .api import ...` resolvable
     sys.modules["_docscheck_core"] = pkg
     try:
-        mods = {}
-        for name in ("api", "analytical"):
-            spec = importlib.util.spec_from_file_location(
-                f"_docscheck_core.{name}", core / f"{name}.py")
-            mod = importlib.util.module_from_spec(spec)
-            sys.modules[f"_docscheck_core.{name}"] = mod
-            spec.loader.exec_module(mod)
-            mods[name] = mod
-        return set(mods["api"].registered_variants())
+        for name in ("api", "analytical", "execution"):
+            importlib.import_module(f"_docscheck_core.{name}")
+        api = sys.modules["_docscheck_core.api"]
+        return set(api.registered_variants()), set(api.executable_variants())
     finally:
         for key in list(sys.modules):
             if key.startswith("_docscheck_core"):
@@ -94,7 +102,7 @@ def main() -> int:
     missing: list[tuple[Path, str]] = []
     checked = 0
     labels = registered_labels()
-    variants = registry_variants()
+    variants, executables = registry_variants()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -127,6 +135,15 @@ def main() -> int:
                                     f'variants=...{name!r} (not registered '
                                     f"in repro.core.api; known: "
                                     f"{sorted(variants)})"))
+        doc_local_exec = doc_local | set(DOC_LOCAL_EXECUTABLE_RE.findall(text))
+        for m in EXECUTED_VARIANT_RE.finditer(text):
+            name = m.group(1)
+            checked += 1
+            if name not in executables and name not in doc_local_exec:
+                missing.append((doc.relative_to(ROOT),
+                                f"{m.group(0)}...) (variant has no "
+                                f"registered execution plane; executable: "
+                                f"{sorted(executables)})"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

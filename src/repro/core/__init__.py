@@ -15,16 +15,30 @@ Performance plane (JAX, calibrated on the paper's anchors):
   simulator.mva_curve / fluid_throughput / des_throughput, transient.*
   scripted dynamics, sweep.* batched mixed-variant surfaces, autotune.*
   budget search (autotune_variants across protocols).
+
+The two planes meet in the registry: a variant that also declares an
+ExecutableSpec (register_executable) executes its real cluster through
+execution.run_variant - Workload-shaped traffic, linearizability check,
+measured per-station msgs/cmd in canonical STATION_ORDER slots - and
+execution.validate_variant reports measured-vs-analytical parity;
+calibrate_alpha(measured=True) anchors alpha on an executed vanilla run.
 """
 from .api import (
+    MIXED_50_50,
+    READ_HEAVY,
+    WRITE_ONLY,
+    ExecutableSpec,
     Knob,
     VariantSpec,
     Workload,
     as_f_write,
+    executable_variants,
     knob,
+    register_executable,
     register_variant,
     registered_variants,
     resolve_workload,
+    temporary_variants,
     unregister_variant,
     variant_spec,
 )
@@ -63,6 +77,15 @@ from .autotune import (
 )
 from .cluster import Network, Node
 from .craq import CraqDeployment
+from .execution import (
+    ExecutionTrace,
+    ParityReport,
+    StationParity,
+    default_config,
+    run_variant,
+    validate_variant,
+    workload_ops,
+)
 from .history import History, Operation
 from .linearizability import (
     check_linearizable,
@@ -113,12 +136,15 @@ from .transient import (
 from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
+    "MIXED_50_50", "READ_HEAVY", "WRITE_ONLY",
     "AppendLog", "AutotuneResult", "CRASH", "Command",
     "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
-    "DeploymentConfig", "DeploymentModel", "Event", "GridQuorums", "History",
+    "DeploymentConfig", "DeploymentModel", "Event", "ExecutableSpec",
+    "ExecutionTrace", "GridQuorums", "History",
     "KVStore", "Knob", "MajorityQuorums", "MenciusDeployment", "Network",
-    "Node", "Operation", "Register", "SPaxosDeployment", "STATION_ORDER",
-    "Station", "SweepSpec", "TraceStep", "TransientResult",
+    "Node", "Operation", "ParityReport", "Register", "SPaxosDeployment",
+    "STATION_ORDER", "Station", "StationParity", "SweepSpec", "TraceStep",
+    "TransientResult",
     "UnreplicatedStateMachine", "VARIANT_MODELS", "VariantAutotuneResult",
     "VariantChoice", "VariantSpec", "Workload",
     "ablation_steps", "as_f_write", "autotune", "autotune_variants",
@@ -126,16 +152,20 @@ __all__ = [
     "check_linearizable", "check_register_reads", "check_slot_order",
     "compartmentalized_model", "compile_models", "compile_sweep",
     "config_variant", "craq_chain_model", "craq_model",
-    "craq_station_demands", "des_throughput", "effective_batch_size",
+    "craq_station_demands", "default_config", "des_throughput",
+    "effective_batch_size", "executable_variants",
     "failover_schedule", "fluid_throughput", "fluid_throughput_batch",
     "full_compartmentalized", "grids_under", "knob", "make_state_machine",
     "mencius_model", "mencius_skip_storm_schedule", "mixed_workload_speedup",
     "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command", "read_scalability_law",
-    "register_variant", "registered_variants", "resolve_workload",
+    "register_executable", "register_variant", "registered_variants",
+    "resolve_workload", "run_variant",
     "scale_schedule", "schedule_from_demands", "simulate_transient",
     "spaxos_model", "spaxos_payload_ramp_schedule", "stack_demands",
-    "transient_throughput", "unregister_variant", "unreplicated_model",
-    "vanilla_mencius_model", "vanilla_multipaxos", "vanilla_spaxos_model",
-    "variant_candidate_configs", "variant_spec",
+    "temporary_variants", "transient_throughput", "unregister_variant",
+    "unreplicated_model",
+    "validate_variant", "vanilla_mencius_model", "vanilla_multipaxos",
+    "vanilla_spaxos_model",
+    "variant_candidate_configs", "variant_spec", "workload_ops",
 ]

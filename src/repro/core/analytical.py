@@ -459,24 +459,30 @@ def craq_chain_model(n_nodes: int = 3, skew_p: float = 0.0,
                      dirty_fraction: float = 0.0) -> DeploymentModel:
     """CRAQ as a static chain demand table for the variant sweep axis.
 
-    ``head``/``chain``/``tail`` stations carry the chain positions: writes
-    cost 4 messages on every node (+2 client-facing on the head); reads
-    are served locally unless they hit the hot key (probability
-    ``skew_p``) while it is dirty (``dirty_fraction``), in which case they
-    are forwarded to the tail.  This is :func:`craq_station_demands` with
-    the dirty busy-indicator supplied directly instead of solved as a
-    throughput fixed point - use :func:`craq_model` when you want the
-    fixed point (Fig. 33), this factory when you want CRAQ batched into a
-    mixed-variant sweep."""
+    ``head``/``chain``/``tail`` stations carry the chain positions.  The
+    counts are message-exact against ``repro.core.craq.CraqDeployment``
+    (the ``msgcount`` parity benchmark pins them): a write costs the head
+    4 messages (client request in, chain write down, ack back up, client
+    reply out), every interior node 4 (write + ack, both relayed), and
+    the tail 2 (write in, ack out).  A read costs its serving node 2
+    (request + reply *or* request + tail forward - same count either
+    way); a read that hits the hot key (probability ``skew_p``) while it
+    is dirty (``dirty_fraction``) and lands on a non-tail node is
+    additionally forwarded to the tail (+2 there).  This is the static
+    sibling of :func:`craq_station_demands`, which keeps the paper's
+    Fig. 33 parameterization and solves the dirty busy-indicator as a
+    throughput fixed point (:func:`craq_model`) - use that for Fig. 33,
+    this factory when you want CRAQ batched into a mixed-variant sweep."""
     k = n_nodes
     if k < 2:
         raise ValueError(f"a chain needs >= 2 nodes: {k}")
     p_fwd = skew_p * dirty_fraction
-    read_local = (1.0 - p_fwd) * 2.0 / k + p_fwd * 1.0 / k
-    stations = [Station("head", 1, 6.0, read_local)]
+    read_local = 2.0 / k  # uniformly addressed; served or forwarded, 2 msgs
+    stations = [Station("head", 1, 4.0, read_local)]
     if k > 2:
         stations.append(Station("chain", k - 2, 4.0, read_local))
-    stations.append(Station("tail", 1, 4.0, read_local + p_fwd * 2.0))
+    stations.append(
+        Station("tail", 1, 2.0, read_local + p_fwd * 2.0 * (k - 1) / k))
     return DeploymentModel(
         name=f"craq(k={k},p={skew_p:g},dirty={dirty_fraction:g})",
         stations=tuple(stations),
@@ -548,8 +554,32 @@ def craq_model(n_nodes: int, skew_p: float, f_write: float,
 
 def calibrate_alpha(anchor_throughput: float = PAPER_MULTIPAXOS_UNBATCHED,
                     model: Optional[DeploymentModel] = None,
-                    f_write: float = 1.0) -> float:
-    """alpha such that ``model`` peaks at ``anchor_throughput``."""
+                    f_write: float = 1.0,
+                    measured: bool = False,
+                    n_commands: int = 40,
+                    seed: int = 0) -> float:
+    """alpha such that the anchor deployment peaks at ``anchor_throughput``
+    (vanilla MultiPaxos = 25k cmd/s, paper Fig. 28).
+
+    With ``measured=False`` (default) the bottleneck demand comes from the
+    anchor's demand *table*.  With ``measured=True`` it is read off an
+    **executed** vanilla MultiPaxos run instead of a constant: the
+    ``multipaxos`` variant's registered execution plane
+    (``repro.core.execution.run_variant``) drives the real cluster and the
+    measured per-server messages per command of its bottleneck station
+    become the calibration denominator - the 25k anchor then rests on the
+    correctness plane, not on the table it is meant to validate.
+    ``measured=True`` requires the default anchor (``model=None``)."""
+    if measured:
+        if model is not None:
+            raise TypeError(
+                "calibrate_alpha: measured=True executes the registered "
+                "'multipaxos' anchor; pass model=None")
+        # lazy import: execution imports this module (no cycle at import)
+        from .execution import run_variant
+        trace = run_variant("multipaxos", workload=Workload(f_write=f_write),
+                            n_commands=n_commands, seed=seed)
+        return anchor_throughput * max(trace.station_msgs.values())
     model = model or multipaxos_model()
     _, d = model.bottleneck(f_write)
     return anchor_throughput * d

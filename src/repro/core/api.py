@@ -18,7 +18,12 @@ entire batched stack with **zero core-file edits**:
   same dense tensors as every built-in protocol,
 * ``autotune_variants`` searches it under a machine budget via its
   declared ``candidate_knobs``,
-* ``CompiledSweep.transient`` scripts it through time.
+* ``CompiledSweep.transient`` scripts it through time,
+* and - when the spec also declares an :class:`ExecutableSpec` - the
+  variant's **real cluster** executes, linearizability-checks and
+  measured-vs-analytical parity-checks through
+  ``repro.core.execution.run_variant`` / ``validate_variant``: two
+  planes, one registry.
 
 The second abstraction is :class:`Workload`: "90% reads, Zipf-skewed on a
 hot key, bursty arrivals, batches half full" is **one value passed once**
@@ -40,10 +45,11 @@ the scalar in a :class:`Workload`.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
 import warnings
 from collections import abc
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import (
     Any,
     Callable,
@@ -205,8 +211,60 @@ def resolve_workload(workload: Optional[Union["Workload", float]] = None,
 
 
 # ---------------------------------------------------------------------------
-# Knobs + VariantSpec: a protocol variant as a declaration
+# Knobs + VariantSpec + ExecutableSpec: a protocol variant as a declaration
 # ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ExecutableSpec:
+    """The *execution plane* of a variant: how to build and account for the
+    real (deterministic, message-level) cluster behind the demand table.
+
+    A variant with an executable is evaluated on **two planes from one
+    registration**: the analytical plane (its ``factory`` demand table,
+    swept/batched by ``repro.core.sweep``) and the execution plane (a real
+    protocol cluster driven by ``repro.core.execution.run_variant``, whose
+    measured per-station messages per command are parity-checked against
+    the table by ``validate_variant``).
+
+    * ``deployment(**config, n_clients=..., seed=...)`` builds the cluster
+      (a ``repro.core.protocols.BaseDeployment``) from the **same
+      canonical config dict** the analytical factory consumes (model-only
+      knobs such as ``payload_factor`` are accepted and ignored);
+    * ``station_of(addr, deployment) -> station | None`` buckets a node
+      address into the canonical station vocabulary (``None`` = not a
+      station, e.g. clients).  Default: the ``role/<i>`` address prefix
+      when it names a declared station;
+    * ``model_feedback(model_config, trace) -> model_config`` optionally
+      feeds *measured* run statistics back into the demand table before
+      the parity comparison (Mencius: the observed noop-skip rate and the
+      per-command frontier announcements; CRAQ: the observed dirty-read
+      forwarding fraction) so the comparison is apples-to-apples;
+    * ``rel_tolerance`` / ``station_tolerances`` bound the allowed
+      relative error per station (data, not code - the parity loop stays
+      generic); ``exact_stations`` must match to 1e-9 (S-Paxos' leader:
+      exactly 2 id-only msgs/cmd);
+    * ``reads_as_writes`` - the protocol has no separate read path (the
+      paper's vanilla baselines: reads go through the log like writes),
+      so the harness drives reads as writes to match the table;
+    * ``n_clients`` is the default closed-loop client population.
+    """
+
+    deployment: Callable[..., Any]
+    station_of: Optional[Callable[[str, Any], Optional[str]]] = None
+    model_feedback: Optional[Callable[[Config, Any], Config]] = None
+    rel_tolerance: float = 0.15
+    station_tolerances: Tuple[Tuple[str, float], ...] = ()
+    exact_stations: Tuple[str, ...] = ()
+    reads_as_writes: bool = False
+    n_clients: int = 3
+    description: str = ""
+
+    def tolerance_for(self, station: str) -> float:
+        for name, tol in self.station_tolerances:
+            if name == station:
+                return tol
+        return self.rel_tolerance
 
 
 @dataclass(frozen=True)
@@ -272,7 +330,12 @@ class VariantSpec:
     * ``candidate_knobs(budget, f) -> {knob name: values}`` - optional
       knob-space generator for the budgeted cross-variant autotuner
       (``autotune_variants``); variants without one contribute their
-      default knob product (a single config for knobless baselines).
+      default knob product (a single config for knobless baselines);
+    * ``executable`` - the optional :class:`ExecutableSpec` execution
+      plane: declare it (here or later via :func:`register_executable`)
+      and the variant's real cluster runs, linearizability-checks and
+      parity-checks through ``repro.core.execution`` with zero core-file
+      edits.
     """
 
     name: str
@@ -284,6 +347,7 @@ class VariantSpec:
     workload_adapter: Optional[Callable[[Config, "Workload"], Config]] = None
     candidate_knobs: Optional[
         Callable[[int, int], Mapping[str, Sequence[Any]]]] = None
+    executable: Optional[ExecutableSpec] = None
     description: str = ""
 
     def __post_init__(self) -> None:
@@ -448,6 +512,33 @@ def unregister_variant(name: str) -> None:
     del _REGISTRY[name]
 
 
+def register_executable(name: str,
+                        executable: Optional[ExecutableSpec] = None,
+                        *, override: bool = False,
+                        **kwargs: Any) -> ExecutableSpec:
+    """Attach an execution plane to an already-registered variant.
+
+    Either pass an :class:`ExecutableSpec` or its keyword fields.  The
+    variant's :class:`VariantSpec` is replaced in the registry with one
+    carrying the executable; station slots are untouched.  Replacing an
+    existing executable requires ``override=True``."""
+    spec = variant_spec(name)
+    if executable is None:
+        executable = ExecutableSpec(**kwargs)
+    elif kwargs:
+        raise TypeError("pass either an ExecutableSpec or keyword fields, "
+                        "not both")
+    if not isinstance(executable, ExecutableSpec):
+        raise TypeError(
+            f"expected an ExecutableSpec, got {type(executable).__name__}")
+    if spec.executable is not None and not override:
+        raise ValueError(
+            f"variant {name!r} already declares an executable; pass "
+            f"override=True to replace it")
+    _REGISTRY[name] = replace(spec, executable=executable)
+    return executable
+
+
 def variant_spec(name: str) -> VariantSpec:
     """Look up a registered variant (ValueError names the known set)."""
     try:
@@ -460,6 +551,31 @@ def variant_spec(name: str) -> VariantSpec:
 def registered_variants() -> Tuple[str, ...]:
     """Registered variant names, in registration order."""
     return tuple(_REGISTRY)
+
+
+def executable_variants() -> Tuple[str, ...]:
+    """Names of variants that declare an execution plane, in registration
+    order - the domain of ``repro.core.execution.run_variant`` /
+    ``validate_variant`` and of the ``msgcount`` parity benchmark's
+    zero-branch loop."""
+    return tuple(n for n, s in _REGISTRY.items() if s.executable is not None)
+
+
+@contextlib.contextmanager
+def temporary_variants() -> Iterator[None]:
+    """Scope runtime registrations: on exit the registry is restored to
+    its entry snapshot, so a test's ``register_variant`` /
+    ``register_executable`` calls cannot leak into other tests' registry
+    views.  Station slots allocated inside the scope stay allocated - the
+    station vocabulary is append-only because compiled demand tensors
+    address columns by index (re-registering the same variant later
+    reuses its columns)."""
+    snapshot = dict(_REGISTRY)
+    try:
+        yield
+    finally:
+        _REGISTRY.clear()
+        _REGISTRY.update(snapshot)
 
 
 class _StationOrder(abc.Sequence):

@@ -160,6 +160,12 @@ class CraqClient(Node):
         self.history = history
         self.rng = random.Random(seed * 7 + client_id)
         self.reads_anywhere = reads_anywhere
+        # CRAQ reads are uniformly addressed.  A shuffled balanced deck
+        # realizes that exactly over every window of k reads (keeping
+        # measured per-node read load parity-comparable at small op
+        # counts) while staying aperiodic, so the deterministic write
+        # pipeline's dirty windows still get sampled.
+        self._read_deck: List[int] = []
         self.seq = 0
         self.ops: List[Tuple] = []
         self.op_index = 0
@@ -183,8 +189,13 @@ class CraqClient(Node):
         self.seq += 1
         self.outstanding = (cmd, hist_id)
         if op[0] == "get":
-            node = (self.chain[self.rng.randrange(len(self.chain))]
-                    if self.reads_anywhere else self.chain[-1])
+            if self.reads_anywhere:
+                if not self._read_deck:
+                    self._read_deck = list(range(len(self.chain)))
+                    self.rng.shuffle(self._read_deck)
+                node = self.chain[self._read_deck.pop()]
+            else:
+                node = self.chain[-1]
             self.send(node, ChainRead(command=cmd))
         else:
             self.send(self.chain[0], ClientRequest(command=cmd))

@@ -57,7 +57,7 @@ class BaseDeployment:
 
     net: Network
     history: History
-    clients: List[Client]
+    clients: List[Any]
 
     def run_to_quiescence(self, max_steps: int = 2_000_000) -> int:
         return self.net.run(max_steps=max_steps)
@@ -67,6 +67,16 @@ class BaseDeployment:
 
     def results_of(self, client_index: int) -> List[Any]:
         return self.clients[client_index].results
+
+    def total_messages(self) -> Dict[str, int]:
+        """Total (sent + received) messages per role, keyed by the
+        ``role/<i>`` address prefix - uniform across every deployment
+        (MultiPaxos, Mencius, S-Paxos, CRAQ chains, unreplicated)."""
+        out: Dict[str, int] = {}
+        for addr, node in self.net.nodes.items():
+            role = addr.split("/")[0]
+            out[role] = out.get(role, 0) + node.msgs_received + node.msgs_sent
+        return out
 
 
 class CompartmentalizedMultiPaxos(BaseDeployment):
@@ -164,13 +174,6 @@ class CompartmentalizedMultiPaxos(BaseDeployment):
             if l.active:
                 self.net.crash(l.addr)
         self.leaders[to_leader].become_leader()
-
-    def total_messages(self) -> Dict[str, int]:
-        out: Dict[str, int] = {}
-        for addr, node in self.net.nodes.items():
-            role = addr.split("/")[0]
-            out[role] = out.get(role, 0) + node.msgs_received + node.msgs_sent
-        return out
 
 
 def vanilla_multipaxos(f: int = 1, n_clients: int = 1, seed: int = 0,

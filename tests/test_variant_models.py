@@ -4,7 +4,9 @@ Three layers of pinning:
 
 1. **Message-count parity** - the Mencius / S-Paxos demand tables must
    match the per-station messages per command *measured* on the
-   correctness-plane clusters (``benchmarks/protocol_messages.py`` logic).
+   correctness-plane clusters, via the generic two-plane harness
+   (``repro.core.execution.validate_variant`` - the same zero-branch loop
+   ``benchmarks/protocol_messages.py`` runs).
 2. **Batched == scalar** - a mixed-variant ``compile_sweep`` grid must
    agree elementwise with the per-model bottleneck law and MVA, in one
    jitted call.
@@ -14,7 +16,6 @@ Three layers of pinning:
 import numpy as np
 import pytest
 
-from benchmarks.protocol_messages import measure_mencius, measure_spaxos
 from repro.core import (
     STATION_ORDER,
     SweepSpec,
@@ -32,6 +33,7 @@ from repro.core import (
     simulate_transient,
     spaxos_model,
     spaxos_payload_ramp_schedule,
+    validate_variant,
     vanilla_mencius_model,
     vanilla_spaxos_model,
 )
@@ -47,30 +49,38 @@ ALPHA = calibrate_alpha()
 def test_mencius_demands_match_measured_messages():
     """Measured per-station msgs/cmd of a balanced 3-leader Mencius run vs
     the demand table with the run's own announce/skip parameters fed back
-    in.  Leader/acceptor/replica parity is message-exact; the proxy gets a
-    margin for range-path edge messages."""
-    measured, model, n_ranges, n_noops = measure_mencius(n_ops_per_client=15)
-    assert n_ranges > 0  # interleaved arrivals force some noop fills
+    in (the registered ``model_feedback``): message-exact on
+    leader/acceptor/replica, the proxy within its declared range-path
+    margin."""
+    report = validate_variant("mencius", workload=Workload(),
+                              n_commands=45, seed=0)
+    assert report.passed, str(report)
+    # interleaved arrivals force some noop fills, and the feedback must
+    # have read them off the run into the table's skip knobs
+    assert report.model_config["announce_interval"] == 1.0
+    assert report.model_config.get("skip_fraction", 0.0) > 0.0
     for station in ("leader", "acceptor", "replica"):
-        assert measured[station] == pytest.approx(model[station], rel=0.10), \
-            station
-    assert measured["proxy"] == pytest.approx(model["proxy"], rel=0.20)
+        assert report.row(station).rel_err <= 0.10, str(report)
 
 
 def test_spaxos_demands_match_measured_messages():
     """S-Paxos parity is tight on every station - the deployment's write
     path is the table's write path message for message."""
-    measured, model = measure_spaxos(n_ops_per_client=15)
-    for station, got in measured.items():
-        assert got == pytest.approx(model[station], rel=0.20), station
+    report = validate_variant("spaxos", workload=Workload(),
+                              n_commands=45, seed=0)
+    assert report.passed, str(report)
+    assert report.max_rel_err() <= 0.10
 
 
 def test_spaxos_leader_orders_ids_only():
     """The measured leader cost must be exactly 2 msgs/cmd (ProposeId in,
     Phase2a(id) out) - and the table's leader demand must not scale with
     the payload factor."""
-    measured, _ = measure_spaxos(n_ops_per_client=10)
-    assert measured["leader"] == pytest.approx(2.0, abs=1e-9)
+    report = validate_variant("spaxos", workload=Workload(),
+                              n_commands=30, seed=0)
+    leader = report.row("leader")
+    assert leader.exact  # the registered executable declares it exact
+    assert leader.measured == pytest.approx(2.0, abs=1e-9)
     for payload in (1.0, 8.0, 64.0):
         assert spaxos_model(payload_factor=payload).demands()["leader"] == 2.0
 

@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke parity-smoke examples-smoke docs-links check ci clean
+.PHONY: test bench-smoke parity-smoke measured-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -15,6 +15,13 @@ test:
 # fails on any station outside its declared tolerance
 parity-smoke:
 	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only msgcount
+
+# the batched execution plane, shrunk: a (config x seed) grid of
+# closed-loop client populations measured in ONE jitted device call
+# (CompiledSweep.execute), plus validate_batched parity for every
+# executable variant - fails on any station outside its tolerance
+measured-smoke:
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only measured
 
 # cheap figures + the sweep, transient and variant engines: exercises the
 # batched MVA kernel, the stochastic scan engine (failover benchmark), the
@@ -38,12 +45,13 @@ examples-smoke:
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test parity-smoke bench-smoke examples-smoke
+check: docs-links test parity-smoke measured-smoke bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
 	JAX_PLATFORMS=cpu $(MAKE) test
 	JAX_PLATFORMS=cpu $(MAKE) parity-smoke
+	JAX_PLATFORMS=cpu $(MAKE) measured-smoke
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
 	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 

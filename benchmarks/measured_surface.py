@@ -1,0 +1,98 @@
+"""Measured surfaces from the batched execution plane - "measured" at the
+cost of "modelled".
+
+The scalar measured plane (``msgcount``) validates one config at a time by
+running a Python event loop.  This module shows the tentpole claim of the
+batched plane: a whole (config x seed) grid of *closed-loop client
+populations* executes in ONE jitted device call
+(:meth:`repro.core.sweep.CompiledSweep.execute`), emitting measured
+per-station msgs/cmd and latency p50/p99 histograms - the same call shape
+as ``.mva`` and ``.transient``, so "three calls, one registry" covers
+modelled steady state, modelled dynamics, and measurement.
+
+Rows:
+  * one grid row per config: measured msgs/cmd at the bottleneck station
+    vs the MVA demand table's prediction (the worked measured-vs-MVA
+    comparison cited in docs/PERFORMANCE_MODEL.md);
+  * cross-plane agreement: ``validate_batched`` for every executable
+    variant at the 50/50 mix - fails the run on any station outside its
+    registered tolerance;
+  * the latency surface: batched p50/p99 next to the MVA residence time
+    at the same client count.
+
+``BENCH_SMOKE=1`` (set by ``make measured-smoke``) shrinks the grid and
+command counts.
+"""
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    MIXED_50_50,
+    Workload,
+    calibrate_alpha,
+    executable_variants,
+    validate_batched,
+)
+from repro.core.sweep import SweepSpec, compile_sweep
+
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def run():
+    rows = []
+    failures = []
+    w = MIXED_50_50
+    n_commands = 24 if SMOKE else 48
+    seeds = 2 if SMOKE else 4
+    alpha = calibrate_alpha()
+
+    # -- the grid: >= 8 configs x seeds of closed-loop clients, ONE call --
+    sw = compile_sweep(SweepSpec(
+        variants=("compartmentalized", "multipaxos"),
+        n_proxy_leaders=(2, 3) if SMOKE else (2, 3, 4, 5),
+        n_replicas=(2,) if SMOKE else (2, 3)))
+    t0 = time.perf_counter()
+    res = sw.execute(workload=w, n_commands=n_commands, seeds=seeds)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        "measured/grid_one_call", wall_us,
+        f"{len(res)} configs x {len(res.seeds)} seeds x "
+        f"{res.n_clients} clients x {n_commands} cmds in one device call "
+        f"({res.n_steps} steps); all lanes drained: "
+        f"{bool(np.all(res.completed == n_commands))}"))
+
+    demands = sw.demands(w)  # [M, K] the MVA plane's table
+    for m in range(len(res)):
+        station_row = res.station_row(m)
+        bot = max(station_row, key=station_row.get)
+        measured = station_row[bot]
+        predicted = float(demands[m].max())
+        rows.append((
+            f"measured/grid_{m}_{res.variant(m)}", 0.0,
+            f"bottleneck {bot}: measured {measured:.3f} vs MVA table "
+            f"{predicted:.3f} msgs/cmd "
+            f"(p50 {res.latency_p50[m].mean() * 1e6:.1f}us, "
+            f"p99 {res.latency_p99[m].mean() * 1e6:.1f}us, "
+            f"measured peak ~ {alpha / max(measured, 1e-12):.0f} cmd/s)"))
+
+    # -- cross-plane parity: every executable, batched vs its table -------
+    for name in executable_variants():
+        t0 = time.perf_counter()
+        rep = validate_batched(name, workload=w, n_commands=n_commands,
+                               seeds=seeds)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        verdict = "PASS" if rep.passed else "FAIL"
+        rows.append((
+            f"measured/{name}_parity", wall_us,
+            f"{verdict} max rel err {rep.max_rel_err():.3f} over "
+            f"{len(rep.rows)} stations"))
+        if not rep.passed:
+            failures.append(str(rep))
+
+    if failures:
+        raise AssertionError(
+            "batched measured-vs-analytical parity failed:\n"
+            + "\n".join(failures))
+    return rows

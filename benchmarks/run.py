@@ -7,6 +7,8 @@
   fig33  skew tolerance vs CRAQ (incl. scripted skew ramp)
   failover  transient dynamics: leader crash, mid-run scale-up, batch fill
   msgcount  measured-vs-analytical parity per executable variant (registry loop)
+  measured  batched execution plane: a config x seed grid of closed-loop
+            clients measured in ONE jitted device call
   sweep  whole-surface config sweep + budget autotune (one jitted call)
   variants  protocol-variant plane: Mencius + S-Paxos vs baselines (Figs. 24-28)
   roofline  dry-run roofline readout (40 cells x 2 meshes)
@@ -24,6 +26,7 @@ from . import (
     ablation,
     failover,
     latency_throughput,
+    measured_surface,
     protocol_messages,
     read_scalability,
     roofline_report,
@@ -41,6 +44,7 @@ MODULES = [
     ("fig33", skew),
     ("failover", failover),
     ("msgcount", protocol_messages),
+    ("measured", measured_surface),
     ("sweep", sweep),
     ("variants", variants),
     ("roofline", roofline_report),
@@ -70,6 +74,13 @@ benchmarks (label: paper target, typical runtime on one CPU core):
             every executable variant (one registry loop: executes the
             real clusters, checks linearizability, validates every
             demand table; BENCH_SMOKE=1 shrinks = make parity-smoke) (~10 s)
+  measured  batched execution plane: a config x seed grid of closed-loop
+            client populations runs in ONE jitted device call
+            (CompiledSweep.execute) with probe-calibrated per-station
+            costs; measured msgs/cmd vs the MVA table per grid row,
+            validate_batched parity for every executable variant, and
+            batched latency p50/p99 off the Pallas histogram kernel;
+            BENCH_SMOKE=1 shrinks = make measured-smoke            (~15 s)
   sweep     section 9  "how should a system be compartmentalized":
             300-config surface in one jitted call + budget-19
             autotune for three workload mixes                   (~5 s)

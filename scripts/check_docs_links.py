@@ -18,9 +18,14 @@ Four checks over README.md, docs/*.md and benchmarks/README.md:
   via ``register_variant(... name="...")`` are exempt, so the
   add-a-variant walkthrough can introduce new ones);
 * **executable-variant names** - every variant a doc snippet *executes*
-  (``run_variant("...")`` / ``validate_variant("...")``) must declare an
-  execution plane in the registry (doc-locally registered names, via
-  ``register_variant`` or ``register_executable``, are exempt).
+  (``run_variant("...")`` / ``validate_variant("...")``, or their batched
+  siblings ``run_variant_batched`` / ``validate_batched``) must declare
+  an execution plane in the registry (doc-locally registered names, via
+  ``register_variant`` or ``register_executable``, are exempt);
+* **batched-plane names** - every ``batched_execution.<name>`` a doc
+  cites must be a def/class in ``src/repro/core/batched_execution.py``.
+  That module imports JAX, so it cannot join the synthetic stdlib-only
+  package below - its surface is checked by regex over the source.
 
 The registry is loaded through a synthetic package (``api.py`` +
 ``analytical.py`` + ``execution.py`` and the correctness-plane modules it
@@ -65,9 +70,22 @@ DOC_LOCAL_VARIANT_RE = re.compile(
 # names a snippet executes must declare an execution plane; a snippet
 # attaching one itself (register_executable("name", ...)) is exempt
 EXECUTED_VARIANT_RE = re.compile(
-    r'(?:run_variant|validate_variant)\(\s*"([a-z0-9_]+)"')
+    r'(?:run_variant_batched|validate_batched|run_variant|validate_variant)'
+    r'\(\s*"([a-z0-9_]+)"')
 DOC_LOCAL_EXECUTABLE_RE = re.compile(
     r'register_executable\(\s*"([a-z0-9_]+)"')
+# docs cite the batched plane as batched_execution.<name>; the module
+# imports JAX, so its public surface is scraped from source, not imported
+BATCHED_REF_RE = re.compile(
+    r"batched_execution\.(?!py\b)([A-Za-z_][A-Za-z0-9_]*)")
+DEF_OR_CLASS_RE = re.compile(r"^(?:def|class)\s+([A-Za-z_][A-Za-z0-9_]*)",
+                             re.MULTILINE)
+
+
+def batched_api() -> set[str]:
+    """Top-level def/class names in the batched execution module."""
+    src = (ROOT / "src" / "repro" / "core" / "batched_execution.py")
+    return set(DEF_OR_CLASS_RE.findall(src.read_text()))
 
 
 def registered_labels() -> set[str]:
@@ -103,6 +121,7 @@ def main() -> int:
     checked = 0
     labels = registered_labels()
     variants, executables = registry_variants()
+    batched_names = batched_api()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -144,6 +163,12 @@ def main() -> int:
                                 f"{m.group(0)}...) (variant has no "
                                 f"registered execution plane; executable: "
                                 f"{sorted(executables)})"))
+        for m in BATCHED_REF_RE.finditer(text):
+            checked += 1
+            if m.group(1) not in batched_names:
+                missing.append((doc.relative_to(ROOT),
+                                f"{m.group(0)} (no such def/class in "
+                                f"src/repro/core/batched_execution.py)"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

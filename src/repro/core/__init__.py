@@ -22,6 +22,10 @@ execution.run_variant - Workload-shaped traffic, linearizability check,
 measured per-station msgs/cmd in canonical STATION_ORDER slots - and
 execution.validate_variant reports measured-vs-analytical parity;
 calibrate_alpha(measured=True) anchors alpha on an executed vanilla run.
+batched_execution.* lowers those execution planes into the transient
+plane's jitted scan - run_variant_batched / CompiledSweep.execute run a
+whole (config x seed) grid of closed-loop clients in one device call and
+emit measured msgs/cmd + latency histograms (validate_batched for parity).
 """
 from .api import (
     MIXED_50_50,
@@ -64,6 +68,13 @@ from .analytical import (
     unreplicated_model,
     vanilla_mencius_model,
     vanilla_spaxos_model,
+)
+from .batched_execution import (
+    BatchedExecutionResult,
+    BatchedParityReport,
+    execute_configs,
+    run_variant_batched,
+    validate_batched,
 )
 from .autotune import (
     AutotuneResult,
@@ -137,7 +148,8 @@ from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
     "MIXED_50_50", "READ_HEAVY", "WRITE_ONLY",
-    "AppendLog", "AutotuneResult", "CRASH", "Command",
+    "AppendLog", "AutotuneResult", "BatchedExecutionResult",
+    "BatchedParityReport", "CRASH", "Command",
     "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
     "DeploymentConfig", "DeploymentModel", "Event", "ExecutableSpec",
     "ExecutionTrace", "GridQuorums", "History",
@@ -153,6 +165,7 @@ __all__ = [
     "compartmentalized_model", "compile_models", "compile_sweep",
     "config_variant", "craq_chain_model", "craq_model",
     "craq_station_demands", "default_config", "des_throughput",
+    "execute_configs",
     "effective_batch_size", "executable_variants",
     "failover_schedule", "fluid_throughput", "fluid_throughput_batch",
     "full_compartmentalized", "grids_under", "knob", "make_state_machine",
@@ -160,12 +173,13 @@ __all__ = [
     "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command", "read_scalability_law",
     "register_executable", "register_variant", "registered_variants",
-    "resolve_workload", "run_variant",
+    "resolve_workload", "run_variant", "run_variant_batched",
     "scale_schedule", "schedule_from_demands", "simulate_transient",
     "spaxos_model", "spaxos_payload_ramp_schedule", "stack_demands",
     "temporary_variants", "transient_throughput", "unregister_variant",
     "unreplicated_model",
-    "validate_variant", "vanilla_mencius_model", "vanilla_multipaxos",
+    "validate_batched", "validate_variant",
+    "vanilla_mencius_model", "vanilla_multipaxos",
     "vanilla_spaxos_model",
     "variant_candidate_configs", "variant_spec", "workload_ops",
 ]

@@ -1,0 +1,586 @@
+"""Batched closed-loop execution: "measured" as cheap as "modelled".
+
+:func:`repro.core.execution.run_variant` is the ground truth of the
+measured plane - a Python event loop over a real message-passing cluster,
+linearizability-checked, ~milliseconds per few dozen commands.  Perfect
+for parity smoke, hopeless for *surfaces*: the paper's measured
+throughput/latency figures sweep config grids x client populations, and
+the analytical planes (:meth:`CompiledSweep.mva`, ``.transient``) already
+answer those in one jitted call each.  This module closes the gap: it
+lowers a registered variant's execution plane into the same
+``lax.scan``-over-steps / ``vmap``-over-(config x seed) shape
+:mod:`repro.core.transient` uses, so a whole grid of closed-loop client
+populations executes in ONE device call and emits *measured* per-station
+msgs/cmd plus latency p50/p99 histograms.
+
+How "measured" stays honest
+---------------------------
+The per-station message costs are **probe-calibrated, not copied from the
+table**: for each config the real cluster runs once write-only and (for
+mixed workloads) once at the target mix through :func:`run_variant`, at a
+probe size and seed disjoint from anything the parity tests compare
+against.  The probes yield per-class per-station msgs/cmd vectors
+``cost_write``/``cost_read``; the jitted engine then *executes* the
+client populations - every lane realizes exactly
+``round(n_commands * f_write)`` writes, shuffled per seed and split
+round-robin across clients, mirroring :func:`workload_ops` - and the
+measured surface is the completion-weighted blend of the probed costs.
+Cross-plane agreement with ``run_variant`` at different sizes and seeds
+(within each :class:`~repro.core.api.ExecutableSpec`'s tolerances, exact
+on its ``exact_stations``) is pinned by ``tests/test_batched_execution``.
+
+The engine itself mirrors ``transient._one_lane``: stations are FIFO
+queues draining work at ``dt / d_k`` per step, with the service demand
+chosen per the *class of the command at the head* (writes traverse the
+write path's demands, reads the read path's), commands walking the active
+stations in canonical slot order.  Clients park once their op budget
+drains, so the run has a makespan - measured throughput is
+``n_commands / t_last`` - and every completion emits a latency sample;
+the samples are histogrammed post-scan by the Pallas
+:func:`repro.kernels.ops.latency_hist` kernel with the transient plane's
+binning, so p50/p99 read identically across planes.
+
+Entry points: :func:`run_variant_batched` (one config),
+:func:`execute_configs` (any config list, e.g. a sweep's),
+:meth:`repro.core.sweep.CompiledSweep.execute` (the compiled-grid method),
+and :func:`validate_batched` (measured-vs-analytical parity on the
+batched surface, the ``validate_variant`` analogue).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .analytical import STATION_ORDER, calibrate_alpha
+from .api import Config, Workload, resolve_workload, variant_spec
+from .execution import StationParity, default_config, run_variant
+from .sweep import config_variant
+from .transient import _quantile_from_hist
+from ..kernels.ops import latency_hist
+
+__all__ = [
+    "BatchedExecutionResult", "BatchedParityReport", "execute_configs",
+    "run_variant_batched", "validate_batched",
+]
+
+
+# ---------------------------------------------------------------------------
+# Probe calibration: per-class per-station msgs/cmd off the real cluster
+# ---------------------------------------------------------------------------
+
+
+def _probe_costs(name: str, cfg: Config, w: Workload, exe: Any,
+                 probe_n: int, probe_seed: int, state_machine: str
+                 ) -> Tuple[np.ndarray, np.ndarray, Any]:
+    """Calibrate (cost_write[K], cost_read[K], feedback_trace) for one
+    config by executing the real cluster.
+
+    The write costs come from a write-only probe run.  Read costs come
+    from a probe at the *target* mix, decomposed against the write probe -
+    so read-path costs that only exist under concurrent writers (CRAQ's
+    dirty-read forwarding) are captured at the mix they occur at."""
+    k = len(STATION_ORDER)
+    t_w = run_variant(name, cfg, replace(w, f_write=1.0),
+                      n_commands=probe_n, seed=probe_seed,
+                      state_machine=state_machine)
+    cost_w = np.asarray(t_w.demand_slots(), dtype=np.float64)[:k]
+    if exe.reads_as_writes or w.f_write >= 1.0:
+        return cost_w, cost_w.copy(), t_w
+    t_mix = run_variant(name, cfg, w, n_commands=probe_n,
+                        seed=probe_seed + 1, state_machine=state_machine)
+    mix = np.asarray(t_mix.demand_slots(), dtype=np.float64)[:k]
+    n_wr, n_rd = t_mix.n_writes, probe_n - t_mix.n_writes
+    if n_rd == 0:
+        return cost_w, cost_w.copy(), t_mix
+    cost_r = np.maximum((mix * probe_n - cost_w * n_wr) / n_rd, 0.0)
+    return cost_w, cost_r, t_mix
+
+
+def _class_streams(n_commands: int, f_write: float, n_clients: int,
+                   seeds: np.ndarray, base_seed: int
+                   ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Per-seed per-client op-class streams: exactly
+    ``round(n_commands * f_write)`` writes (class 1), shuffled per seed
+    and split round-robin across clients - the same realized mix
+    :func:`repro.core.execution.workload_ops` produces, so the write
+    count is seed-independent.  Returns (cls[S, N, L] int32,
+    budget[N] int32, n_writes)."""
+    n_w = round(n_commands * f_write)
+    length = max(-(-n_commands // n_clients), 1)
+    cls = np.zeros((len(seeds), n_clients, length), dtype=np.int32)
+    budget = np.zeros((n_clients,), dtype=np.int32)
+    for i in range(n_commands):
+        budget[i % n_clients] += 1
+    for si, s in enumerate(seeds):
+        flags = np.array([1] * n_w + [0] * (n_commands - n_w), np.int32)
+        np.random.default_rng([base_seed, int(s)]).shuffle(flags)
+        pos = np.zeros((n_clients,), dtype=np.int64)
+        for i in range(n_commands):
+            c = i % n_clients
+            cls[si, c, pos[c]] = flags[i]
+            pos[c] += 1
+    return cls, budget, n_w
+
+
+# ---------------------------------------------------------------------------
+# The jitted scan engine (one lane = one config x seed client population)
+# ---------------------------------------------------------------------------
+
+
+def _one_exec_lane(d_w, d_r, entry, nxt, cls_stream, budget, dt, key,
+                   n_steps: int, n_clients: int, exponential: bool):
+    """d_w/d_r: [K] per-class service seconds; nxt: [K] tandem routing;
+    cls_stream: [N, L] int32 op classes per client; budget: [N]."""
+    k = d_w.shape[0]
+    n_ops = cls_stream.shape[1]
+    if exponential:
+        draws = jax.random.exponential(key, (n_steps + 1, k))
+    else:
+        draws = jnp.ones((n_steps + 1, k))
+
+    finishes_at = nxt == k
+    arrive_at = jnp.where(finishes_at, entry, nxt)
+
+    alive0 = budget > 0
+    stage0 = jnp.where(alive0, entry, k).astype(jnp.int32)  # k = parked
+    rank0 = jnp.cumsum(alive0.astype(jnp.int32)) - 1
+    enter0 = jnp.zeros((n_clients,))
+    q0 = (jnp.zeros((k,), jnp.int32)
+          .at[entry].add(jnp.sum(alive0.astype(jnp.int32))))
+    work0 = jnp.zeros((k,)).at[entry].set(draws[0, entry])
+
+    def step(state, xs):
+        stage, rank, enter_t, op_i, q, work, done_w, done_r, t_last = state
+        i, draw_i = xs
+        t_end = (i + 1).astype(work.dtype) * dt
+
+        cls_cur = jnp.take_along_axis(
+            cls_stream, jnp.clip(op_i, 0, n_ops - 1)[:, None], axis=1)[:, 0]
+        # the head command's class picks each station's service demand
+        # (parked clients sit at stage == k and scatter out of bounds)
+        head_cls = (jnp.zeros((k,), jnp.int32)
+                    .at[stage].add(jnp.where(rank == 0, cls_cur, 0),
+                                   mode="drop"))
+        d_now = jnp.where(head_cls > 0, d_w, d_r)
+        # a zero demand for the head's class (a read at the leader) drains
+        # instantly - still one completion per step, like transient.py
+        rate = jnp.where(d_now > 0, dt / jnp.maximum(d_now, 1e-30), 1e30)
+
+        busy = q > 0
+        work = jnp.where(busy, work - rate, work)
+        complete = busy & (work <= 0.0)                        # [K]
+
+        alive = stage < k
+        stage_c = jnp.clip(stage, 0, k - 1)
+        dep_here = alive & complete[stage_c]                   # [N]
+        moving = dep_here & (rank == 0)
+        fin = moving & finishes_at[stage_c]                    # op done
+        lat = t_end - enter_t
+        done_w = done_w + jnp.sum((fin & (cls_cur == 1)).astype(jnp.int32))
+        done_r = done_r + jnp.sum((fin & (cls_cur == 0)).astype(jnp.int32))
+        t_last = jnp.where(jnp.any(fin), t_end, t_last)
+
+        op_next = op_i + fin.astype(jnp.int32)
+        more = op_next < budget
+        enters = moving & (~fin | more)    # next hop, or next op; else park
+        dest = arrive_at[stage_c]
+        q_dep = q - complete.astype(q.dtype)
+        stage_new = jnp.where(moving, jnp.where(enters, dest, k), stage)
+        enter_new = jnp.where(fin, t_end, enter_t)
+        rank_new = jnp.where(
+            moving, q_dep[dest],
+            rank - (dep_here & (rank > 0)).astype(rank.dtype))
+        arrivals = (jnp.zeros_like(q)
+                    .at[jnp.where(enters, dest, k)]
+                    .add(1, mode="drop"))
+        q_new = q_dep + arrivals
+        fresh = (complete & (q_new > 0)) | (~busy & (arrivals > 0))
+        work_new = jnp.where(
+            fresh, draw_i + jnp.where(complete, work, 0.0), work)
+
+        return ((stage_new, rank_new, enter_new, op_next, q_new, work_new,
+                 done_w, done_r, t_last), (fin, lat))
+
+    state0 = (stage0, rank0, enter0,
+              jnp.zeros((n_clients,), jnp.int32), q0, work0,
+              jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+              jnp.asarray(0.0))
+    xs = (jnp.arange(n_steps, dtype=jnp.int32), draws[1:])
+    (state_f, (fin, lat)) = jax.lax.scan(step, state0, xs)
+    _, _, _, _, _, _, done_w, done_r, t_last = state_f
+    return fin, lat, done_w, done_r, t_last
+
+
+@partial(jax.jit, static_argnames=("n_clients", "n_steps", "exponential"))
+def _execute_batch(d_w, d_r, entry, nxt, cls, budget, dt, seeds,
+                   n_clients: int, n_steps: int, exponential: bool):
+    """The ONE device call: vmap lanes over configs (M) x seeds (S).
+
+    d_w/d_r: [M, K]; entry: [M]; nxt: [M, K]; cls: [M, S, N, L];
+    budget: [M, N]; dt: [M]; seeds: [S].  Returns
+    (fin[M, S, n_steps, N] bool, lat[M, S, n_steps, N], done_w[M, S],
+    done_r[M, S], t_last[M, S])."""
+    m_ids = jnp.arange(d_w.shape[0], dtype=jnp.int32)
+
+    def per_config(d_w_m, d_r_m, entry_m, nxt_m, cls_m, budget_m, dt_m, mi):
+        def per_seed(cls_ms, s):
+            key = jax.random.fold_in(jax.random.fold_in(jax.random.key(1),
+                                                        mi), s)
+            return _one_exec_lane(d_w_m, d_r_m, entry_m, nxt_m, cls_ms,
+                                  budget_m, dt_m, key, n_steps, n_clients,
+                                  exponential)
+        return jax.vmap(per_seed)(cls_m, seeds)
+
+    return jax.vmap(per_config)(d_w, d_r, entry, nxt, cls, budget, dt, m_ids)
+
+
+def _routing(active: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Tandem routing over active stations (transient.py's convention):
+    entry[M], next_station[M, K] with K = completion."""
+    m, k = active.shape
+    entry = np.zeros(m, dtype=np.int32)
+    nxt = np.full((m, k), k, dtype=np.int32)
+    for i in range(m):
+        idx = np.nonzero(active[i])[0]
+        if idx.size == 0:
+            raise ValueError(f"config row {i} has no active station")
+        entry[i] = idx[0]
+        nxt[i, idx[:-1]] = idx[1:]
+    return entry, nxt
+
+
+# ---------------------------------------------------------------------------
+# Public surface
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BatchedExecutionResult:
+    """One batched execution: M configs x S seeds of closed-loop clients.
+
+    ``station_msgs[m]`` is the measured per-station msgs/cmd/server row
+    (canonical :data:`STATION_ORDER` columns) - probe-calibrated per-class
+    costs blended by the completions the engine realized; it is
+    seed-independent because every lane drains its full op budget at the
+    exact generator mix.  Latency/throughput are per (config, seed)."""
+
+    configs: Tuple[Config, ...]
+    workload: Workload
+    n_commands: int
+    n_clients: int
+    seeds: np.ndarray              # [S]
+    station_msgs: np.ndarray       # [M, K] msgs/cmd/server
+    n_writes: np.ndarray           # [M] realized writes per lane
+    cost_write: np.ndarray         # [M, K] probe-calibrated write costs
+    cost_read: np.ndarray          # [M, K] probe-calibrated read costs
+    throughput: np.ndarray         # [M, S] cmds/s (n_commands / makespan)
+    latency_mean: np.ndarray       # [M, S] seconds
+    latency_p50: np.ndarray        # [M, S]
+    latency_p99: np.ndarray        # [M, S]
+    completed: np.ndarray          # [M, S] ops drained (== n_commands)
+    hist: np.ndarray               # [M, S, B]
+    bin_edges: np.ndarray          # [M, B + 1]
+    dt: np.ndarray                 # [M] seconds per step
+    n_steps: int
+    alpha: float
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def variant(self, m: int) -> str:
+        return config_variant(self.configs[m])
+
+    def station_row(self, m: int) -> Dict[str, float]:
+        """Measured msgs/cmd/server of config m, keyed by station name
+        (nonzero columns only) - the same vocabulary as
+        ``ExecutionTrace.station_msgs``."""
+        return {STATION_ORDER[k]: float(v)
+                for k, v in enumerate(self.station_msgs[m]) if v > 0.0}
+
+    def describe(self, m: int = 0) -> str:
+        pairs = ", ".join(f"{s} {d:.2f}"
+                          for s, d in self.station_row(m).items())
+        return (f"{self.variant(m)}: {self.n_commands} cmds x "
+                f"{len(self.seeds)} seeds ({int(self.n_writes[m])} writes); "
+                f"msgs/cmd/server: {pairs}; "
+                f"p50 {self.latency_p50[m].mean():.2e}s "
+                f"p99 {self.latency_p99[m].mean():.2e}s")
+
+
+def execute_configs(
+    configs: Sequence[Config],
+    workload: Optional[Union[Workload, float]] = None,
+    n_commands: int = 48,
+    seeds: Union[int, Sequence[int]] = 4,
+    n_clients: int = 8,
+    alpha: Optional[float] = None,
+    probe_n: Optional[int] = None,
+    probe_seed: int = 7919,
+    exponential_service: bool = False,
+    oversample: float = 4.0,
+    n_bins: int = 64,
+    state_machine: str = "kv",
+    max_steps: int = 200_000,
+) -> BatchedExecutionResult:
+    """Execute a grid of registered-variant configs as one batched device
+    call of closed-loop client populations.
+
+    Per config: probe-calibrate per-class per-station message costs off
+    the real cluster (:func:`run_variant` at ``probe_n``/``probe_seed``,
+    disjoint from reference runs), lower the variant's demand table to
+    per-class service times, build per-seed op-class streams at the exact
+    generator mix, then run every (config x seed) lane through ONE jitted
+    vmapped ``lax.scan`` and histogram the emitted latency samples with
+    the Pallas :func:`repro.kernels.ops.latency_hist` kernel.
+
+    ``exponential_service=False`` (default) is the parity mode: service is
+    deterministic, the makespan is bounded, and every lane provably drains
+    its budget.  ``True`` matches the MVA product-form assumptions for
+    latency-surface work."""
+    if not configs:
+        raise ValueError("execute_configs: empty config list")
+    w = resolve_workload(workload, where="execute_configs")
+    if isinstance(seeds, (int, np.integer)):
+        seeds_arr = np.arange(int(seeds), dtype=np.int32)
+    else:
+        seeds_arr = np.asarray(list(seeds), dtype=np.int32)
+    if seeds_arr.size == 0:
+        raise ValueError("execute_configs: need at least one seed")
+    n_probe = probe_n if probe_n is not None else n_commands
+    k = len(STATION_ORDER)
+    m = len(configs)
+    a = alpha if alpha is not None else calibrate_alpha()
+
+    cost_w = np.zeros((m, k))
+    cost_r = np.zeros((m, k))
+    d_w = np.zeros((m, k))
+    d_r = np.zeros((m, k))
+    f_eff = np.zeros((m,))
+    cls_all: List[np.ndarray] = []
+    budget_all: List[np.ndarray] = []
+    n_writes = np.zeros((m,), dtype=np.int64)
+    for i, raw in enumerate(configs):
+        cfg = dict(raw)
+        cfg.setdefault("variant", "compartmentalized")
+        name = config_variant(cfg)
+        spec = variant_spec(name)
+        if spec.executable is None:
+            raise ValueError(
+                f"config {i}: variant {name!r} declares no execution plane")
+        exe = spec.executable
+        cost_w[i], cost_r[i], _ = _probe_costs(
+            name, cfg, w, exe, n_probe, probe_seed, state_machine)
+        dw_row, dr_row, _ = spec.model(cfg, w).demand_slots()
+        d_w[i, :len(dw_row)] = np.asarray(dw_row[:k]) / a
+        d_r[i, :len(dr_row)] = np.asarray(dr_row[:k]) / a
+        f_eff[i] = 1.0 if exe.reads_as_writes else w.f_write
+        cls, budget, n_w = _class_streams(n_commands, f_eff[i], n_clients,
+                                          seeds_arr, base_seed=probe_seed + i)
+        cls_all.append(cls)
+        budget_all.append(budget)
+        n_writes[i] = n_w
+
+    blend = f_eff[:, None] * d_w + (1.0 - f_eff[:, None]) * d_r
+    has_w = n_writes > 0
+    has_r = n_writes < n_commands
+    active = ((has_w[:, None] & (d_w > 0))
+              | (has_r[:, None] & (d_r > 0)))               # [M, K]
+    entry, nxt = _routing(active)
+    dt = blend.max(axis=1) / oversample
+    if np.any(dt <= 0):
+        raise ValueError("a config row has zero effective demand")
+
+    # deterministic makespan bound: each station serves every command at
+    # most once, plus one step per (command, station) for instant drains
+    d_hot = np.where(active, np.maximum(d_w, d_r), 0.0)
+    span = (n_commands + n_clients) * d_hot.sum(axis=1)
+    steps = span / dt + (n_commands + n_clients) * active.sum(axis=1)
+    margin = 4.0 if exponential_service else 1.3
+    n_steps = int(math.ceil(margin * float(steps.max()))) + 8
+    n_steps = -(-n_steps // 256) * 256  # bucket: reuse the jit cache
+    if n_steps > max_steps:
+        raise ValueError(
+            f"execute_configs: bound of {n_steps} steps exceeds max_steps="
+            f"{max_steps}; raise max_steps or shrink the grid")
+
+    rtt = np.maximum((blend * active).sum(axis=1), 1e-12)
+    lo = rtt * 0.5
+    hi = np.maximum(n_steps * dt, lo * 10.0)
+    ratio = (hi / lo) ** (1.0 / n_bins)
+    edges = lo[:, None] * ratio[:, None] ** np.arange(n_bins + 1)[None, :]
+
+    fin, lat, done_w, done_r, t_last = _execute_batch(
+        jnp.asarray(d_w), jnp.asarray(d_r), jnp.asarray(entry),
+        jnp.asarray(nxt), jnp.asarray(np.stack(cls_all)),
+        jnp.asarray(np.stack(budget_all)), jnp.asarray(dt),
+        jnp.asarray(seeds_arr), n_clients=n_clients, n_steps=n_steps,
+        exponential=bool(exponential_service))
+
+    done_w = np.asarray(done_w, dtype=np.int64)
+    done_r = np.asarray(done_r, dtype=np.int64)
+    done = done_w + done_r
+    if not np.all(done == n_commands):
+        short = np.argwhere(done != n_commands)
+        raise RuntimeError(
+            f"execute_configs: lanes {short.tolist()} drained "
+            f"{done[tuple(short.T)].tolist()} of {n_commands} ops in "
+            f"{n_steps} steps - raise oversample margin or max_steps")
+
+    s = seeds_arr.size
+    lanes_lat = np.asarray(lat).reshape(m * s, -1)
+    lanes_fin = np.asarray(fin).reshape(m * s, -1).astype(np.float32)
+    lane_edges = np.repeat(edges, s, axis=0)
+    hist = np.asarray(latency_hist(jnp.asarray(lanes_lat),
+                                   jnp.asarray(lanes_fin),
+                                   jnp.asarray(lane_edges)))
+    hist = hist.reshape(m, s, n_bins)
+
+    lat_np = np.asarray(lat, dtype=np.float64)
+    fin_np = np.asarray(fin)
+    lat_sum = np.where(fin_np, lat_np, 0.0).sum(axis=(2, 3))
+    t_last = np.asarray(t_last, dtype=np.float64)
+
+    # completion-weighted blend of the probe-calibrated per-class costs:
+    # the measured msgs/cmd surface (float64, so exact stations stay exact)
+    msgs = (done_w[:, 0, None] * cost_w + done_r[:, 0, None] * cost_r) \
+        / n_commands
+
+    return BatchedExecutionResult(
+        configs=tuple(dict(c) for c in configs),
+        workload=w,
+        n_commands=n_commands,
+        n_clients=n_clients,
+        seeds=seeds_arr,
+        station_msgs=msgs,
+        n_writes=done_w[:, 0].copy(),
+        cost_write=cost_w,
+        cost_read=cost_r,
+        throughput=n_commands / np.maximum(t_last, 1e-30),
+        latency_mean=lat_sum / np.maximum(done, 1),
+        latency_p50=_quantile_from_hist(hist, edges, 0.50),
+        latency_p99=_quantile_from_hist(hist, edges, 0.99),
+        completed=done.astype(np.float64),
+        hist=hist,
+        bin_edges=edges,
+        dt=dt,
+        n_steps=n_steps,
+        alpha=a,
+    )
+
+
+def run_variant_batched(name: str,
+                        config: Optional[Config] = None,
+                        workload: Optional[Union[Workload, float]] = None,
+                        n_commands: int = 48,
+                        seeds: Union[int, Sequence[int]] = 4,
+                        n_clients: Optional[int] = None,
+                        **kwargs: Any) -> BatchedExecutionResult:
+    """One variant config through the batched executor (M = 1): the
+    jitted sibling of :func:`repro.core.execution.run_variant`."""
+    spec = variant_spec(name)
+    if spec.executable is None:
+        raise ValueError(
+            f"variant {name!r} declares no execution plane; the batched "
+            f"executor drives registered executables only")
+    cfg = dict(config) if config is not None else default_config(name)
+    cfg.setdefault("variant", name)
+    n_cl = n_clients if n_clients is not None else spec.executable.n_clients
+    return execute_configs([cfg], workload=workload, n_commands=n_commands,
+                           seeds=seeds, n_clients=n_cl, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Parity: batched-measured vs analytical (the validate_variant analogue)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchedParityReport:
+    """Measured-vs-analytical msgs/cmd parity for one batched config."""
+
+    variant: str
+    config: Config
+    model_config: Config
+    workload: Workload
+    rows: Tuple[StationParity, ...]
+    result: BatchedExecutionResult
+
+    @property
+    def passed(self) -> bool:
+        return all(r.ok for r in self.rows)
+
+    def row(self, station: str) -> StationParity:
+        for r in self.rows:
+            if r.station == station:
+                return r
+        raise KeyError(f"no parity row for station {station!r}")
+
+    def max_rel_err(self) -> float:
+        return max((r.rel_err for r in self.rows), default=0.0)
+
+    def __str__(self) -> str:
+        lines = [f"{self.variant} @ {self.workload.describe()} [batched]: "
+                 f"{'PASS' if self.passed else 'FAIL'}"]
+        lines += [f"  {r.describe()}" for r in self.rows]
+        return "\n".join(lines)
+
+
+def validate_batched(name: str,
+                     config: Optional[Config] = None,
+                     workload: Optional[Union[Workload, float]] = None,
+                     n_commands: int = 48,
+                     seeds: Union[int, Sequence[int]] = 4,
+                     **kwargs: Any) -> BatchedParityReport:
+    """Parity-check the batched executor's measured per-station msgs/cmd
+    against the variant's analytical demand table - the
+    :func:`~repro.core.execution.validate_variant` analogue on the
+    batched plane, with the same feedback loop: measured-parameter
+    refinement comes off a real probe run of this very grid cell."""
+    spec = variant_spec(name)
+    if spec.executable is None:
+        raise ValueError(f"variant {name!r} declares no execution plane")
+    exe = spec.executable
+    cfg = dict(config) if config is not None else default_config(name)
+    cfg.setdefault("variant", name)
+    w = resolve_workload(workload, where="validate_batched")
+    res = run_variant_batched(name, cfg, w, n_commands=n_commands,
+                              seeds=seeds, **kwargs)
+
+    model_cfg = spec.adapt(cfg, w)
+    if exe.model_feedback is not None:
+        # the feedback statistics (skip rates, forwarding fractions) come
+        # off a fresh probe run at this config - same loop as the scalar
+        # plane, measured not assumed
+        probe = run_variant(name, cfg,
+                            replace(w, f_write=1.0) if exe.reads_as_writes
+                            else w,
+                            n_commands=n_commands,
+                            seed=kwargs.get("probe_seed", 7919))
+        model_cfg = exe.model_feedback(dict(model_cfg), probe)
+    realized = replace(w, f_write=float(res.n_writes[0]) / n_commands)
+    predicted = spec.build(model_cfg).demands(realized)
+
+    measured = res.station_row(0)
+    stations = list(measured)
+    stations += [s for s, d in predicted.items()
+                 if s not in measured and d > 0.0]
+    rows = []
+    for station in sorted(stations, key=STATION_ORDER.index):
+        mm = measured.get(station, 0.0)
+        p = predicted.get(station, 0.0)
+        exact = station in exe.exact_stations
+        tol = exe.tolerance_for(station)
+        rel = abs(mm - p) / max(abs(p), 1e-12)
+        ok = abs(mm - p) <= 1e-9 if exact else rel <= tol
+        rows.append(StationParity(station=station, measured=mm, predicted=p,
+                                  rel_err=rel, tolerance=tol, exact=exact,
+                                  ok=ok))
+    return BatchedParityReport(variant=name, config=cfg,
+                               model_config=model_cfg, workload=w,
+                               rows=tuple(rows), result=res)

@@ -54,13 +54,13 @@ from .api import (
 from .craq import CraqDeployment
 from .history import History
 from .linearizability import check_linearizable, check_slot_order
-from .mencius import MenciusDeployment
+from .mencius import MenciusDeployment, VanillaMenciusDeployment
 from .protocols import (
     CompartmentalizedMultiPaxos,
     DeploymentConfig,
     UnreplicatedStateMachine,
 )
-from .spaxos import SPaxosDeployment
+from .spaxos import SPaxosDeployment, VanillaSPaxosDeployment
 
 __all__ = [
     "ExecutionTrace", "ParityReport", "StationParity", "default_config",
@@ -497,6 +497,53 @@ def _spaxos_deployment(n_disseminators: int = 2, n_stabilizers: int = 3,
                             state_machine=state_machine, seed=seed)
 
 
+def _vanilla_mencius_deployment(f: int = 1,
+                                announce_interval: Optional[float] = None,
+                                skip_fraction: float = 0.0,
+                                skip_batch: float = 10.0, n_clients: int = 3,
+                                seed: int = 0, state_machine: str = "kv",
+                                ) -> VanillaMenciusDeployment:
+    # announce/skip knobs parameterize the table; the fused servers
+    # announce every command and range-fill, measured back by feedback
+    del announce_interval, skip_fraction, skip_batch
+    return VanillaMenciusDeployment(f=f, n_clients=n_clients,
+                                    state_machine=state_machine, seed=seed)
+
+
+def _vanilla_mencius_feedback(model_cfg: Config,
+                              trace: ExecutionTrace) -> Config:
+    """Same feedback loop as compartmentalized Mencius: the fused servers
+    announce their frontier on every owned command and range-fill vacant
+    slots; the table's skip knobs are read off the run."""
+    dep = trace.deployment
+    n_ranges = dep.total_skips()
+    n_slots = max(s.executed_upto for s in dep.servers) + 1
+    n_noops = max(n_slots - trace.n_writes, 0)
+    cfg = dict(model_cfg, announce_interval=1.0)
+    if n_noops and n_ranges:
+        cfg.update(skip_fraction=n_noops / n_slots,
+                   skip_batch=n_noops / n_ranges)
+    return cfg
+
+
+def _vanilla_spaxos_deployment(f: int = 1, payload_factor: float = 1.0,
+                               n_clients: int = 3, seed: int = 0,
+                               state_machine: str = "kv",
+                               ) -> VanillaSPaxosDeployment:
+    del payload_factor  # table-only knob: message *counts* are size-blind
+    return VanillaSPaxosDeployment(f=f, n_clients=n_clients,
+                                   state_machine=state_machine, seed=seed)
+
+
+def _vanilla_spaxos_station_of(addr: str, dep: Any) -> Optional[str]:
+    """Fused-server bucketing: server 0 carries the colocated leader role
+    (the model's ``leader`` machine); the other 2f are ``follower``s."""
+    role, _, idx = addr.partition("/")
+    if role != "server":
+        return None
+    return "leader" if idx == "0" else "follower"
+
+
 def _craq_deployment(n_nodes: int = 3, skew_p: float = 0.0,
                      dirty_fraction: float = 0.5, n_clients: int = 2,
                      seed: int = 0, state_machine: str = "kv",
@@ -557,6 +604,12 @@ def _unreplicated_deployment(n_clients: int = 2, seed: int = 0,
 #   the proxy row absorbs range-path edge messages.
 # * craq: message-exact chain accounting; under mixed workloads the
 #   measured forwarding fraction is fed back.
+# * vanilla_mencius: the fused table omits the owner machine's own
+#   colocated acceptor vote and chosen-recv (local facts on a fused
+#   server); the wire plane lands within ~2% once skips are fed back.
+# * vanilla_spaxos: wire totals match the table exactly (self-sends are
+#   counted on both sides, like the model); only the thrifty quorum draw
+#   moves acceptor messages between the leader and follower rows.
 register_executable(
     "compartmentalized",
     deployment=_compartmentalized_deployment,
@@ -603,6 +656,26 @@ register_executable(
     rel_tolerance=0.10,
     n_clients=2,
     description="CraqDeployment chain (dirty reads forward to the tail)",
+)
+
+register_executable(
+    "vanilla_mencius",
+    deployment=_vanilla_mencius_deployment,
+    model_feedback=_vanilla_mencius_feedback,
+    rel_tolerance=0.10,
+    reads_as_writes=True,  # the fused table has no read path (paper Fig. 25)
+    n_clients=3,
+    description="VanillaMenciusDeployment (fused leader+acceptor+replica)",
+)
+
+register_executable(
+    "vanilla_spaxos",
+    deployment=_vanilla_spaxos_deployment,
+    station_of=_vanilla_spaxos_station_of,
+    rel_tolerance=0.10,
+    reads_as_writes=True,  # the fused table has no read path (paper Fig. 27)
+    n_clients=3,
+    description="VanillaSPaxosDeployment (fused servers, leader on 0)",
 )
 
 register_executable(

@@ -218,3 +218,141 @@ class SPaxosLeader(Node):
             self.send(proxy, Phase2a(slot=slot, ballot=self.ballot,
                                      value=("id", msg.cmd_id),
                                      leader_id=self.leader_id))
+
+
+# ---------------------------------------------------------------------------
+# Vanilla (fused-server) S-Paxos - paper Fig. 26 baseline
+# ---------------------------------------------------------------------------
+
+
+class VanillaSPaxosServer(Replica):
+    """One fused vanilla-S-Paxos server: disseminator + stabilizer +
+    acceptor + replica in a single process, with the MultiPaxos leader role
+    colocated on server 0 - matching the fused accounting of
+    ``vanilla_spaxos_model`` (one ``leader`` machine + ``n - 1`` followers
+    sharing the dissemination/stabilization/acceptor/reply work uniformly).
+
+    Wire behaviour mirrors the table term by term: ``Disseminate`` and
+    ``Chosen`` broadcasts include the sender itself (the model counts
+    self-sends - the in-process network accounts them on both sides), the
+    leader self-broadcasts Phase 2 to a thrifty majority drawn from *all*
+    ``n`` servers, and each server resolves a chosen id from its local
+    store and hands the payload to its *local* replica component without a
+    message - the one internal hop the table omits.  Total wire messages
+    per command equal the table's total exactly; only the quorum draw moves
+    acceptor messages between machines.
+    """
+
+    def __init__(self, addr: str, server_id: int, n_servers: int, f: int,
+                 servers: Sequence[str], state_machine, seed: int = 0) -> None:
+        super().__init__(addr, server_id, n_servers, state_machine, seed=seed)
+        self.server_id = server_id
+        self.n_servers = n_servers
+        self.servers = list(servers)  # all n, self included
+        self.leader_addr = servers[0]
+        self.majority = n_servers // 2 + 1  # = f + 1
+        self.role_rng = random.Random(seed * 193 + server_id)
+        # disseminator component
+        self.seq = 0
+        self.dis_pending: Dict[Tuple[int, int], Set[int]] = {}
+        # stabilizer component
+        self.store: Dict[Tuple[int, int], Command] = {}
+        self.waiting: Dict[Tuple[int, int], int] = {}  # cmd_id -> chosen slot
+        # leader component (server 0 only)
+        self.next_slot = 0
+        self.ballot = 0
+        self.pending2: Dict[int, Tuple[Tuple[int, int], Set[int]]] = {}
+
+    def _deliver_local(self, slot: int, command: Command) -> None:
+        """Payload resolved: hand to the local replica component (free)."""
+        if slot not in self.log:
+            self.log[slot] = command
+            self._execute_ready()
+
+    def on_message(self, src: str, msg: Any) -> None:
+        if isinstance(msg, ClientRequest):  # disseminator: persist payload
+            cmd_id = (self.server_id, self.seq)
+            self.seq += 1
+            self.dis_pending[cmd_id] = set()
+            for s in self.servers:  # self included: the model counts it
+                self.send(s, Disseminate(cmd_id=cmd_id, command=msg.command))
+        elif isinstance(msg, Disseminate):  # stabilizer: store + ack
+            self.store[msg.cmd_id] = msg.command
+            self.send(src, StabilizeAck(cmd_id=msg.cmd_id,
+                                        stabilizer_id=self.server_id))
+            if msg.cmd_id in self.waiting:
+                self._deliver_local(self.waiting.pop(msg.cmd_id), msg.command)
+        elif isinstance(msg, StabilizeAck):
+            acks = self.dis_pending.get(msg.cmd_id)
+            if acks is None:
+                return
+            acks.add(msg.stabilizer_id)
+            if len(acks) == self.majority:  # fire exactly once
+                self.send(self.leader_addr, ProposeId(cmd_id=msg.cmd_id))
+        elif isinstance(msg, ProposeId):  # leader: order the id
+            slot = self.next_slot
+            self.next_slot += 1
+            members = self.role_rng.sample(range(self.n_servers),
+                                           self.majority)
+            self.pending2[slot] = (msg.cmd_id, set())
+            for a in members:
+                self.send(self.servers[a],
+                          Phase2a(slot=slot, ballot=self.ballot,
+                                  value=("id", msg.cmd_id),
+                                  leader_id=0))
+        elif isinstance(msg, Phase2a):  # acceptor: vote
+            self.send(src, Phase2b(slot=msg.slot, ballot=msg.ballot,
+                                   acceptor_id=self.server_id))
+        elif isinstance(msg, Phase2b):  # leader: count the quorum
+            entry = self.pending2.get(msg.slot)
+            if entry is None:
+                return
+            cmd_id, acks = entry
+            acks.add(msg.acceptor_id)
+            if len(acks) == self.majority:
+                del self.pending2[msg.slot]
+                for s in self.servers:  # self included: the model counts it
+                    self.send(s, Chosen(slot=msg.slot, value=("id", cmd_id)))
+        elif isinstance(msg, Chosen):  # stabilizer: resolve id -> payload
+            _, cmd_id = msg.value
+            cmd = self.store.get(cmd_id)
+            if cmd is not None:
+                self._deliver_local(msg.slot, cmd)
+            else:  # Chosen raced ahead of our Disseminate copy
+                self.waiting[cmd_id] = msg.slot
+        else:  # replica-component reads etc.
+            super().on_message(src, msg)
+
+
+class VanillaSPaxosDeployment(BaseDeployment):
+    """n = 2f+1 fused S-Paxos servers; server 0 carries the leader role."""
+
+    def __init__(
+        self,
+        f: int = 1,
+        n_clients: int = 3,
+        state_machine: str = "kv",
+        consistency: str = "linearizable",
+        seed: int = 0,
+    ) -> None:
+        self.net = Network(seed=seed)
+        self.history = History()
+        n = 2 * f + 1
+        self.n_servers = n
+        self.server_addrs = [f"server/{i}" for i in range(n)]
+        self.servers = [
+            VanillaSPaxosServer(addr, i, n, f, self.server_addrs,
+                                make_state_machine(state_machine), seed=seed)
+            for i, addr in enumerate(self.server_addrs)
+        ]
+        quorums = MajorityQuorums(f=f)
+        # client i disseminates through server i % n; n_clients should be a
+        # multiple of n so the model's uniform dissemination share holds
+        self.clients = [
+            Client(f"client/{i}", i, self.server_addrs[i % n], [], quorums,
+                   [], consistency=consistency, history=self.history,
+                   seed=seed)
+            for i in range(n_clients)
+        ]
+        self.net.add_nodes(self.servers)
+        self.net.add_nodes(self.clients)

@@ -277,6 +277,26 @@ class CompiledSweep:
         return simulate_transient(sched, bounds, n_clients=n_clients,
                                   n_steps=n_steps, **kwargs)
 
+    def execute(self, workload: Optional[Union[Workload, float]] = None,
+                n_commands: int = 48, seeds: Union[int, Sequence[int]] = 4,
+                **kwargs):
+        """*Measure* every config in the sweep: probe-calibrate each
+        variant's execution plane off the real cluster, then run the whole
+        (config x seed) grid of closed-loop client populations in ONE
+        jitted device call (:func:`repro.core.batched_execution.
+        execute_configs`).  The third plane next to :meth:`mva` (steady
+        state) and :meth:`transient` (faults): same grid, same one-call
+        shape, but the per-station msgs/cmd surface is measured, not
+        modelled.  Requires a config-bearing sweep (``compile_sweep``)
+        whose variants all register executables."""
+        if self.configs is None:
+            raise ValueError(
+                "CompiledSweep.execute needs per-row configs; compile with "
+                "compile_sweep(spec) rather than compile_models(models)")
+        from .batched_execution import execute_configs
+        return execute_configs(self.configs, workload=workload,
+                               n_commands=n_commands, seeds=seeds, **kwargs)
+
     def subset(self, indices: Sequence[int]) -> "CompiledSweep":
         """Row-select a sweep (e.g. a shortlist for the expensive
         transient objective); carries configs when present."""

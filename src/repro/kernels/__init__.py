@@ -8,6 +8,8 @@ are the perf-critical compute layers of the training/serving substrate:
                      distributed sequence-sharded decode)
   rglru_scan       - RG-LRU linear recurrence (RecurrentGemma)
   rwkv6_scan       - RWKV-6 WKV chunked recurrence
+  latency_hist     - masked per-lane latency histogramming for the batched
+                     execution plane's p50/p99 surfaces
 
 Each ships with ``ops.py`` (jitted wrapper, backend dispatch) and ``ref.py``
 (pure-jnp oracle); validated in interpret mode on CPU.

@@ -1,0 +1,59 @@
+"""Masked latency histogramming as a Pallas TPU kernel.
+
+The batched execution plane (``repro.core.batched_execution``) emits one
+(latency, valid) sample per protocol step per lane; turning those streams
+into p50/p99 surfaces means binning every sample against its lane's
+log-spaced edge vector - the same ``searchsorted(edges) - 1`` convention
+``transient.py`` uses, so quantiles read identically across planes.
+
+The bin update is a scatter-add in spirit, but TPUs hate scatters: the
+kernel instead materialises the (samples x bins) one-hot comparison matrix
+in VMEM and reduces over the sample axis - pure VPU work, one HBM read of
+the samples and one write of the histogram per lane.  Grid: one program
+per lane (a lane = one config x seed x client stream), so a whole sweep's
+histograms build in a single launch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(s_ref, v_ref, e_ref, o_ref):
+    lat = s_ref[0]                     # (N,) f32 latencies
+    valid = v_ref[0]                   # (N,) f32 mask (> 0 = real sample)
+    edges = e_ref[0]                   # (B+1,) ascending bin edges
+    n_bins = o_ref.shape[-1]
+    # searchsorted-left minus one: #{j : edges_j < lat} - 1, clipped - the
+    # exact binning transient.py applies, expressed as a comparison matrix
+    idx = jnp.sum((edges[None, :] < lat[:, None]).astype(jnp.int32),
+                  axis=1) - 1
+    idx = jnp.clip(idx, 0, n_bins - 1)
+    bin_ids = jax.lax.broadcasted_iota(jnp.int32, (lat.shape[0], n_bins), 1)
+    onehot = (idx[:, None] == bin_ids) & (valid[:, None] > 0)
+    o_ref[0] = jnp.sum(onehot.astype(jnp.int32), axis=0)
+
+
+def latency_hist(samples: jnp.ndarray, valid: jnp.ndarray,
+                 edges: jnp.ndarray, *, interpret: bool = False
+                 ) -> jnp.ndarray:
+    """samples/valid: (L, N); edges: (L, B+1).  Returns (L, B) int32 counts
+    of valid samples per bin (out-of-range samples clamp to the end bins,
+    matching the transient plane's convention)."""
+    L, N = samples.shape
+    B = edges.shape[-1] - 1
+    assert edges.shape[0] == L and valid.shape == (L, N), (
+        samples.shape, valid.shape, edges.shape)
+    return pl.pallas_call(
+        _hist_kernel,
+        grid=(L,),
+        in_specs=[
+            pl.BlockSpec((1, N), lambda l: (l, 0)),
+            pl.BlockSpec((1, N), lambda l: (l, 0)),
+            pl.BlockSpec((1, B + 1), lambda l: (l, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, B), lambda l: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, B), jnp.int32),
+        interpret=interpret,
+    )(samples, valid.astype(jnp.float32), edges)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from . import ref
 from .decode_attention import flash_decode as _flash_decode
 from .flash_attention import flash_attention as _flash_attention
+from .latency_hist import latency_hist as _latency_hist
 from .rglru_scan import rglru_scan as _rglru_scan
 from .rwkv6_scan import wkv6 as _wkv6
 
@@ -69,6 +70,16 @@ def rglru_scan(x, a, use_pallas: Optional[bool] = None):
     if not use_pallas and not _on_tpu():
         return ref.ref_rglru(x, a)
     return _rglru_scan(x, a, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def latency_hist(samples, valid, edges, use_pallas: Optional[bool] = None):
+    """samples/valid: (L, N); edges: (L, B+1) -> (L, B) int32."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not _on_tpu():
+        return ref.ref_latency_hist(samples, valid, edges)
+    return _latency_hist(samples, valid, edges, interpret=not _on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

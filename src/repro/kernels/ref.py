@@ -61,6 +61,20 @@ def ref_rglru(x: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
     return hs.swapaxes(0, 1).astype(x.dtype)
 
 
+def ref_latency_hist(samples: jnp.ndarray, valid: jnp.ndarray,
+                     edges: jnp.ndarray) -> jnp.ndarray:
+    """Masked histogram per lane.  samples/valid: (L, N); edges: (L, B+1).
+    Bin = searchsorted-left(edges, sample) - 1, clipped to [0, B) - the
+    transient plane's binning, so quantile reads agree across planes."""
+    n_bins = edges.shape[-1] - 1
+    idx = jnp.sum((edges[:, None, :] < samples[..., None]).astype(jnp.int32),
+                  axis=-1) - 1
+    idx = jnp.clip(idx, 0, n_bins - 1)
+    onehot = jax.nn.one_hot(idx, n_bins, dtype=jnp.int32)
+    onehot = onehot * (valid > 0).astype(jnp.int32)[..., None]
+    return onehot.sum(axis=1)
+
+
 def ref_wkv6(r, k, v, logw, u):
     """Serial RWKV-6 recurrence.  r/k/v/logw: (B, H, S, d); u: (H, d)."""
     B, H, S, D = k.shape

@@ -1,0 +1,263 @@
+"""Cross-plane agreement: the batched executor vs the measured plane.
+
+The batched execution plane promises that "measured" surfaces (one jitted
+device call over a config x seed grid of closed-loop clients) agree with
+the scalar measured plane (:func:`run_variant`'s real message-passing
+cluster) - probe-calibrated, not copied: the probes run at sizes/seeds
+disjoint from every reference run below.  These tests pin that promise
+for ALL registered executables, plus the grid acceptance shape, the
+quorum-grid acceptor parity, and the leader-crash replay whose recovery
+dip must match the transient plane's prediction.
+"""
+import numpy as np
+import pytest
+
+from repro.core.api import (
+    MIXED_50_50,
+    WRITE_ONLY,
+    Workload,
+    executable_variants,
+    register_variant,
+    temporary_variants,
+    variant_spec,
+)
+from repro.core.analytical import calibrate_alpha, vanilla_mencius_model
+from repro.core.batched_execution import (
+    BatchedExecutionResult,
+    execute_configs,
+    run_variant_batched,
+    validate_batched,
+)
+from repro.core.execution import default_config, run_variant
+from repro.core.linearizability import check_linearizable
+from repro.core.protocols import CompartmentalizedMultiPaxos, DeploymentConfig
+from repro.core.simulator import demand_vector
+from repro.core.sweep import SweepSpec, compile_sweep
+from repro.core.transient import failover_schedule, simulate_transient
+
+EXECUTABLES = tuple(executable_variants())
+MIXES = [WRITE_ONLY, MIXED_50_50]
+N_CMDS = 48
+
+_CACHE = {}
+
+
+def _batched(name, w, **kw):
+    key = (name, w.f_write, tuple(sorted(kw.items())))
+    if key not in _CACHE:
+        _CACHE[key] = run_variant_batched(name, workload=w,
+                                          n_commands=N_CMDS, seeds=2, **kw)
+    return _CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cross-plane agreement for every executable at two mixes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mix", MIXES, ids=lambda w: f"fw{w.f_write:g}")
+@pytest.mark.parametrize("name", EXECUTABLES)
+def test_cross_plane_agreement(name, mix):
+    """Batched per-station msgs/cmd matches run_variant within the
+    variant's registered tolerances - exactly on its exact_stations."""
+    exe = variant_spec(name).executable
+    res = _batched(name, mix)
+    ref = run_variant(name, workload=mix, n_commands=N_CMDS, seed=0)
+    row = res.station_row(0)
+    ref_row = ref.station_msgs
+    assert set(row) == set(ref_row), (row, ref_row)
+    for st in ref_row:
+        m, r = row[st], ref_row[st]
+        if st in exe.exact_stations:
+            assert abs(m - r) <= 1e-9, (name, st, m, r)
+        else:
+            tol = exe.tolerance_for(st)
+            assert abs(m - r) <= tol * max(r, 1e-12), (name, st, m, r, tol)
+
+
+@pytest.mark.parametrize("name", EXECUTABLES)
+def test_quantile_and_drain_pins(name):
+    """p50 <= p99 on every lane; every lane drains its full op budget at
+    the exact generator write count; histogram mass == completions."""
+    res = _batched(name, MIXED_50_50)
+    exe = variant_spec(name).executable
+    assert np.all(res.latency_p50 <= res.latency_p99 + 1e-12)
+    assert np.all(res.latency_p50 > 0) and np.all(res.latency_mean > 0)
+    assert np.all(res.completed == N_CMDS)
+    f_eff = 1.0 if exe.reads_as_writes else MIXED_50_50.f_write
+    assert res.n_writes[0] == round(N_CMDS * f_eff)
+    assert np.all(res.hist.sum(axis=-1) == N_CMDS)
+    assert np.all(res.throughput > 0)
+
+
+def test_latency_monotone_in_load():
+    """Closed-loop queueing: more concurrent clients -> strictly more
+    queueing delay per command (same budget, same service demands)."""
+    lo = _batched("compartmentalized", WRITE_ONLY, n_clients=2)
+    hi = _batched("compartmentalized", WRITE_ONLY, n_clients=16)
+    assert np.all(hi.latency_mean > lo.latency_mean)
+    assert np.all(hi.latency_p99 >= lo.latency_p99)
+
+
+def test_station_surface_is_seed_independent():
+    """The measured msgs/cmd surface depends on the realized mix, not the
+    seed: every lane drains round(n * f_write) writes by construction."""
+    a = run_variant_batched("compartmentalized", workload=MIXED_50_50,
+                            n_commands=N_CMDS, seeds=[0, 1])
+    b = run_variant_batched("compartmentalized", workload=MIXED_50_50,
+                            n_commands=N_CMDS, seeds=[7, 11])
+    np.testing.assert_allclose(a.station_msgs, b.station_msgs, rtol=0, atol=0)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: one device call over a >= 8-config x >= 4-seed grid
+# ---------------------------------------------------------------------------
+
+
+def test_grid_acceptance_one_call():
+    sw = compile_sweep(SweepSpec(
+        variants=("compartmentalized", "multipaxos"),
+        n_proxy_leaders=(2, 3, 4, 5), n_replicas=(2, 3)))
+    assert len(sw.configs) >= 8
+    res = sw.execute(workload=MIXED_50_50, n_commands=40, seeds=4)
+    assert isinstance(res, BatchedExecutionResult)
+    assert len(res) >= 8 and len(res.seeds) >= 4
+    assert np.all(res.completed == 40)
+    assert np.all(res.latency_p50 <= res.latency_p99 + 1e-12)
+    # measured surface of every row agrees with its analytical demand
+    # table within the variant's registered tolerances
+    for m in range(len(res)):
+        name = res.variant(m)
+        exe = variant_spec(name).executable
+        w = MIXED_50_50
+        realized = Workload(
+            f_write=1.0 if exe.reads_as_writes else w.f_write)
+        predicted = variant_spec(name).model(res.configs[m], w).demands(
+            realized)
+        for st, mm in res.station_row(m).items():
+            p = predicted.get(st, 0.0)
+            assert abs(mm - p) <= exe.tolerance_for(st) * max(p, 1e-12), (
+                name, st, mm, p)
+
+
+def test_execute_requires_configs_and_plane():
+    with temporary_variants():
+        register_variant(name="table_only_bx", factory=vanilla_mencius_model,
+                         stations=("server",))
+        with pytest.raises(ValueError, match="no execution plane"):
+            run_variant_batched("table_only_bx")
+        with pytest.raises(ValueError, match="no execution plane"):
+            execute_configs([{"variant": "table_only_bx"}])
+
+
+# ---------------------------------------------------------------------------
+# Satellite: measured-vs-analytical parity on the batched plane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["compartmentalized", "craq",
+                                  "vanilla_spaxos", "multipaxos"])
+def test_validate_batched_passes(name):
+    rep = validate_batched(name, workload=MIXED_50_50, n_commands=N_CMDS,
+                           seeds=2)
+    assert rep.passed, str(rep)
+    assert rep.max_rel_err() < 1.0
+    assert "batched" in str(rep)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: 2-row write vs 2-column read quorum grids through the
+# executable plane - acceptor msgs/cmd pinned against the analytical table
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mix", MIXES, ids=lambda w: f"fw{w.f_write:g}")
+def test_quorum_grid_sweep_acceptor_parity(mix):
+    grids = [(2, 2), (2, 3), (3, 2)]
+    configs = [{"variant": "compartmentalized",
+                "grid_rows": r, "grid_cols": c} for r, c in grids]
+    res = execute_configs(configs, workload=mix, n_commands=40, seeds=2)
+    spec = variant_spec("compartmentalized")
+    acc = []
+    for m, cfg in enumerate(configs):
+        measured = res.station_row(m)["acceptor"]
+        predicted = spec.model(cfg, mix).demands(mix)["acceptor"]
+        if mix.f_write >= 1.0:
+            # write path is deterministic: exact table parity
+            assert abs(measured - predicted) <= 1e-9, (cfg, measured,
+                                                       predicted)
+        else:
+            tol = spec.executable.tolerance_for("acceptor")
+            assert abs(measured - predicted) <= tol * predicted, (
+                cfg, measured, predicted)
+        acc.append(measured)
+    # the table's asymmetry: with 2-member write quorums (columns of a
+    # 2-row grid), widening the grid spreads the same write traffic over
+    # more acceptors - (2, 3) is strictly cheaper per acceptor than (2, 2)
+    # and than 3-member write columns ((3, 2)) under writes; at 50/50 the
+    # transposed grids tie exactly (write and read quorums swap roles)
+    assert acc[1] < acc[0], acc
+    if mix.f_write >= 1.0:
+        assert acc[1] < acc[2], acc
+    else:
+        assert abs(acc[1] - acc[2]) <= 1e-9, acc
+
+
+# ---------------------------------------------------------------------------
+# Satellite: transient leader-crash schedule replayed on the correctness
+# plane - linearizable across failover, dip shape matching the prediction
+# ---------------------------------------------------------------------------
+
+
+def _completion_rate(history, t0, t1):
+    n = sum(1 for o in history.ops
+            if o.response_time is not None and t0 <= o.response_time < t1)
+    return n / (t1 - t0)
+
+
+def test_leader_crash_replay_matches_transient_dip():
+    """Replay the transient plane's failover schedule (crash the leader
+    mid-run, heartbeat-driven promotion, client rediscovery) on the real
+    cluster: the history must stay linearizable across the failover, and
+    the completion-rate trace must show the same dip-and-recover shape
+    the transient engine predicts for the same schedule."""
+    # --- prediction: scripted leader crash through the scan engine ------
+    alpha = calibrate_alpha()
+    model = variant_spec("compartmentalized").model(
+        default_config("compartmentalized"), WRITE_ONLY)
+    base = demand_vector(model, f_write=1.0) / alpha
+    sched, bounds = failover_schedule(base, "leader", start=0.35, stop=0.6,
+                                      n_steps=1200)
+    tr = simulate_transient(sched, bounds, n_clients=16, seeds=4,
+                            n_steps=1200)
+    centers, x = tr.throughput_trace(n_windows=24)
+    frac = centers[0] / centers[0, -1] / (24 / 23.5)  # window fractions
+    pre_p = x[0, :, (frac > 0.05) & (frac < 0.3)].mean()
+    dip_p = x[0, :, (frac > 0.4) & (frac < 0.55)].mean()
+    post_p = x[0, :, (frac > 0.7)].mean()
+    assert dip_p < 0.25 * pre_p, (dip_p, pre_p)
+    assert post_p > 0.4 * pre_p, (post_p, pre_p)
+
+    # --- replay: the same schedule against the real cluster -------------
+    cfg = DeploymentConfig(f=1, n_proxy_leaders=3, grid=(2, 2),
+                           n_replicas=2, state_machine="register", seed=0,
+                           client_retries=True, auto_failover=True)
+    dep = CompartmentalizedMultiPaxos(cfg, n_clients=2)
+    for i, c in enumerate(dep.clients):
+        c.run_ops([("w", 1000 * i + j) for j in range(300)])
+    dep.net.run(until=400)                      # steady phase
+    dep.net.crash("leader/0")
+    dep.net.run(until=1_600)                    # outage until promotion
+    assert dep.leaders[1].active, "heartbeats must promote a new leader"
+    for c in dep.clients:                       # client-side rediscovery
+        c.leader = "leader/1"
+    dep.net.run(until=3_000)                    # recovery phase
+
+    pre = _completion_rate(dep.history, 0, 400)
+    dip = _completion_rate(dep.history, 500, 1_500)
+    post = _completion_rate(dep.history, 1_700, 3_000)
+    assert pre > 0, "no completions in the steady phase"
+    # same shape booleans the transient plane predicted above
+    assert dip < 0.25 * pre, (dip, pre)
+    assert post > 0.4 * pre, (post, pre)
+    assert check_linearizable(dep.history, "register")

@@ -34,12 +34,13 @@ from repro.core import (
 EXECUTABLES = tuple(executable_variants())
 
 
-def test_all_six_builtin_variants_declare_executables():
+def test_all_eight_builtin_variants_declare_executables():
     assert EXECUTABLES == ("compartmentalized", "unreplicated", "multipaxos",
-                           "mencius", "spaxos", "craq")
-    # the vanilla mencius/spaxos baselines are table-only (the paper
-    # derives them analytically); they stay registered without a plane
-    assert {"vanilla_mencius", "vanilla_spaxos"} < set(registered_variants())
+                           "mencius", "vanilla_mencius", "spaxos",
+                           "vanilla_spaxos", "craq")
+    # every registered built-in now has an execution plane: the vanilla
+    # mencius/spaxos baselines gained fused-server deployments
+    assert set(EXECUTABLES) == set(registered_variants())
 
 
 # ---------------------------------------------------------------------------
@@ -206,7 +207,14 @@ def test_default_config_is_first_knob_point():
 
 
 def test_variant_without_executable_is_diagnosed():
-    with pytest.raises(ValueError, match="no execution plane"):
-        run_variant("vanilla_mencius", n_commands=4)
+    from repro.core import register_variant, temporary_variants
+    from repro.core.analytical import vanilla_mencius_model
+
+    with temporary_variants():
+        register_variant(name="table_only_proto",
+                         factory=vanilla_mencius_model,
+                         stations=("server",))
+        with pytest.raises(ValueError, match="no execution plane"):
+            run_variant("table_only_proto", n_commands=4)
     with pytest.raises(ValueError, match="unknown variant"):
         run_variant("no_such_protocol", n_commands=4)

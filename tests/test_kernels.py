@@ -216,3 +216,66 @@ def test_wkv6_state_carry_across_calls():
                                np.asarray(y_full), rtol=1e-5, atol=1e-5)
     np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# latency histogram (batched execution plane)
+# ---------------------------------------------------------------------------
+
+HIST_SHAPES = [
+    # (L lanes, N samples, B bins)
+    (1, 64, 8),
+    (4, 128, 16),
+    (3, 96, 24),   # N, B not powers of two
+]
+
+
+def _hist_inputs(shape, seed=0):
+    L, N, B = shape
+    ks = jax.random.split(jax.random.key(seed), 2)
+    # log-spaced edges per lane (the transient plane's convention)
+    lo = 0.5 + jnp.arange(L, dtype=jnp.float32)[:, None]
+    edges = lo * jnp.logspace(0.0, 2.0, B + 1)[None, :]
+    samples = jax.random.uniform(ks[0], (L, N), jnp.float32,
+                                 minval=0.1, maxval=200.0)
+    valid = (jax.random.uniform(ks[1], (L, N)) < 0.7).astype(jnp.float32)
+    return samples, valid, edges
+
+
+@pytest.mark.parametrize("shape", HIST_SHAPES)
+def test_latency_hist_kernel_matches_ref(shape):
+    from repro.kernels.latency_hist import latency_hist
+
+    samples, valid, edges = _hist_inputs(shape)
+    out = latency_hist(samples, valid, edges, interpret=True)
+    expect = ref.ref_latency_hist(samples, valid, edges)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+    # masked samples never land anywhere; every valid one lands somewhere
+    assert int(out.sum()) == int(valid.sum())
+
+
+def test_latency_hist_matches_searchsorted_binning():
+    """The oracle's bin convention is exactly transient.py's
+    searchsorted(edges) - 1 with end-bin clamping."""
+    L, N, B = 2, 40, 12
+    samples, valid, edges = _hist_inputs((L, N, B), seed=3)
+    # include exact-edge and out-of-range samples
+    samples = samples.at[:, 0].set(edges[:, 3]).at[:, 1].set(1e9)
+    samples = samples.at[:, 2].set(0.0)
+    hist = ref.ref_latency_hist(samples, valid, edges)
+    for l in range(L):
+        bins = np.clip(np.searchsorted(np.asarray(edges[l]),
+                                       np.asarray(samples[l])) - 1, 0, B - 1)
+        expect = np.zeros(B, np.int32)
+        for b, v in zip(bins, np.asarray(valid[l])):
+            expect[b] += int(v)
+        np.testing.assert_array_equal(np.asarray(hist[l]), expect)
+
+
+def test_latency_hist_ops_dispatch():
+    from repro.kernels.ops import latency_hist as op
+
+    samples, valid, edges = _hist_inputs((2, 64, 8), seed=5)
+    cpu = op(samples, valid, edges)                  # ref fast path
+    pallas = op(samples, valid, edges, use_pallas=True)  # interpret mode
+    np.testing.assert_array_equal(np.asarray(cpu), np.asarray(pallas))

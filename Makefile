@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke parity-smoke measured-smoke examples-smoke docs-links check ci clean
+.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -22,6 +22,14 @@ parity-smoke:
 # executable variant - fails on any station outside its tolerance
 measured-smoke:
 	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only measured
+
+# the shard axis, shrunk: uniform shard-count scaling on the flattened
+# MVA path, the skewed hot shard + autotune_sharded budget split, the
+# live-resharding transient (dip then recover above pre-split), and a
+# measured 4-shard deployment with per-shard parity + per-key-partition
+# linearizability
+shard-smoke:
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only shards
 
 # cheap figures + the sweep, transient and variant engines: exercises the
 # batched MVA kernel, the stochastic scan engine (failover benchmark), the
@@ -45,13 +53,14 @@ examples-smoke:
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test parity-smoke measured-smoke bench-smoke examples-smoke
+check: docs-links test parity-smoke measured-smoke shard-smoke bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
 	JAX_PLATFORMS=cpu $(MAKE) test
 	JAX_PLATFORMS=cpu $(MAKE) parity-smoke
 	JAX_PLATFORMS=cpu $(MAKE) measured-smoke
+	JAX_PLATFORMS=cpu $(MAKE) shard-smoke
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
 	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 

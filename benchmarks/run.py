@@ -11,6 +11,7 @@
             clients measured in ONE jitted device call
   sweep  whole-surface config sweep + budget autotune (one jitted call)
   variants  protocol-variant plane: Mencius + S-Paxos vs baselines (Figs. 24-28)
+  shards  the shard axis: scaling, skew, budget splits, live resharding
   roofline  dry-run roofline readout (40 cells x 2 meshes)
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -30,6 +31,7 @@ from . import (
     protocol_messages,
     read_scalability,
     roofline_report,
+    shards,
     skew,
     sweep,
     variants,
@@ -47,6 +49,7 @@ MODULES = [
     ("measured", measured_surface),
     ("sweep", sweep),
     ("variants", variants),
+    ("shards", shards),
     ("roofline", roofline_report),
 ]
 
@@ -91,6 +94,14 @@ benchmarks (label: paper target, typical runtime on one CPU core):
             Mencius skip-storm + S-Paxos payload-ramp transients;
             cross-variant budget-19 autotune (which protocol wins?)
             BENCH_SMOKE=1 shrinks the transients                (~10 s)
+  shards    the shard axis through every plane: uniform shard-count
+            scaling (min-law exactly linear, S=1..8 in one flattened
+            MVA call), skewed hot shard + autotune_sharded's
+            asymmetric budget split, the live-resharding transient
+            (hot-shard split under load: dip then recover above the
+            pre-split level), and a measured 4-shard deployment with
+            per-shard parity + per-key-partition linearizability;
+            BENCH_SMOKE=1 shrinks = make shard-smoke            (~10 s)
   roofline  dry-run roofline readout, needs results/dryrun/     (<1 s)
 
 run a subset:    python -m benchmarks.run --only fig28,sweep

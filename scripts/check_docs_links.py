@@ -25,7 +25,13 @@ Four checks over README.md, docs/*.md and benchmarks/README.md:
 * **batched-plane names** - every ``batched_execution.<name>`` a doc
   cites must be a def/class in ``src/repro/core/batched_execution.py``.
   That module imports JAX, so it cannot join the synthetic stdlib-only
-  package below - its surface is checked by regex over the source.
+  package below - its surface is checked by regex over the source;
+* **shard-plane names** - every ``ShardingSpec`` / ``Sharded*`` citation
+  (``ShardedDeployment``, ``ShardedAutotuneResult``, ...) must resolve
+  to a def/class somewhere in ``repro.core``: the stdlib-only modules
+  join the synthetic package, the JAX-importing ones (``sweep.py``,
+  ``autotune.py``, ``transient.py``, ``batched_execution.py``) are
+  regex-scraped like the batched surface.
 
 The registry is loaded through a synthetic package (``api.py`` +
 ``analytical.py`` + ``execution.py`` and the correctness-plane modules it
@@ -80,12 +86,30 @@ BATCHED_REF_RE = re.compile(
     r"batched_execution\.(?!py\b)([A-Za-z_][A-Za-z0-9_]*)")
 DEF_OR_CLASS_RE = re.compile(r"^(?:def|class)\s+([A-Za-z_][A-Za-z0-9_]*)",
                              re.MULTILINE)
+# shard-plane citations: ShardingSpec plus the Sharded* family
+# (ShardedDeployment, ShardedAutotuneResult, ...).  Any CamelCase token
+# matching this shape must be a real def/class in repro.core.
+SHARD_REF_RE = re.compile(r"\b(ShardingSpec|Sharded[A-Z][A-Za-z0-9]*)\b")
+# the shard surface spans stdlib-only modules (sharding, execution, api)
+# and JAX-importing ones (sweep, autotune, transient, batched_execution);
+# a source scrape covers both without importing anything
+SHARD_SOURCE_MODULES = ("api", "sharding", "execution", "sweep",
+                        "autotune", "transient", "batched_execution")
 
 
 def batched_api() -> set[str]:
     """Top-level def/class names in the batched execution module."""
     src = (ROOT / "src" / "repro" / "core" / "batched_execution.py")
     return set(DEF_OR_CLASS_RE.findall(src.read_text()))
+
+
+def shard_api() -> set[str]:
+    """def/class names across every module hosting shard-plane surface."""
+    core = ROOT / "src" / "repro" / "core"
+    names: set[str] = set()
+    for mod in SHARD_SOURCE_MODULES:
+        names |= set(DEF_OR_CLASS_RE.findall((core / f"{mod}.py").read_text()))
+    return names
 
 
 def registered_labels() -> set[str]:
@@ -122,6 +146,7 @@ def main() -> int:
     labels = registered_labels()
     variants, executables = registry_variants()
     batched_names = batched_api()
+    shard_names = shard_api()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -169,6 +194,13 @@ def main() -> int:
                 missing.append((doc.relative_to(ROOT),
                                 f"{m.group(0)} (no such def/class in "
                                 f"src/repro/core/batched_execution.py)"))
+        for name in sorted(set(SHARD_REF_RE.findall(text))):
+            checked += 1
+            if name not in shard_names:
+                missing.append((doc.relative_to(ROOT),
+                                f"{name} (no such def/class in any shard-"
+                                f"plane module: "
+                                f"{', '.join(SHARD_SOURCE_MODULES)})"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

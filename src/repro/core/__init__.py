@@ -30,9 +30,11 @@ emit measured msgs/cmd + latency histograms (validate_batched for parity).
 from .api import (
     MIXED_50_50,
     READ_HEAVY,
+    UNSHARDED,
     WRITE_ONLY,
     ExecutableSpec,
     Knob,
+    ShardingSpec,
     VariantSpec,
     Workload,
     as_f_write,
@@ -78,10 +80,13 @@ from .batched_execution import (
 )
 from .autotune import (
     AutotuneResult,
+    ShardChoice,
+    ShardedAutotuneResult,
     TraceStep,
     VariantAutotuneResult,
     VariantChoice,
     autotune,
+    autotune_sharded,
     autotune_variants,
     bottleneck_trace,
     variant_candidate_configs,
@@ -91,9 +96,14 @@ from .craq import CraqDeployment
 from .execution import (
     ExecutionTrace,
     ParityReport,
+    ShardedDeployment,
+    ShardedExecutionTrace,
+    ShardedParityReport,
     StationParity,
     default_config,
+    run_sharded,
     run_variant,
+    validate_sharded,
     validate_variant,
     workload_ops,
 )
@@ -105,6 +115,17 @@ from .linearizability import (
 )
 from .mencius import MenciusDeployment
 from .messages import Command, noop_command
+from .sharding import (
+    check_linearizable_partitioned,
+    flatten_shards,
+    partition_history,
+    partition_ops,
+    shard_column,
+    shard_demands,
+    shard_weights,
+    split_counts,
+    split_weights,
+)
 from .protocols import (
     CompartmentalizedMultiPaxos,
     DeploymentConfig,
@@ -138,6 +159,7 @@ from .transient import (
     burst_events,
     failover_schedule,
     mencius_skip_storm_schedule,
+    resharding_schedule,
     scale_schedule,
     schedule_from_demands,
     simulate_transient,
@@ -147,7 +169,7 @@ from .transient import (
 from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
-    "MIXED_50_50", "READ_HEAVY", "WRITE_ONLY",
+    "MIXED_50_50", "READ_HEAVY", "UNSHARDED", "WRITE_ONLY",
     "AppendLog", "AutotuneResult", "BatchedExecutionResult",
     "BatchedParityReport", "CRASH", "Command",
     "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
@@ -155,30 +177,39 @@ __all__ = [
     "ExecutionTrace", "GridQuorums", "History",
     "KVStore", "Knob", "MajorityQuorums", "MenciusDeployment", "Network",
     "Node", "Operation", "ParityReport", "Register", "SPaxosDeployment",
-    "STATION_ORDER", "Station", "StationParity", "SweepSpec", "TraceStep",
+    "STATION_ORDER", "ShardChoice", "ShardedAutotuneResult",
+    "ShardedDeployment", "ShardedExecutionTrace", "ShardedParityReport",
+    "ShardingSpec", "Station", "StationParity", "SweepSpec", "TraceStep",
     "TransientResult",
     "UnreplicatedStateMachine", "VARIANT_MODELS", "VariantAutotuneResult",
     "VariantChoice", "VariantSpec", "Workload",
-    "ablation_steps", "as_f_write", "autotune", "autotune_variants",
+    "ablation_steps", "as_f_write", "autotune", "autotune_sharded",
+    "autotune_variants",
     "bottleneck_trace", "build_schedule", "burst_events", "calibrate_alpha",
-    "check_linearizable", "check_register_reads", "check_slot_order",
+    "check_linearizable", "check_linearizable_partitioned",
+    "check_register_reads", "check_slot_order",
     "compartmentalized_model", "compile_models", "compile_sweep",
     "config_variant", "craq_chain_model", "craq_model",
     "craq_station_demands", "default_config", "des_throughput",
     "execute_configs",
     "effective_batch_size", "executable_variants",
-    "failover_schedule", "fluid_throughput", "fluid_throughput_batch",
+    "failover_schedule", "flatten_shards",
+    "fluid_throughput", "fluid_throughput_batch",
     "full_compartmentalized", "grids_under", "knob", "make_state_machine",
     "mencius_model", "mencius_skip_storm_schedule", "mixed_workload_speedup",
     "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
-    "mva_curves_from_demands", "noop_command", "read_scalability_law",
+    "mva_curves_from_demands", "noop_command",
+    "partition_history", "partition_ops", "read_scalability_law",
     "register_executable", "register_variant", "registered_variants",
-    "resolve_workload", "run_variant", "run_variant_batched",
-    "scale_schedule", "schedule_from_demands", "simulate_transient",
-    "spaxos_model", "spaxos_payload_ramp_schedule", "stack_demands",
+    "resharding_schedule", "resolve_workload",
+    "run_sharded", "run_variant", "run_variant_batched",
+    "scale_schedule", "schedule_from_demands",
+    "shard_column", "shard_demands", "shard_weights", "simulate_transient",
+    "spaxos_model", "spaxos_payload_ramp_schedule",
+    "split_counts", "split_weights", "stack_demands",
     "temporary_variants", "transient_throughput", "unregister_variant",
     "unreplicated_model",
-    "validate_batched", "validate_variant",
+    "validate_batched", "validate_sharded", "validate_variant",
     "vanilla_mencius_model", "vanilla_multipaxos",
     "vanilla_spaxos_model",
     "variant_candidate_configs", "variant_spec", "workload_ops",

@@ -48,6 +48,7 @@ from __future__ import annotations
 import contextlib
 import itertools
 import warnings
+import zlib
 from collections import abc
 from dataclasses import dataclass, replace
 from typing import (
@@ -208,6 +209,102 @@ def resolve_workload(workload: Optional[Union["Workload", float]] = None,
         return Workload(f_write=float(workload))
     raise TypeError(f"{where}: expected a Workload (or legacy float), got "
                     f"{type(workload).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# ShardingSpec: the shard axis, as one value
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardingSpec:
+    """State partitioned across ``n_shards`` independent replicated groups.
+
+    A sharded system runs N copies of a registered variant, each owning a
+    hash partition of the key space; clients route by key.  One spec
+    drives every plane:
+
+    * **analytical / sweep / transient** - each shard ``s`` sees a
+      fraction ``w_s`` of the traffic, so its station demands are the
+      per-command table scaled by ``w_s`` (probabilistic-routing visit
+      ratios).  The sharded demand tensor ``[M, S, K]`` flattens to
+      ``[M, S*K]`` and flows through the *same* jitted MVA/fluid/scan
+      paths; the bottleneck law becomes
+      ``T = min_s alpha / (w_s * max_k d[k])`` - uniform weights
+      multiply peak throughput by exactly ``n_shards``.
+    * **execution** - ``shard_of(key)`` is stable crc32 hash routing
+      (never Python's per-process randomized ``hash``), used by
+      :class:`~repro.core.execution.ShardedDeployment` for client-side
+      routing and by the history partitioner for per-key-partition
+      linearizability checks.
+
+    Per-shard weights reuse the :class:`Workload` skew machinery: under
+    ``skew_p > 0`` the shard owning the hot key absorbs
+    ``skew_p + (1 - skew_p) / S`` of the traffic (hot key plus its share
+    of the uniform remainder) and every other shard
+    ``(1 - skew_p) / S``.  Explicit ``weights`` override the derivation
+    (they are normalized); ``hot_key`` names the key whose owner is the
+    hot shard (the execution harness's hot key is ``"hot"``).
+    """
+
+    n_shards: int = 1
+    weights: Optional[Tuple[float, ...]] = None
+    hot_key: str = "hot"
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(
+                f"ShardingSpec.n_shards must be >= 1: {self.n_shards}")
+        if self.weights is not None:
+            w = tuple(float(x) for x in self.weights)
+            if len(w) != self.n_shards:
+                raise ValueError(
+                    f"ShardingSpec.weights must have n_shards="
+                    f"{self.n_shards} entries: got {len(w)}")
+            if any(x < 0.0 for x in w) or sum(w) <= 0.0:
+                raise ValueError(
+                    f"ShardingSpec.weights must be non-negative with a "
+                    f"positive sum: {w}")
+            object.__setattr__(self, "weights", w)
+
+    def shard_of(self, key: Any) -> int:
+        """Stable hash routing: which shard owns ``key``.  crc32 keeps the
+        mapping identical across processes and runs (Python's builtin
+        ``hash`` is randomized per process)."""
+        return zlib.crc32(str(key).encode()) % self.n_shards
+
+    @property
+    def hot_shard(self) -> int:
+        """The shard that owns the workload's hot key."""
+        return self.shard_of(self.hot_key)
+
+    def resolved_weights(
+            self, workload: Optional["Workload"] = None) -> Tuple[float, ...]:
+        """Per-shard traffic fractions, normalized to sum to 1.
+
+        Explicit ``weights`` win; otherwise the :class:`Workload` skew
+        derives them (hot shard ``skew_p + (1 - skew_p)/S``, the rest
+        ``(1 - skew_p)/S``); with no skew the split is uniform."""
+        s = self.n_shards
+        if self.weights is not None:
+            total = sum(self.weights)
+            return tuple(x / total for x in self.weights)
+        p = workload.skew_p if workload is not None else 0.0
+        if p <= 0.0 or s == 1:
+            return (1.0 / s,) * s
+        base = (1.0 - p) / s
+        return tuple(base + p if i == self.hot_shard else base
+                     for i in range(s))
+
+    def describe(self) -> str:
+        if self.weights is not None:
+            w = ", ".join(f"{x:g}" for x in self.resolved_weights())
+            return f"{self.n_shards} shards (weights {w})"
+        return f"{self.n_shards} shards"
+
+
+#: The degenerate single-group spec (every plane's implicit default).
+UNSHARDED = ShardingSpec(n_shards=1)
 
 
 # ---------------------------------------------------------------------------

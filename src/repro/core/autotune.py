@@ -28,7 +28,7 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from .analytical import DeploymentModel, multipaxos_model
-from .api import Workload, resolve_workload, variant_spec
+from .api import ShardingSpec, Workload, resolve_workload, variant_spec
 from .sweep import (
     CompiledSweep,
     Config,
@@ -418,3 +418,124 @@ def autotune_variants(budget: int, alpha: float,
     return VariantAutotuneResult(winner=winner, per_variant=per_variant,
                                  budget=budget,
                                  n_candidates=int(feasible.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Sharded search: split one machine budget across shard groups
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardChoice:
+    """One shard group's slice of a sharded budget split."""
+
+    shard: int
+    weight: float              # traffic fraction routed to this shard
+    budget: int                # machines allocated by the split
+    machines: int              # machines the chosen config actually uses
+    config: Config
+    peak: float                # shard-local peak, cmds/s
+    effective: float           # peak / weight: system cap if this binds
+
+
+@dataclass(frozen=True)
+class ShardedAutotuneResult:
+    """A machine budget split across shards, each shard autotuned.
+
+    ``total_peak = min_s peak_s / w_s``: the system saturates when the
+    worst-provisioned shard can no longer keep up with its traffic
+    share.  Under skew the split is *asymmetric* - the hot shard buys
+    more machines per unit of budget."""
+
+    sharding: "ShardingSpec"
+    budget: int
+    weights: Tuple[float, ...]
+    shards: Tuple[ShardChoice, ...]
+    total_peak: float          # cmds/s across the whole sharded system
+    bottleneck_shard: int      # the shard binding total_peak
+    machines: int              # sum of machines actually used
+    n_candidates: int          # candidate configs in the per-shard space
+
+
+def autotune_sharded(budget: int, alpha: float, sharding: "ShardingSpec",
+                     workload: Optional[Union[Workload, float]] = None,
+                     f_write: Optional[float] = None, f: int = 1,
+                     compiled: Optional[CompiledSweep] = None,
+                     ) -> ShardedAutotuneResult:
+    """Split a machine budget across ``sharding.n_shards`` groups and pick
+    each group's best deployment.
+
+    The compiled candidate space is shared by all shards (one batched
+    bottleneck-law evaluation); a lookup table maps every per-shard
+    budget ``b`` to the best peak any config achieves with ``<= b``
+    machines.  A greedy water-filling loop then grants machines one at a
+    time to whichever shard currently binds
+    ``total = min_s peak_s / w_s`` - so under key skew the hot shard
+    (larger ``w_s``) ends up with a bigger, different config than the
+    cold shards, which is exactly why the split is searched rather than
+    divided evenly."""
+    w = resolve_workload(workload, f_write, where="autotune_sharded")
+    s = sharding.n_shards
+    weights = np.asarray(sharding.resolved_weights(w), dtype=np.float64)
+    min_b = 1 + 1 + (f + 1) + (f + 1)
+    if budget < s * min_b:
+        raise ValueError(
+            f"budget {budget} cannot hold {s} shards x {min_b} machines "
+            f"(leader + 1 proxy + ({f+1})x1 grid + {f+1} replicas each)")
+    max_b = budget - (s - 1) * min_b
+    if compiled is None:
+        compiled = compile_sweep(candidate_spec(max_b, f=f))
+    if compiled.configs is None:
+        raise ValueError(
+            "compiled sweep carries no configs - build it with compile_sweep")
+    peaks = compiled.peak_throughput(alpha, w)
+    machines = compiled.machines.astype(np.int64)
+
+    # best config for every per-shard budget: exact at-cost table, then a
+    # prefix max so best_idx[b] is the best config using <= b machines
+    # (ties break toward fewer machines via the >= prefix update)
+    best_peak = np.full(max_b + 1, -np.inf)
+    best_idx = np.full(max_b + 1, -1, dtype=np.int64)
+    for i, b in enumerate(machines):
+        if b <= max_b and peaks[i] > best_peak[b]:
+            best_peak[b] = peaks[i]
+            best_idx[b] = i
+    for b in range(1, max_b + 1):
+        if best_peak[b - 1] >= best_peak[b]:
+            best_peak[b] = best_peak[b - 1]
+            best_idx[b] = best_idx[b - 1]
+    if best_idx[min_b] < 0:
+        raise ValueError(
+            f"no candidate config fits the per-shard floor of {min_b} "
+            f"machines (smallest uses {int(machines.min())})")
+
+    # water-fill: every machine goes to the shard binding the system cap
+    budgets = np.full(s, min_b, dtype=np.int64)
+    while int(budgets.sum()) < budget:
+        with np.errstate(divide="ignore"):
+            eff = np.where(weights > 0, best_peak[budgets] / weights, np.inf)
+        # ties (uniform weights) break toward the least-provisioned shard,
+        # so symmetric traffic gets a symmetric split
+        budgets[int(np.lexsort((budgets, eff))[0])] += 1
+
+    shards = []
+    for i in range(s):
+        idx = int(best_idx[budgets[i]])
+        peak_i = float(best_peak[budgets[i]])
+        eff = peak_i / weights[i] if weights[i] > 0 else np.inf
+        shards.append(ShardChoice(
+            shard=i, weight=float(weights[i]), budget=int(budgets[i]),
+            machines=int(machines[idx]), config=dict(compiled.configs[idx]),
+            peak=peak_i, effective=float(eff)))
+    effective = np.array([c.effective for c in shards])
+    bottleneck = int(np.argmin(effective))
+    return ShardedAutotuneResult(
+        sharding=sharding,
+        budget=budget,
+        weights=tuple(float(x) for x in weights),
+        shards=tuple(shards),
+        total_peak=float(effective[bottleneck]),
+        bottleneck_shard=bottleneck,
+        machines=sum(c.machines for c in shards),
+        n_candidates=len(compiled),
+    )

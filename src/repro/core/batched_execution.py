@@ -58,8 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .analytical import STATION_ORDER, calibrate_alpha
-from .api import Config, Workload, resolve_workload, variant_spec
+from .api import Config, ShardingSpec, Workload, resolve_workload, variant_spec
 from .execution import StationParity, default_config, run_variant
+from .sharding import shard_weights, split_counts
 from .sweep import config_variant
 from .transient import _quantile_from_hist
 from ..kernels.ops import latency_hist
@@ -283,18 +284,41 @@ class BatchedExecutionResult:
     latency_mean: np.ndarray       # [M, S] seconds
     latency_p50: np.ndarray        # [M, S]
     latency_p99: np.ndarray        # [M, S]
-    completed: np.ndarray          # [M, S] ops drained (== n_commands)
+    completed: np.ndarray          # [M, S] ops drained (== lane budget)
     hist: np.ndarray               # [M, S, B]
     bin_edges: np.ndarray          # [M, B + 1]
     dt: np.ndarray                 # [M] seconds per step
     n_steps: int
     alpha: float
+    # Shard axis (sharded runs only): rows become M_cfg x n_shards lanes
+    # in config-major order; ``lane_config[m]`` / ``lane_shard[m]`` map a
+    # lane back to its (config, shard) and ``lane_commands[m]`` is its
+    # command budget (largest-remainder split of ``n_commands`` by the
+    # shard traffic weights).  All None when no ShardingSpec was given.
+    sharding: Optional[ShardingSpec] = None
+    lane_config: Optional[np.ndarray] = None   # [M] config index
+    lane_shard: Optional[np.ndarray] = None    # [M] shard index
+    lane_commands: Optional[np.ndarray] = None  # [M] per-lane op budget
 
     def __len__(self) -> int:
         return len(self.configs)
 
     def variant(self, m: int) -> str:
         return config_variant(self.configs[m])
+
+    def shard_lanes(self, config_index: int = 0) -> np.ndarray:
+        """Row indices of config ``config_index``'s shard lanes (the
+        whole row range when the run was unsharded)."""
+        if self.lane_config is None:
+            return np.asarray([config_index])
+        return np.nonzero(self.lane_config == config_index)[0]
+
+    def sharded_throughput(self, config_index: int = 0) -> np.ndarray:
+        """Aggregate cmds/s of one config across its shard lanes, per
+        seed.  Shard groups are independent clusters draining their
+        traffic fractions concurrently, so the system rate is the sum of
+        the per-shard rates."""
+        return self.throughput[self.shard_lanes(config_index)].sum(axis=0)
 
     def station_row(self, m: int) -> Dict[str, float]:
         """Measured msgs/cmd/server of config m, keyed by station name
@@ -327,6 +351,7 @@ def execute_configs(
     n_bins: int = 64,
     state_machine: str = "kv",
     max_steps: int = 200_000,
+    sharding: Optional[ShardingSpec] = None,
 ) -> BatchedExecutionResult:
     """Execute a grid of registered-variant configs as one batched device
     call of closed-loop client populations.
@@ -342,7 +367,16 @@ def execute_configs(
     ``exponential_service=False`` (default) is the parity mode: service is
     deterministic, the makespan is bounded, and every lane provably drains
     its budget.  ``True`` matches the MVA product-form assumptions for
-    latency-surface work."""
+    latency-surface work.
+
+    With a :class:`~repro.core.api.ShardingSpec` each config expands to
+    ``n_shards`` lanes - independent shard groups sharing the config's
+    probe calibration, each draining its largest-remainder slice of
+    ``n_commands`` (per the shard traffic weights) behind its own client
+    population.  Rows of the result are then (config x shard) in
+    config-major order; ``lane_config`` / ``lane_shard`` /
+    ``lane_commands`` map them back and
+    :meth:`BatchedExecutionResult.sharded_throughput` aggregates."""
     if not configs:
         raise ValueError("execute_configs: empty config list")
     w = resolve_workload(workload, where="execute_configs")
@@ -354,17 +388,25 @@ def execute_configs(
         raise ValueError("execute_configs: need at least one seed")
     n_probe = probe_n if probe_n is not None else n_commands
     k = len(STATION_ORDER)
-    m = len(configs)
+    n_cfg = len(configs)
     a = alpha if alpha is not None else calibrate_alpha()
 
-    cost_w = np.zeros((m, k))
-    cost_r = np.zeros((m, k))
-    d_w = np.zeros((m, k))
-    d_r = np.zeros((m, k))
-    f_eff = np.zeros((m,))
-    cls_all: List[np.ndarray] = []
-    budget_all: List[np.ndarray] = []
-    n_writes = np.zeros((m,), dtype=np.int64)
+    sharded = sharding is not None and sharding.n_shards > 1
+    n_sh = sharding.n_shards if sharded else 1
+    if sharded:
+        lane_n = np.tile(split_counts(n_commands, shard_weights(sharding, w)),
+                         n_cfg).astype(np.int64)
+    else:
+        lane_n = np.full((n_cfg,), n_commands, dtype=np.int64)
+    m = n_cfg * n_sh
+    lane_cfg = np.repeat(np.arange(n_cfg), n_sh)
+    lane_shard = np.tile(np.arange(n_sh), n_cfg)
+
+    cost_w = np.zeros((n_cfg, k))
+    cost_r = np.zeros((n_cfg, k))
+    d_w_cfg = np.zeros((n_cfg, k))
+    d_r_cfg = np.zeros((n_cfg, k))
+    f_eff = np.zeros((n_cfg,))
     for i, raw in enumerate(configs):
         cfg = dict(raw)
         cfg.setdefault("variant", "compartmentalized")
@@ -377,20 +419,45 @@ def execute_configs(
         cost_w[i], cost_r[i], _ = _probe_costs(
             name, cfg, w, exe, n_probe, probe_seed, state_machine)
         dw_row, dr_row, _ = spec.model(cfg, w).demand_slots()
-        d_w[i, :len(dw_row)] = np.asarray(dw_row[:k]) / a
-        d_r[i, :len(dr_row)] = np.asarray(dr_row[:k]) / a
+        d_w_cfg[i, :len(dw_row)] = np.asarray(dw_row[:k]) / a
+        d_r_cfg[i, :len(dr_row)] = np.asarray(dr_row[:k]) / a
         f_eff[i] = 1.0 if exe.reads_as_writes else w.f_write
-        cls, budget, n_w = _class_streams(n_commands, f_eff[i], n_clients,
-                                          seeds_arr, base_seed=probe_seed + i)
+
+    # expand configs to lanes: shards of a config share its probe costs
+    # and per-command demands - a shard runs the full deployment, it just
+    # sees a fraction of the traffic
+    cost_w = np.repeat(cost_w, n_sh, axis=0)
+    cost_r = np.repeat(cost_r, n_sh, axis=0)
+    d_w = np.repeat(d_w_cfg, n_sh, axis=0)
+    d_r = np.repeat(d_r_cfg, n_sh, axis=0)
+    f_eff = np.repeat(f_eff, n_sh)
+
+    cls_all: List[np.ndarray] = []
+    budget_all: List[np.ndarray] = []
+    n_writes = np.zeros((m,), dtype=np.int64)
+    for i in range(m):
+        cls, budget, n_w = _class_streams(int(lane_n[i]), f_eff[i],
+                                          n_clients, seeds_arr,
+                                          base_seed=probe_seed + i)
         cls_all.append(cls)
         budget_all.append(budget)
         n_writes[i] = n_w
+    length = max(c.shape[2] for c in cls_all)
+    cls_all = [np.pad(c, ((0, 0), (0, 0), (0, length - c.shape[2])))
+               for c in cls_all]
 
     blend = f_eff[:, None] * d_w + (1.0 - f_eff[:, None]) * d_r
-    has_w = n_writes > 0
-    has_r = n_writes < n_commands
-    active = ((has_w[:, None] & (d_w > 0))
-              | (has_r[:, None] & (d_r > 0)))               # [M, K]
+    # station activity is a property of the *config's* mix, not of any one
+    # shard's integer split: a zero-command lane still routes through its
+    # config's active stations (and trivially drains nothing)
+    cfg_w = np.zeros((m,), dtype=bool)
+    cfg_r = np.zeros((m,), dtype=bool)
+    for i in range(n_cfg):
+        rows = slice(i * n_sh, (i + 1) * n_sh)
+        cfg_w[rows] = bool(n_writes[rows].sum() > 0)
+        cfg_r[rows] = bool(n_writes[rows].sum() < int(lane_n[rows].sum()))
+    active = ((cfg_w[:, None] & (d_w > 0))
+              | (cfg_r[:, None] & (d_r > 0)))               # [M, K]
     entry, nxt = _routing(active)
     dt = blend.max(axis=1) / oversample
     if np.any(dt <= 0):
@@ -399,8 +466,8 @@ def execute_configs(
     # deterministic makespan bound: each station serves every command at
     # most once, plus one step per (command, station) for instant drains
     d_hot = np.where(active, np.maximum(d_w, d_r), 0.0)
-    span = (n_commands + n_clients) * d_hot.sum(axis=1)
-    steps = span / dt + (n_commands + n_clients) * active.sum(axis=1)
+    span = (lane_n + n_clients) * d_hot.sum(axis=1)
+    steps = span / dt + (lane_n + n_clients) * active.sum(axis=1)
     margin = 4.0 if exponential_service else 1.3
     n_steps = int(math.ceil(margin * float(steps.max()))) + 8
     n_steps = -(-n_steps // 256) * 256  # bucket: reuse the jit cache
@@ -425,11 +492,11 @@ def execute_configs(
     done_w = np.asarray(done_w, dtype=np.int64)
     done_r = np.asarray(done_r, dtype=np.int64)
     done = done_w + done_r
-    if not np.all(done == n_commands):
-        short = np.argwhere(done != n_commands)
+    if not np.all(done == lane_n[:, None]):
+        short = np.argwhere(done != lane_n[:, None])
         raise RuntimeError(
             f"execute_configs: lanes {short.tolist()} drained "
-            f"{done[tuple(short.T)].tolist()} of {n_commands} ops in "
+            f"{done[tuple(short.T)].tolist()} of their op budgets in "
             f"{n_steps} steps - raise oversample margin or max_steps")
 
     s = seeds_arr.size
@@ -449,10 +516,10 @@ def execute_configs(
     # completion-weighted blend of the probe-calibrated per-class costs:
     # the measured msgs/cmd surface (float64, so exact stations stay exact)
     msgs = (done_w[:, 0, None] * cost_w + done_r[:, 0, None] * cost_r) \
-        / n_commands
+        / np.maximum(lane_n, 1)[:, None]
 
     return BatchedExecutionResult(
-        configs=tuple(dict(c) for c in configs),
+        configs=tuple(dict(configs[int(ci)]) for ci in lane_cfg),
         workload=w,
         n_commands=n_commands,
         n_clients=n_clients,
@@ -461,7 +528,7 @@ def execute_configs(
         n_writes=done_w[:, 0].copy(),
         cost_write=cost_w,
         cost_read=cost_r,
-        throughput=n_commands / np.maximum(t_last, 1e-30),
+        throughput=lane_n[:, None] / np.maximum(t_last, 1e-30),
         latency_mean=lat_sum / np.maximum(done, 1),
         latency_p50=_quantile_from_hist(hist, edges, 0.50),
         latency_p99=_quantile_from_hist(hist, edges, 0.99),
@@ -471,6 +538,10 @@ def execute_configs(
         dt=dt,
         n_steps=n_steps,
         alpha=a,
+        sharding=sharding if sharded else None,
+        lane_config=lane_cfg if sharded else None,
+        lane_shard=lane_shard if sharded else None,
+        lane_commands=lane_n if sharded else None,
     )
 
 

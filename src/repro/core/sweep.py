@@ -51,7 +51,14 @@ from .analytical import (
     DeploymentModel,
     stack_demands,
 )
-from .api import Config, Workload, resolve_workload, variant_spec
+from .api import (
+    Config,
+    ShardingSpec,
+    Workload,
+    resolve_workload,
+    variant_spec,
+)
+from .sharding import flatten_shards, shard_demands
 from .simulator import fluid_throughput_from_demands, mva_curves_from_demands
 from .transient import (
     Event,
@@ -60,6 +67,28 @@ from .transient import (
     burst_events,
     simulate_transient,
 )
+
+
+def _sharded_events(events: Sequence[Event], n_stations: int,
+                    n_shards: int) -> List[Event]:
+    """Expand station-named events to every shard's flattened column.
+
+    After :func:`~repro.core.sharding.flatten_shards` the demand columns
+    are ``shard * K + station``; an event naming a station (or a raw
+    single-deployment column index) applies to that station in *every*
+    shard group.  Events already addressing the flattened space (int
+    column >= K) pass through untouched."""
+    out: List[Event] = []
+    for ev in events:
+        col = ev.column()
+        if isinstance(ev.station, int) and ev.station >= n_stations:
+            out.append(ev)  # already a flattened (shard, station) address
+            continue
+        out.extend(
+            Event(station=s * n_stations + col, start=ev.start,
+                  stop=ev.stop, factor=ev.factor)
+            for s in range(n_shards))
+    return out
 
 #: SweepSpec fields that are knob value iterables for the built-in
 #: variants (knob name == field name); everything else is sweep plumbing.
@@ -175,7 +204,8 @@ class CompiledSweep:
         return len(self.models)
 
     def demands(self, workload: Optional[Union[Workload, float]] = None,
-                f_write: Optional[float] = None) -> np.ndarray:
+                f_write: Optional[float] = None,
+                sharding: Optional[ShardingSpec] = None) -> np.ndarray:
         """Effective [M, K] demand matrix under a workload.
 
         The write/read blend is a vectorized re-weighting of the
@@ -183,8 +213,18 @@ class CompiledSweep:
         hints (skew, partial batch fill) and this sweep carries configs,
         rows of variants that declare a ``workload_adapter`` are
         recomputed through it (CRAQ rows pick up dirty-read forwarding,
-        batched rows lose amortization)."""
+        batched rows lose amortization).
+
+        With a :class:`~repro.core.api.ShardingSpec` the tensor gains a
+        shard axis - [M, S, K] with row ``[m, s]`` the per-command table
+        scaled by shard *s*'s traffic fraction (visit-ratio lowering;
+        shard weights derive from the workload's skew).  Note the
+        shard-local hot key is what the *sharding* weights model; the
+        per-row variant adapters still see the same workload."""
         w = resolve_workload(workload, f_write, where="CompiledSweep.demands")
+        if sharding is not None:
+            base = self.demands(w)
+            return shard_demands(base, sharding, w)
         out = (w.f_write * self.demand_write
                + (1.0 - w.f_write) * self.demand_read)
         if not (w.adapts_demands and self.configs is not None):
@@ -211,47 +251,72 @@ class CompiledSweep:
 
     def peak_throughput(self, alpha: float,
                         workload: Optional[Union[Workload, float]] = None,
-                        f_write: Optional[float] = None) -> np.ndarray:
-        """Bottleneck-law peak throughput, [M] cmds/s."""
-        d_max = self.demands(workload, f_write).max(axis=1)
+                        f_write: Optional[float] = None,
+                        sharding: Optional[ShardingSpec] = None) -> np.ndarray:
+        """Bottleneck-law peak throughput, [M] cmds/s.
+
+        Sharded, the law becomes ``min_s alpha / (w_s * max_k d[m, k])``
+        (every shard must keep up with its traffic share) - the max over
+        the flattened (shard, station) columns computes exactly that, so
+        uniform weights scale peak by ``n_shards``."""
+        d = self.demands(workload, f_write, sharding)
+        d_max = d.reshape(d.shape[0], -1).max(axis=1)
         with np.errstate(divide="ignore"):
             return np.where(d_max > 0, alpha / np.maximum(d_max, 1e-300),
                             np.inf)
 
     def bottleneck_indices(self,
                            workload: Optional[Union[Workload, float]] = None,
-                           f_write: Optional[float] = None) -> np.ndarray:
-        return self.demands(workload, f_write).argmax(axis=1)
+                           f_write: Optional[float] = None,
+                           sharding: Optional[ShardingSpec] = None,
+                           ) -> np.ndarray:
+        d = self.demands(workload, f_write, sharding)
+        return d.reshape(d.shape[0], -1).argmax(axis=1)
 
     def bottlenecks(self, workload: Optional[Union[Workload, float]] = None,
-                    f_write: Optional[float] = None) -> List[str]:
-        """Name of the saturating station per config, [M]."""
-        return [STATION_ORDER[i]
-                for i in self.bottleneck_indices(workload, f_write)]
+                    f_write: Optional[float] = None,
+                    sharding: Optional[ShardingSpec] = None) -> List[str]:
+        """Name of the saturating station per config, [M] (sharded:
+        ``s<shard>/<station>``)."""
+        idx = self.bottleneck_indices(workload, f_write, sharding)
+        if sharding is None:
+            return [STATION_ORDER[i] for i in idx]
+        k = self.demand_write.shape[1]
+        return [f"s{i // k}/{STATION_ORDER[i % k]}" for i in idx]
 
     def mva(self, alpha: float, n_clients_max: int = 512,
             workload: Optional[Union[Workload, float]] = None,
             f_write: Optional[float] = None,
+            sharding: Optional[ShardingSpec] = None,
             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Full closed-loop latency-throughput surface in ONE jitted call.
 
-        Returns (clients[N], X[M, N] cmds/s, R[M, N] seconds)."""
-        return mva_curves_from_demands(
-            self.demands(workload, f_write) / alpha, n_clients_max)
+        Returns (clients[N], X[M, N] cmds/s, R[M, N] seconds).  Sharded
+        rows flatten the [M, S, K] tensor to [M, S*K] first: the same
+        jitted MVA kernel then solves every shard's station loads jointly
+        (each column's demand is already visit-ratio-scaled)."""
+        d = self.demands(workload, f_write, sharding)
+        if sharding is not None:
+            d = flatten_shards(d)
+        return mva_curves_from_demands(d / alpha, n_clients_max)
 
     def fluid(self, alpha: float, n_clients: int,
               workload: Optional[Union[Workload, float]] = None,
               f_write: Optional[float] = None,
+              sharding: Optional[ShardingSpec] = None,
               sim_time: float = 1.0, n_steps: int = 2000) -> np.ndarray:
         """Batched fluid cross-check, [M] cmds/s in one jitted call."""
+        d = self.demands(workload, f_write, sharding)
+        if sharding is not None:
+            d = flatten_shards(d)
         return fluid_throughput_from_demands(
-            self.demands(workload, f_write) / alpha, n_clients, sim_time,
-            n_steps)
+            d / alpha, n_clients, sim_time, n_steps)
 
     def transient(self, alpha: float, n_clients: int = 64,
                   workload: Optional[Union[Workload, float]] = None,
                   f_write: Optional[float] = None,
                   events: Optional[Sequence[Event]] = None,
+                  sharding: Optional[ShardingSpec] = None,
                   n_steps: int = 4000, **kwargs) -> TransientResult:
         """Batched stochastic transient run over every config in ONE jitted
         call: (M deployments x S seeds) lanes of the scan engine, with
@@ -264,8 +329,13 @@ class CompiledSweep:
         by under faults."""
         w = resolve_workload(workload, f_write,
                              where="CompiledSweep.transient")
-        base = self.demands(w) / alpha
         evs = list(events) if events else []
+        if sharding is None:
+            base = self.demands(w) / alpha
+        else:
+            base = flatten_shards(self.demands(w, sharding=sharding)) / alpha
+            evs = _sharded_events(evs, self.demand_write.shape[1],
+                                  sharding.n_shards)
         if w.arrival == "bursty":
             evs.extend(burst_events(base.shape[1], factor=w.burst_factor,
                                     fraction=w.burst_fraction,
@@ -279,6 +349,7 @@ class CompiledSweep:
 
     def execute(self, workload: Optional[Union[Workload, float]] = None,
                 n_commands: int = 48, seeds: Union[int, Sequence[int]] = 4,
+                sharding: Optional[ShardingSpec] = None,
                 **kwargs):
         """*Measure* every config in the sweep: probe-calibrate each
         variant's execution plane off the real cluster, then run the whole
@@ -288,14 +359,17 @@ class CompiledSweep:
         state) and :meth:`transient` (faults): same grid, same one-call
         shape, but the per-station msgs/cmd surface is measured, not
         modelled.  Requires a config-bearing sweep (``compile_sweep``)
-        whose variants all register executables."""
+        whose variants all register executables.  With a ``sharding``
+        every config becomes ``n_shards`` independent lanes sharing one
+        probe, command budgets split by shard weight."""
         if self.configs is None:
             raise ValueError(
                 "CompiledSweep.execute needs per-row configs; compile with "
                 "compile_sweep(spec) rather than compile_models(models)")
         from .batched_execution import execute_configs
         return execute_configs(self.configs, workload=workload,
-                               n_commands=n_commands, seeds=seeds, **kwargs)
+                               n_commands=n_commands, seeds=seeds,
+                               sharding=sharding, **kwargs)
 
     def subset(self, indices: Sequence[int]) -> "CompiledSweep":
         """Row-select a sweep (e.g. a shortlist for the expensive
@@ -312,17 +386,21 @@ class CompiledSweep:
     def top_k(self, alpha: float, k: int = 5,
               workload: Optional[Union[Workload, float]] = None,
               f_write: Optional[float] = None,
-              budget: Optional[int] = None) -> List[Tuple[int, float, str]]:
+              budget: Optional[int] = None,
+              sharding: Optional[ShardingSpec] = None,
+              ) -> List[Tuple[int, float, str]]:
         """Best configs by bottleneck-law peak: [(index, peak, bottleneck)].
 
         Ties in peak break toward fewer machines; ``budget`` masks out
-        deployments using more than that many servers."""
+        deployments using more than that many servers (sharded: more than
+        ``budget / n_shards`` per group - every shard runs a copy)."""
         w = resolve_workload(workload, f_write, where="CompiledSweep.top_k")
-        peaks = self.peak_throughput(alpha, w)
+        peaks = self.peak_throughput(alpha, w, sharding=sharding)
+        machines = self.machines * (sharding.n_shards if sharding else 1)
         if budget is not None:
-            peaks = np.where(self.machines <= budget, peaks, -np.inf)
-        order = np.lexsort((self.machines, -peaks))
-        names = self.bottlenecks(w)
+            peaks = np.where(machines <= budget, peaks, -np.inf)
+        order = np.lexsort((machines, -peaks))
+        names = self.bottlenecks(w, sharding=sharding)
         return [(int(i), float(peaks[i]), names[i])
                 for i in order[:k] if np.isfinite(peaks[i]) and peaks[i] > 0]
 

@@ -44,7 +44,11 @@ Demands are piecewise-constant in time: ``demands[w]`` holds during steps
 * :func:`mencius_skip_storm_schedule` / :func:`spaxos_payload_ramp_schedule`
   - protocol-variant scripts (a lagging Mencius leader noop-flooding the
   chosen path; S-Paxos payloads growing while the id-ordering leader's
-  demand stays flat).
+  demand stays flat);
+* :func:`resharding_schedule` - a live hot-shard split under load over
+  flattened ``(shard, station)`` columns: steady skewed traffic, a
+  stop-the-world migration window, then the rebalanced (higher-peak)
+  post-split weights.
 
 Outputs: per-step completion traces (-> per-window throughput), post-
 warmup mean throughput, and latency mean / p50 / p99 from a log-spaced
@@ -66,7 +70,7 @@ from .analytical import (
     mencius_model,
     spaxos_model,
 )
-from .api import Workload, resolve_workload
+from .api import ShardingSpec, Workload, resolve_workload
 from .simulator import demand_vector
 
 #: Demand multiplier that effectively freezes a station (a crash: in-flight
@@ -265,6 +269,55 @@ def spaxos_payload_ramp_schedule(
     ]
     starts = [i / len(windows) for i in range(len(windows))]
     return schedule_from_demands(windows, starts, n_steps)
+
+
+def resharding_schedule(
+    base: np.ndarray,
+    sharding: "ShardingSpec",
+    start: float = 0.4,
+    stop: float = 0.55,
+    migration_factor: float = CRASH,
+    n_steps: int = 4000,
+    workload: Optional[Workload] = None,
+    f_write: Optional[float] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Live resharding: split the hot shard in two, under load.
+
+    Three windows over ``(n_shards + 1) * K`` flattened columns (the
+    original shards plus the destination group, idle pre-split):
+
+    1. ``[0, start)`` - steady state at the sharding's (skew-derived)
+       weights; the destination shard carries zero demand.
+    2. ``[start, stop)`` - the migration window: the hot shard freezes
+       while its state streams out (``migration_factor`` multiplies its
+       every station; the default :data:`CRASH` models a full
+       stop-the-world handoff), so hot-partition traffic stalls and
+       overall throughput dips.
+    3. ``[stop, 1)`` - post-split: the hot shard's traffic is halved,
+       the freed half served by the destination - the bottleneck law's
+       ``min_s alpha/(w_s d_max)`` *rises*, so throughput recovers above
+       its pre-split level.
+
+    ``base`` is a single deployment's per-command demand row ([K] or
+    [1, K]), already divided by ``alpha`` like the other schedule
+    builders.  Returns ``(demands[3, 1, (S+1)*K], step_bounds[3])`` for
+    :func:`simulate_transient`; replayed on the real cluster by
+    ``tests/test_sharded_execution.py``, mirroring the PR-6 failover
+    replay."""
+    from .sharding import flatten_shards, shard_demands, split_weights
+    if not 0.0 < start < stop < 1.0:
+        raise ValueError(
+            f"need 0 < start < stop < 1: start={start}, stop={stop}")
+    w = resolve_workload(workload, f_write, where="resharding_schedule")
+    row = _as_base(base)  # [1, K]
+    pre_w, post_w, hot = split_weights(sharding, w)
+    pre = flatten_shards(shard_demands(row, sharding, weights=pre_w))
+    post = flatten_shards(shard_demands(row, sharding, weights=post_w))
+    k = row.shape[1]
+    mig = pre.copy()
+    mig[:, hot * k:(hot + 1) * k] *= migration_factor
+    return schedule_from_demands([pre, mig, post], [0.0, start, stop],
+                                 n_steps)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,265 @@
+"""The shard axis on the measured planes, and the live-resharding replay.
+
+Acceptance criteria pinned here:
+
+* a 4-shard compartmentalized MultiPaxos executes on the real-cluster
+  plane with per-shard parity within the registered tolerances and
+  per-key-partition linearizability passing;
+* the live-resharding event (hot-shard split under load) replayed on the
+  real cluster shows the same dip-then-recover-above-pre shape the
+  transient plane predicts for :func:`resharding_schedule`
+  (tests/test_sharding.py::test_resharding_transient_shape);
+* the batched executor grows the same shard axis: one jitted call over
+  (config x shard x seed) lanes with hash-split command budgets.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.api import MIXED_50_50, WRITE_ONLY, ShardingSpec, Workload
+from repro.core.batched_execution import execute_configs
+from repro.core.execution import (
+    ShardedDeployment,
+    run_sharded,
+    validate_sharded,
+)
+from repro.core.sharding import (
+    check_linearizable_partitioned,
+    op_key,
+    partition_ops,
+)
+from repro.core.sweep import SweepSpec, compile_sweep
+
+CFG = {"f": 1, "n_proxy_leaders": 3, "grid_rows": 2, "grid_cols": 2,
+       "n_replicas": 2}
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: 4-shard parity + per-key-partition linearizability
+# ---------------------------------------------------------------------------
+
+
+def test_four_shard_parity_acceptance():
+    rep = validate_sharded("compartmentalized", ShardingSpec(4), CFG,
+                           workload=WRITE_ONLY, n_commands=96, seed=1)
+    assert rep.passed, rep.summary()
+    assert rep.shards_checked == 4
+    assert rep.trace.linearizable
+    for tr in rep.trace.shards:
+        assert tr.checker.startswith("per_key"), tr.checker
+    # shard-scaled tables: each shard's parity rows compare against the
+    # same per-command analytical table (per shard-local command)
+    for shard_rep in rep.reports:
+        assert shard_rep is not None
+        assert all(r.ok for r in shard_rep.rows), shard_rep.rows
+        leader = shard_rep.row("leader")
+        assert leader.exact and leader.measured == leader.predicted
+
+
+def test_four_shard_mixed_parity():
+    rep = validate_sharded("compartmentalized", ShardingSpec(4), CFG,
+                           workload=MIXED_50_50, n_commands=96, seed=2)
+    assert rep.passed, rep.summary()
+
+
+def test_run_sharded_routes_and_accounts_every_op():
+    tr = run_sharded("compartmentalized", ShardingSpec(4), CFG,
+                     workload=WRITE_ONLY, n_commands=64, seed=3)
+    assert sum(tr.ops_per_shard) == 64
+    assert tr.n_commands == 64
+    assert len(tr.shards) == 4
+    assert tr.linearizable
+    # routing in the deployment matches the spec's hash
+    for s, dep in enumerate(tr.deployment.shards):
+        for o in dep.history.ops:
+            key = op_key(o.op)
+            if key is not None:
+                assert tr.deployment.route(key) == s
+
+
+def test_run_sharded_tolerates_empty_shards():
+    # 8 shards fed from a small key population: some shards get no ops
+    tr = run_sharded("compartmentalized", ShardingSpec(8), CFG,
+                     workload=WRITE_ONLY, n_commands=16, seed=4,
+                     n_cold_keys=4)
+    assert sum(tr.ops_per_shard) == 16
+    assert 0 in tr.ops_per_shard
+    assert tr.linearizable
+    rep = validate_sharded("compartmentalized", ShardingSpec(8), CFG,
+                           workload=WRITE_ONLY, n_commands=16, seed=4,
+                           n_cold_keys=4)
+    assert rep.passed
+    assert rep.shards_checked < 8       # empty shards carry no parity row
+    assert any(r is None for r in rep.reports)
+
+
+def test_per_shard_configs_may_differ():
+    cfgs = [dict(CFG), dict(CFG, n_proxy_leaders=4)]
+    sd = ShardedDeployment("compartmentalized", ShardingSpec(2),
+                           configs=cfgs, n_clients=2, seed=5)
+    assert len(sd.shards[0].proxies) == 3
+    assert len(sd.shards[1].proxies) == 4
+    with pytest.raises(ValueError):
+        ShardedDeployment("compartmentalized", ShardingSpec(3),
+                          configs=cfgs)
+
+
+# ---------------------------------------------------------------------------
+# Batched plane: (config x shard x seed) lanes in one device call
+# ---------------------------------------------------------------------------
+
+
+def test_batched_sharded_lanes():
+    w = Workload(f_write=1.0, skew_p=0.6)
+    sh = ShardingSpec(2)
+    res = execute_configs([dict(CFG, variant="compartmentalized")],
+                          workload=w, n_commands=32, seeds=2, sharding=sh)
+    assert len(res) == 2
+    assert res.lane_shard.tolist() == [0, 1]
+    assert res.lane_commands.sum() == 32
+    hot = sh.hot_shard
+    assert res.lane_commands[hot] > res.lane_commands[1 - hot]
+    assert np.all(res.completed == res.lane_commands[:, None])
+    # aggregate rate across concurrent shard groups beats any single lane
+    agg = res.sharded_throughput(0)
+    assert np.all(agg > res.throughput.max(axis=0) * 0.99)
+    # unsharded call unchanged: no lane bookkeeping
+    res1 = execute_configs([dict(CFG, variant="compartmentalized")],
+                           workload=w, n_commands=32, seeds=2)
+    assert res1.lane_config is None and len(res1) == 1
+
+
+def test_sweep_execute_carries_sharding():
+    sweep = compile_sweep(SweepSpec(f=1, n_proxy_leaders=(3,),
+                                    grids=((2, 2),), n_replicas=(2,)))
+    res = sweep.execute(workload=WRITE_ONLY, n_commands=24, seeds=2,
+                        sharding=ShardingSpec(2))
+    assert len(res) == 2
+    assert res.sharding is not None and res.sharding.n_shards == 2
+
+
+# ---------------------------------------------------------------------------
+# The live resharding replay (the PR-6 failover replay's sibling)
+# ---------------------------------------------------------------------------
+
+
+def _keys_on(sharding, shard, prefix, n):
+    out, i = [], 0
+    while len(out) < n:
+        k = f"{prefix}{i}"
+        if sharding.shard_of(k) == shard:
+            out.append(k)
+        i += 1
+    return out
+
+
+def _stream(rng, keys, n, tag):
+    ops, v = [], 0
+    for _ in range(n):
+        k = rng.choice(keys)
+        if rng.random() < 0.7:
+            ops.append(("put", k, f"{tag}{v}"))
+            v += 1
+        else:
+            ops.append(("get", k))
+    return ops
+
+
+def _completions(dep):
+    return len(dep.history.complete())
+
+
+def test_live_resharding_replay_matches_transient_shape():
+    """Replay the resharding_schedule event on the real cluster: steady
+    2-shard traffic, a migration blackout of the hot shard, then its key
+    range split across two groups.  The completion-rate trace must show
+    the transient plane's shape - a dip while the hot shard is dark
+    (bounded by the surviving shard's rate) and recovery ABOVE the
+    pre-split level (extra capacity serves the former hot traffic) - and
+    every history must stay per-key-partition linearizable, with the
+    migrated keys' values carried over to the destination group."""
+    sh = ShardingSpec(n_shards=2)
+    hot = 1
+    cold_keys = _keys_on(sh, 0, "c", 4)
+    keep_keys = _keys_on(sh, hot, "p", 3)
+    move_keys = _keys_on(sh, hot, "m", 3)
+    move_set = set(move_keys)
+
+    rng = random.Random(7)
+    sd = ShardedDeployment("compartmentalized", sh, config=CFG,
+                           n_clients=2, seed=3)
+    # budgets sized so no group runs dry inside a measurement window
+    # (closed-loop clients park when their queue drains, deflating rates)
+    parts = sd.submit(_stream(rng, cold_keys, 1000, "a")
+                      + _stream(rng, keep_keys + move_keys, 1400, "h"))
+    assert len(parts[0]) == 1000 and len(parts[hot]) == 1400
+
+    # --- pre phase: both shards serve their partitions ------------------
+    sd.step_all(until=500.0)
+    pre_counts = sd.completed_counts()
+    pre = sum(pre_counts) / 500.0
+    assert all(c > 0 for c in pre_counts), pre_counts
+    served_move = [o for o in sd.shards[hot].history.complete()
+                   if op_key(o.op) in move_set]
+    assert served_move, "hot shard must serve moved keys pre-split"
+
+    # --- migration blackout: the hot shard goes dark --------------------
+    # moved keys leave the hot shard: drop its unissued ops on them (the
+    # client tier redirects new traffic at the split)
+    for c in sd.shards[hot].clients:
+        c.ops[c.op_index:] = [op for op in c.ops[c.op_index:]
+                              if op_key(op) not in move_set]
+    sd.step_all(until=1300.0, skip=(hot,))
+    mid_counts = sd.completed_counts()
+    dip = sum(m - p for m, p in zip(mid_counts, pre_counts)) / 800.0
+    assert mid_counts[hot] == pre_counts[hot]      # dark means dark
+
+    # --- the split: hand the moved key range to a fresh group -----------
+    sd.shards[hot].net.run(until=1320.0)           # drain in-flight ops
+    last = {}
+    for o in sorted(sd.shards[hot].history.complete(),
+                    key=lambda o: o.response_time):
+        if o.op[0] == "put" and o.op[1] in move_set:
+            last[o.op[1]] = o.op[2]
+    assert last, "pre-split writes must exist on the moved range"
+
+    dest = ShardedDeployment("compartmentalized", ShardingSpec(1),
+                             config=CFG, n_clients=2, seed=11)
+    rng2 = random.Random(11)
+    for j, client in enumerate(dest.shards[0].clients):
+        mine = [k for i, k in enumerate(move_keys) if i % 2 == j]
+        seeded = [k for k in mine if k in last]
+        ops = ([("put", k, last[k]) for k in seeded]       # migration copy
+               + [("get", k) for k in seeded]              # continuity probe
+               + (_stream(rng2, mine, 350, f"d{j}") if mine else []))
+        if ops:
+            client.run_ops(ops)
+
+    # --- post phase: three groups serve the same key space --------------
+    post_base = sd.completed_counts()
+    sd.step_all(until=2600.0)
+    dest.step_all(until=1300.0)
+    post_counts = sd.completed_counts()
+    post = (sum(p - b for p, b in zip(post_counts, post_base))
+            + dest.completed_counts()[0]) / 1300.0
+
+    # the transient plane's shape booleans, replayed
+    assert pre > 0
+    assert dip < 0.6 * pre, (dip, pre)
+    assert post > 1.1 * pre, (post, pre)
+
+    # safety across the whole event
+    for h in sd.histories + dest.histories:
+        assert check_linearizable_partitioned(h)
+    # migrated values really crossed: the destination's first read of
+    # each seeded key returns the hot shard's last committed value
+    first_get = {}
+    for o in sorted(dest.shards[0].history.complete(),
+                    key=lambda o: o.response_time):
+        k = op_key(o.op)
+        if o.op[0] == "get" and k in last and k not in first_get:
+            first_get[k] = o.result
+    assert first_get
+    for k, v in first_get.items():
+        assert v == last[k], (k, v, last[k])

@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke examples-smoke docs-links check ci clean
+.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke multileader-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -31,6 +31,13 @@ measured-smoke:
 shard-smoke:
 	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only shards
 
+# the multi-leader family, shrunk: the which-protocol-wins-at-budget-B
+# staircase with BPaxos + ISS-bucket contenders, the BPaxos dep-service
+# floor, a mixed classic+multi-leader demand tensor in one MVA call, and
+# measured parity (incl. the ISS rotation/forwarding feedback loop)
+multileader-smoke:
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only multileader
+
 # cheap figures + the sweep, transient and variant engines: exercises the
 # batched MVA kernel, the stochastic scan engine (failover benchmark), the
 # protocol-variant plane (BENCH_SMOKE=1 shrinks its transients), the
@@ -53,7 +60,7 @@ examples-smoke:
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test parity-smoke measured-smoke shard-smoke bench-smoke examples-smoke
+check: docs-links test parity-smoke measured-smoke shard-smoke multileader-smoke bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
@@ -61,6 +68,7 @@ ci:
 	JAX_PLATFORMS=cpu $(MAKE) parity-smoke
 	JAX_PLATFORMS=cpu $(MAKE) measured-smoke
 	JAX_PLATFORMS=cpu $(MAKE) shard-smoke
+	JAX_PLATFORMS=cpu $(MAKE) multileader-smoke
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
 	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 

@@ -11,6 +11,8 @@
             clients measured in ONE jitted device call
   sweep  whole-surface config sweep + budget autotune (one jitted call)
   variants  protocol-variant plane: Mencius + S-Paxos vs baselines (Figs. 24-28)
+  multileader  BPaxos + ISS-bucket contenders: budget staircase, dep-service
+            floor, mixed tensor, measured parity + rotation feedback
   shards  the shard axis: scaling, skew, budget splits, live resharding
   roofline  dry-run roofline readout (40 cells x 2 meshes)
 
@@ -28,6 +30,7 @@ from . import (
     failover,
     latency_throughput,
     measured_surface,
+    multileader,
     protocol_messages,
     read_scalability,
     roofline_report,
@@ -49,6 +52,7 @@ MODULES = [
     ("measured", measured_surface),
     ("sweep", sweep),
     ("variants", variants),
+    ("multileader", multileader),
     ("shards", shards),
     ("roofline", roofline_report),
 ]
@@ -94,6 +98,12 @@ benchmarks (label: paper target, typical runtime on one CPU core):
             Mencius skip-storm + S-Paxos payload-ramp transients;
             cross-variant budget-19 autotune (which protocol wins?)
             BENCH_SMOKE=1 shrinks the transients                (~10 s)
+  multileader  multi-leader family: which protocol wins at budget B?
+            the staircase with BPaxos + ISS-bucket contenders, the
+            BPaxos dep-service floor vs proposer 1/p split, a mixed
+            classic+multi-leader demand tensor in one MVA call, and
+            measured parity incl. the ISS rotation/forwarding feedback
+            loop; BENCH_SMOKE=1 shrinks = make multileader-smoke (~10 s)
   shards    the shard axis through every plane: uniform shard-count
             scaling (min-law exactly linear, S=1..8 in one flattened
             MVA call), skewed hot shard + autotune_sharded's

@@ -121,8 +121,9 @@ def registered_labels() -> set[str]:
 def registry_variants() -> tuple[set[str], set[str]]:
     """(registered, executable) variant names from repro.core.api, loaded
     WITHOUT the repro package __init__ chain (which would import JAX):
-    api.py, analytical.py and execution.py (plus the stdlib-only
-    correctness-plane modules execution pulls in through the package
+    api.py, analytical.py, execution.py and the self-registering
+    multi-leader modules bpaxos.py / iss.py (plus the stdlib-only
+    correctness-plane modules they pull in through the package
     machinery) are stitched into a synthetic package; the built-in
     ``register_variant`` / ``register_executable`` calls run on import."""
     core = ROOT / "src" / "repro" / "core"
@@ -130,7 +131,7 @@ def registry_variants() -> tuple[set[str], set[str]]:
     pkg.__path__ = [str(core)]  # makes `from .api import ...` resolvable
     sys.modules["_docscheck_core"] = pkg
     try:
-        for name in ("api", "analytical", "execution"):
+        for name in ("api", "analytical", "execution", "bpaxos", "iss"):
             importlib.import_module(f"_docscheck_core.{name}")
         api = sys.modules["_docscheck_core.api"]
         return set(api.registered_variants()), set(api.executable_variants())

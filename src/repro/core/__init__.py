@@ -91,6 +91,7 @@ from .autotune import (
     bottleneck_trace,
     variant_candidate_configs,
 )
+from .bpaxos import BPaxosDeployment, bpaxos_model
 from .cluster import Network, Node
 from .craq import CraqDeployment
 from .execution import (
@@ -108,6 +109,7 @@ from .execution import (
     workload_ops,
 )
 from .history import History, Operation
+from .iss import IssDeployment, iss_model
 from .linearizability import (
     check_linearizable,
     check_register_reads,
@@ -170,11 +172,12 @@ from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
     "MIXED_50_50", "READ_HEAVY", "UNSHARDED", "WRITE_ONLY",
-    "AppendLog", "AutotuneResult", "BatchedExecutionResult",
+    "AppendLog", "AutotuneResult", "BPaxosDeployment",
+    "BatchedExecutionResult",
     "BatchedParityReport", "CRASH", "Command",
     "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
     "DeploymentConfig", "DeploymentModel", "Event", "ExecutableSpec",
-    "ExecutionTrace", "GridQuorums", "History",
+    "ExecutionTrace", "GridQuorums", "History", "IssDeployment",
     "KVStore", "Knob", "MajorityQuorums", "MenciusDeployment", "Network",
     "Node", "Operation", "ParityReport", "Register", "SPaxosDeployment",
     "STATION_ORDER", "ShardChoice", "ShardedAutotuneResult",
@@ -185,7 +188,8 @@ __all__ = [
     "VariantChoice", "VariantSpec", "Workload",
     "ablation_steps", "as_f_write", "autotune", "autotune_sharded",
     "autotune_variants",
-    "bottleneck_trace", "build_schedule", "burst_events", "calibrate_alpha",
+    "bottleneck_trace", "bpaxos_model", "build_schedule", "burst_events",
+    "calibrate_alpha",
     "check_linearizable", "check_linearizable_partitioned",
     "check_register_reads", "check_slot_order",
     "compartmentalized_model", "compile_models", "compile_sweep",
@@ -195,7 +199,8 @@ __all__ = [
     "effective_batch_size", "executable_variants",
     "failover_schedule", "flatten_shards",
     "fluid_throughput", "fluid_throughput_batch",
-    "full_compartmentalized", "grids_under", "knob", "make_state_machine",
+    "full_compartmentalized", "grids_under", "iss_model", "knob",
+    "make_state_machine",
     "mencius_model", "mencius_skip_storm_schedule", "mixed_workload_speedup",
     "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command",

@@ -1,0 +1,25 @@
+"""Registry-derived conformance fixtures.
+
+Any test (in any file under ``tests/``) that takes the
+``executable_variant`` fixture is automatically parametrized over every
+variant that declares an execution plane - the registry is the single
+source of truth, so registering a new variant (e.g. the multi-leader
+family: ``bpaxos``, ``iss``) makes it inherit the whole conformance
+suite (parity, linearizability, batched<->scalar cross-plane agreement)
+with zero test edits, and can never break an unrelated hand-pinned list.
+"""
+import pytest
+
+from repro.core import executable_variants
+
+
+def pytest_generate_tests(metafunc):
+    if "executable_variant" in metafunc.fixturenames:
+        metafunc.parametrize("executable_variant",
+                             list(executable_variants()))
+
+
+@pytest.fixture
+def registered_executables():
+    """The registry's executable-variant names, resolved at test time."""
+    return tuple(executable_variants())

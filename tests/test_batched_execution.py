@@ -5,9 +5,12 @@ device call over a config x seed grid of closed-loop clients) agree with
 the scalar measured plane (:func:`run_variant`'s real message-passing
 cluster) - probe-calibrated, not copied: the probes run at sizes/seeds
 disjoint from every reference run below.  These tests pin that promise
-for ALL registered executables, plus the grid acceptance shape, the
-quorum-grid acceptor parity, and the leader-crash replay whose recovery
-dip must match the transient plane's prediction.
+for ALL registered executables - the list comes from the registry via
+the ``executable_variant`` fixture (tests/conftest.py), so a newly
+registered variant inherits the cross-plane suite with zero edits here -
+plus the grid acceptance shape, the quorum-grid acceptor parity, and the
+leader-crash replay whose recovery dip must match the transient plane's
+prediction.
 """
 import numpy as np
 import pytest
@@ -16,7 +19,6 @@ from repro.core.api import (
     MIXED_50_50,
     WRITE_ONLY,
     Workload,
-    executable_variants,
     register_variant,
     temporary_variants,
     variant_spec,
@@ -35,7 +37,6 @@ from repro.core.simulator import demand_vector
 from repro.core.sweep import SweepSpec, compile_sweep
 from repro.core.transient import failover_schedule, simulate_transient
 
-EXECUTABLES = tuple(executable_variants())
 MIXES = [WRITE_ONLY, MIXED_50_50]
 N_CMDS = 48
 
@@ -56,10 +57,10 @@ def _batched(name, w, **kw):
 
 
 @pytest.mark.parametrize("mix", MIXES, ids=lambda w: f"fw{w.f_write:g}")
-@pytest.mark.parametrize("name", EXECUTABLES)
-def test_cross_plane_agreement(name, mix):
+def test_cross_plane_agreement(executable_variant, mix):
     """Batched per-station msgs/cmd matches run_variant within the
     variant's registered tolerances - exactly on its exact_stations."""
+    name = executable_variant
     exe = variant_spec(name).executable
     res = _batched(name, mix)
     ref = run_variant(name, workload=mix, n_commands=N_CMDS, seed=0)
@@ -75,10 +76,10 @@ def test_cross_plane_agreement(name, mix):
             assert abs(m - r) <= tol * max(r, 1e-12), (name, st, m, r, tol)
 
 
-@pytest.mark.parametrize("name", EXECUTABLES)
-def test_quantile_and_drain_pins(name):
+def test_quantile_and_drain_pins(executable_variant):
     """p50 <= p99 on every lane; every lane drains its full op budget at
     the exact generator write count; histogram mass == completions."""
+    name = executable_variant
     res = _batched(name, MIXED_50_50)
     exe = variant_spec(name).executable
     assert np.all(res.latency_p50 <= res.latency_p99 + 1e-12)
@@ -156,7 +157,8 @@ def test_execute_requires_configs_and_plane():
 
 
 @pytest.mark.parametrize("name", ["compartmentalized", "craq",
-                                  "vanilla_spaxos", "multipaxos"])
+                                  "vanilla_spaxos", "multipaxos",
+                                  "bpaxos", "iss"])
 def test_validate_batched_passes(name):
     rep = validate_batched(name, workload=MIXED_50_50, n_commands=N_CMDS,
                            seeds=2)

@@ -1,13 +1,16 @@
 """The generic execution harness (``repro.core.execution``): two planes,
 one registry.
 
-* **Parity** - every built-in variant that declares an executable must
-  pass ``validate_variant`` (measured per-station msgs/cmd vs its own
-  demand table) via the same generic loop the ``msgcount`` benchmark
-  runs, at the write-only mix the paper states its tables for *and* at a
-  mixed mix exercising the read paths.  Headline counts are pinned
-  exactly: compartmentalized leader 2, S-Paxos leader 2 (ids only),
-  unreplicated server 2.
+* **Parity** - every variant that declares an executable must pass
+  ``validate_variant`` (measured per-station msgs/cmd vs its own demand
+  table) via the same generic loop the ``msgcount`` benchmark runs, at
+  the write-only mix the paper states its tables for *and* at a mixed
+  mix exercising the read paths.  The variant list is the registry's,
+  not a hand-pin: the ``executable_variant`` fixture (tests/conftest.py)
+  iterates ``executable_variants()``, so a newly registered variant
+  inherits the whole suite.  Headline counts are pinned exactly:
+  compartmentalized leader 2, S-Paxos leader 2 (ids only), unreplicated
+  server 2, BPaxos dependency service 2.
 * **Linearizability** - the property suite historically exercised
   MultiPaxos only; here Mencius, S-Paxos and CRAQ executions (plus the
   baselines) are checked through the harness's exhaustive Wing-Gong
@@ -31,16 +34,17 @@ from repro.core import (
     workload_ops,
 )
 
-EXECUTABLES = tuple(executable_variants())
 
-
-def test_all_eight_builtin_variants_declare_executables():
-    assert EXECUTABLES == ("compartmentalized", "unreplicated", "multipaxos",
-                           "mencius", "vanilla_mencius", "spaxos",
-                           "vanilla_spaxos", "craq")
-    # every registered built-in now has an execution plane: the vanilla
-    # mencius/spaxos baselines gained fused-server deployments
-    assert set(EXECUTABLES) == set(registered_variants())
+def test_every_registered_variant_declares_an_executable():
+    """Counts and names are derived from the registry, never hand-pinned:
+    adding a variant cannot break this test unless it forgets its
+    execution plane."""
+    names = set(executable_variants())
+    assert names == set(registered_variants())
+    # the historical eight plus the multi-leader family are all present
+    assert {"compartmentalized", "unreplicated", "multipaxos", "mencius",
+            "vanilla_mencius", "spaxos", "vanilla_spaxos", "craq",
+            "bpaxos", "iss"} <= names
 
 
 # ---------------------------------------------------------------------------
@@ -48,11 +52,11 @@ def test_all_eight_builtin_variants_declare_executables():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", EXECUTABLES)
 @pytest.mark.parametrize("workload", [WRITE_ONLY, MIXED_50_50],
                          ids=["write_only", "mixed"])
-def test_parity_every_executable_variant(name, workload):
-    report = validate_variant(name, workload=workload, n_commands=48, seed=0)
+def test_parity_every_executable_variant(executable_variant, workload):
+    report = validate_variant(executable_variant, workload=workload,
+                              n_commands=48, seed=0)
     assert report.passed, str(report)
     assert report.trace.linearizable
 
@@ -77,6 +81,14 @@ def test_headline_leader_counts_are_exact():
     unrep = validate_variant("unreplicated", workload=Workload(),
                              n_commands=40, seed=0)
     assert unrep.row("server").measured == pytest.approx(2.0, abs=1e-9)
+
+    # the multi-leader family's structural floor: every BPaxos dep-service
+    # node sees every command once and replies once - exactly 2 msgs/cmd,
+    # the same ceiling the compartmentalized leader has
+    bpax = validate_variant("bpaxos", workload=Workload(), n_commands=40,
+                            seed=0)
+    assert bpax.row("dep_service").exact
+    assert bpax.row("dep_service").measured == pytest.approx(2.0, abs=1e-9)
 
 
 def test_mencius_feedback_reads_skips_off_the_run():
@@ -126,15 +138,16 @@ def test_reads_as_writes_baseline_drives_writes_only():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("name", EXECUTABLES)
 @pytest.mark.parametrize("seed", [0, 1, 2, 3])
-def test_contended_executions_linearizable_exhaustive(name, seed):
+def test_contended_executions_linearizable_exhaustive(executable_variant,
+                                                      seed):
     """Small contended runs (hot-key skew, mixed reads/writes, concurrent
     closed-loop clients) checked by the exhaustive Wing-Gong search - the
-    ground-truth verdict, now exercised for Mencius, S-Paxos and CRAQ,
-    not just MultiPaxos."""
+    ground-truth verdict, inherited by every registered executable (the
+    multi-leader family included) through the registry fixture."""
     w = Workload(f_write=0.5, skew_p=0.9)
-    trace = run_variant(name, workload=w, n_commands=10, seed=seed)
+    trace = run_variant(executable_variant, workload=w, n_commands=10,
+                        seed=seed)
     assert trace.checker == "exhaustive"
     assert trace.linearizable, trace.violations
 

@@ -1,0 +1,236 @@
+"""Property tests for the multi-leader variant family.
+
+The two multi-leader protocols earn their registry seats here:
+
+* BPaxos dependency-graph execution stays linearizable under random
+  conflict patterns (write mix x key skew) and network jitter, and every
+  replica executes conflicting commands in the same per-key order - the
+  proposer froze the dependency sets at commit time, so the graph (and
+  the SCC execution rule) is identical everywhere regardless of commit
+  arrival order.  A synthetic dependency *cycle* (mutual conflicts
+  discovered in opposite orders by different dep nodes) is pinned to
+  execute deterministically too.
+* ISS bucket rotation never reorders commands within a bucket: under a
+  rotation-heavy config (tiny epochs, several leaders) with jitter, each
+  replica's per-bucket execution is the contiguous in-order sequence
+  0..k-1 and identical across replicas, and the whole history stays
+  linearizable.
+
+Each property runs twice: a deterministic pinned-seed sweep that always
+executes, and a hypothesis-widened version (skipped when hypothesis is
+absent, like test_execution's jitter test) that searches the seed x
+workload space for counterexamples.
+"""
+import pytest
+
+from repro.core.api import Workload
+from repro.core.bpaxos import BPaxosCommit, BPaxosDeployment, BPaxosReplica
+from repro.core.cluster import Network, Node
+from repro.core.execution import default_config, run_variant, workload_ops
+from repro.core.iss import IssDeployment
+from repro.core.messages import Command
+from repro.core.statemachine import make_state_machine
+
+
+def _run(dep, ops):
+    """Split an op stream round-robin across the clients and run the
+    cluster to quiescence (mirrors execution._assign_ops/_drive)."""
+    per_client = [[] for _ in dep.clients]
+    for i, op in enumerate(ops):
+        per_client[i % len(per_client)].append(op)
+    for client, client_ops in zip(dep.clients, per_client):
+        if client_ops:
+            client.run_ops(client_ops)
+    dep.run_to_quiescence()
+    assert dep.all_done(), [c.addr for c in dep.clients if not c.done]
+
+
+# ---------------------------------------------------------------------------
+# BPaxos: linearizable under random conflict patterns + jitter
+# ---------------------------------------------------------------------------
+
+
+def _check_bpaxos_linearizable(seed, f_write, skew_p):
+    trace = run_variant("bpaxos",
+                        workload=Workload(f_write=f_write, skew_p=skew_p),
+                        n_commands=8, seed=seed, jitter=3.0)
+    assert trace.checker == "exhaustive"
+    assert trace.linearizable, trace.violations
+
+
+@pytest.mark.parametrize("seed,f_write,skew_p",
+                         [(0, 1.0, 0.9), (1, 0.7, 0.5), (2, 0.4, 0.9),
+                          (3, 0.7, 0.0)])
+def test_bpaxos_linearizable_under_conflicts_and_jitter(seed, f_write,
+                                                        skew_p):
+    """Pinned conflict patterns x message reordering: the exhaustive
+    Wing-Gong search must accept every BPaxos history."""
+    _check_bpaxos_linearizable(seed, f_write, skew_p)
+
+
+def test_bpaxos_linearizable_property():
+    """Hypothesis-widened version of the pinned sweep above."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    @given(seed=st.integers(0, 200),
+           f_write=st.sampled_from([0.4, 0.7, 1.0]),
+           skew_p=st.sampled_from([0.0, 0.5, 0.9]))
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(seed, f_write, skew_p):
+        _check_bpaxos_linearizable(seed, f_write, skew_p)
+
+    check()
+
+
+def _check_bpaxos_replica_agreement(seed, skew_p):
+    dep = BPaxosDeployment(n_proposers=3, n_dep_nodes=3, n_replicas=3,
+                           n_clients=3, seed=seed)
+    dep.net.jitter = 4.0
+    ops = workload_ops(Workload(f_write=1.0, skew_p=skew_p), 18, seed=seed)
+    _run(dep, ops)
+    ref = dep.replicas[0]
+    assert len(ref.executed_order) == 18
+    for rep in dep.replicas[1:]:
+        assert set(rep.executed_order) == set(ref.executed_order)
+        assert rep.key_order == ref.key_order
+
+
+@pytest.mark.parametrize("seed,skew_p", [(0, 0.9), (1, 0.3), (2, 0.9),
+                                         (3, 0.3)])
+def test_bpaxos_replicas_agree_on_per_key_order(seed, skew_p):
+    """Dependency sets are frozen at commit, so all replicas execute
+    conflicting commands in the same per-key order - even though jitter
+    delivers the commits to each replica in a different order."""
+    _check_bpaxos_replica_agreement(seed, skew_p)
+
+
+def test_bpaxos_replica_agreement_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    @given(seed=st.integers(0, 500), skew_p=st.sampled_from([0.3, 0.9]))
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(seed, skew_p):
+        _check_bpaxos_replica_agreement(seed, skew_p)
+
+    check()
+
+
+class _Sink(Node):
+    def on_message(self, src, msg):
+        pass
+
+
+def _lone_replica():
+    net = Network(seed=0)
+    rep = BPaxosReplica("replica/0", 0, 1, make_state_machine("kv"))
+    net.add_nodes([rep, _Sink("client/0")])
+    return rep
+
+
+def test_bpaxos_dependency_cycle_executes_deterministically():
+    """Mutual conflicts (dep nodes saw a and b in opposite orders) form a
+    2-vertex SCC; every replica must execute it - and a vertex hanging
+    off it - in the same sorted order, whatever the commit arrival
+    order, leaving identical state machines."""
+    a, b, c = (0, 0), (1, 0), (2, 0)
+    commits = {
+        a: BPaxosCommit(vertex=a, deps=(b,),
+                        command=Command(0, 0, ("put", "x", 1))),
+        b: BPaxosCommit(vertex=b, deps=(a,),
+                        command=Command(0, 1, ("put", "x", 2))),
+        c: BPaxosCommit(vertex=c, deps=(a,),
+                        command=Command(0, 2, ("put", "x", 3))),
+    }
+    orders = [(a, b, c), (c, b, a), (b, c, a), (c, a, b)]
+    replicas = []
+    for order in orders:
+        rep = _lone_replica()
+        for v in order:
+            rep.on_message("proposer/0", commits[v])
+        replicas.append(rep)
+    ref = replicas[0]
+    assert ref.executed_order == [a, b, c]
+    assert ref.sm.apply(("get", "x")) == 3
+    for rep in replicas[1:]:
+        assert rep.executed_order == ref.executed_order
+        assert rep.sm.apply(("get", "x")) == ref.sm.apply(("get", "x"))
+
+
+# ---------------------------------------------------------------------------
+# ISS: bucket rotation never reorders within a bucket
+# ---------------------------------------------------------------------------
+
+
+def _check_iss_bucket_order(seed, f_write):
+    dep = IssDeployment(n_leaders=3, n_buckets=2, epoch_length=2,
+                        n_proxy_leaders=3, grid=(2, 2), n_replicas=2,
+                        n_clients=3, seed=seed)
+    dep.net.jitter = 3.0
+    ops = workload_ops(Workload(f_write=f_write, skew_p=0.3), 24, seed=seed)
+    _run(dep, ops)
+    assert dep.total_rotations() > 0, "config must actually rotate buckets"
+    ref = dep.replicas[0]
+    assert sum(len(v) for v in ref.executed_by_bucket.values()) == 24
+    for rep in dep.replicas:
+        for b, executed in rep.executed_by_bucket.items():
+            seqs = [s for s, _ in executed]
+            assert seqs == list(range(len(seqs))), (b, seqs)
+            assert executed == ref.executed_by_bucket[b]
+
+
+@pytest.mark.parametrize("seed,f_write", [(0, 1.0), (1, 0.6), (2, 1.0),
+                                          (3, 0.6)])
+def test_iss_rotation_never_reorders_within_bucket(seed, f_write):
+    """Rotation-heavy config (2-command epochs, 3 leaders) under jitter:
+    every replica's per-bucket execution is the contiguous sequence
+    0..k-1 in order, identical across replicas - handoffs move the
+    bucket's sequencer, never its history."""
+    _check_iss_bucket_order(seed, f_write)
+
+
+def test_iss_bucket_order_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    @given(seed=st.integers(0, 300), f_write=st.sampled_from([0.6, 1.0]))
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(seed, f_write):
+        _check_iss_bucket_order(seed, f_write)
+
+    check()
+
+
+def _check_iss_linearizable(seed, f_write):
+    cfg = dict(default_config("iss"), n_leaders=3, n_buckets=2,
+               epoch_length=2)
+    trace = run_variant("iss", config=cfg,
+                        workload=Workload(f_write=f_write, skew_p=0.8),
+                        n_commands=8, seed=seed, jitter=3.0)
+    assert trace.checker == "exhaustive"
+    assert trace.linearizable, trace.violations
+
+
+@pytest.mark.parametrize("seed,f_write", [(0, 1.0), (1, 0.5), (2, 0.5),
+                                          (3, 1.0)])
+def test_iss_linearizable_under_rotation_and_jitter(seed, f_write):
+    """The registry path end to end at a rotation-heavy config: the
+    exhaustive checker must accept every jittered ISS history."""
+    _check_iss_linearizable(seed, f_write)
+
+
+def test_iss_linearizable_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    @given(seed=st.integers(0, 200), f_write=st.sampled_from([0.5, 1.0]))
+    @settings(max_examples=10, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    def check(seed, f_write):
+        _check_iss_linearizable(seed, f_write)
+
+    check()

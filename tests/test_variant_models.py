@@ -248,3 +248,99 @@ def test_autotune_variants_budget_and_winner():
     assert res.winner.variant == "mencius"
     assert (res.winner.peak
             > res.per_variant["compartmentalized"].peak * (1 - 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# Multi-leader family: demand tables, new station slots, budget verdict
+# ---------------------------------------------------------------------------
+
+
+def test_bpaxos_demand_table_pins():
+    from repro.core import bpaxos_model
+
+    m = bpaxos_model(n_proposers=4, n_dep_nodes=5, n_replicas=3)
+    d = m.demands()
+    # (1 + 2d + n) / p with d=5, n=3: the sequencing work splits 1/p
+    assert d["proposer"] == pytest.approx((1 + 10 + 3) / 4)
+    # the dependency service inherits the leader's old 2 msgs/cmd floor
+    assert d["dep_service"] == pytest.approx(2.0)
+    assert d["replica"] == pytest.approx(1 + 1 / 3)
+    # no leaderless reads: the read column equals the write column
+    assert m.demands(Workload.read_mix(1.0)) == pytest.approx(d)
+
+
+def test_iss_demand_table_pins():
+    from repro.core import iss_model
+
+    # default forwarding fraction (L-1)/L, no rotations
+    m = iss_model(n_leaders=4, n_proxy_leaders=5, grid_rows=2, grid_cols=2,
+                  n_replicas=4)
+    d = m.demands()
+    assert d["leader"] == pytest.approx((2 + 2 * (3 / 4)) / 4)
+    assert d["acceptor"] == pytest.approx(2 / 2)
+    # a single leader never forwards or rotates: exactly the
+    # compartmentalized leader's 2 msgs/cmd
+    solo = iss_model(n_leaders=1).demands()
+    assert solo["leader"] == pytest.approx(2.0)
+    # measured-feedback knobs price the handoff broadcasts explicitly
+    rot = iss_model(n_leaders=4, forward_fraction=0.5,
+                    rotations_per_cmd=0.25).demands()
+    assert rot["leader"] == pytest.approx((2 + 1.0 + 2 * 3 * 0.25) / 4)
+
+
+def test_multileader_station_slots_appended():
+    # the registry appended two brand-new slots; classic names keep
+    # their columns (append-only vocabulary)
+    assert "proposer" in STATION_ORDER and "dep_service" in STATION_ORDER
+    assert STATION_ORDER.index("proposer") > STATION_ORDER.index("tail")
+
+
+def test_bpaxos_rejects_non_intersecting_dep_quorums():
+    from repro.core import BPaxosDeployment, bpaxos_model
+
+    with pytest.raises(ValueError, match="2f\\+1"):
+        bpaxos_model(n_dep_nodes=2, f=1)
+    with pytest.raises(ValueError, match="2f\\+1"):
+        BPaxosDeployment(n_dep_nodes=2, f=1)
+
+
+def test_multileader_mixed_sweep_matches_scalar():
+    from repro.core import bpaxos_model, iss_model
+
+    sw = compile_sweep(SweepSpec(
+        variants=("compartmentalized", "bpaxos", "iss"),
+        knob_values=(("n_proposers", (2, 4)),)))
+    assert {c.get("variant", "compartmentalized") for c in sw.configs} == {
+        "compartmentalized", "bpaxos", "iss"}
+    peaks = sw.peak_throughput(ALPHA, Workload())
+    for i, cfg in enumerate(sw.configs):
+        v = cfg.get("variant", "compartmentalized")
+        if v == "bpaxos":
+            scalar = bpaxos_model(**{k: x for k, x in cfg.items()
+                                     if k != "variant"})
+        elif v == "iss":
+            scalar = iss_model(**{k: x for k, x in cfg.items()
+                                  if k != "variant"})
+        else:
+            continue
+        assert peaks[i] == pytest.approx(ALPHA / max(
+            scalar.demands().values()))
+
+
+def test_autotune_budget30_with_multileader_contenders():
+    """The acceptance run: both multi-leader variants compete at a 30+
+    machine budget and a winner is reported."""
+    contenders = ("compartmentalized", "mencius", "spaxos", "bpaxos", "iss")
+    res = autotune_variants(budget=30, alpha=ALPHA, workload=Workload(),
+                            variants=contenders)
+    assert set(res.per_variant) == set(contenders)
+    for choice in res.per_variant.values():
+        assert choice.machines <= 30
+    assert res.winner.peak == max(c.peak for c in res.per_variant.values())
+    # bpaxos plateaus on its dependency-service floor: alpha/2, exactly
+    # the single-leader ceiling it replaced
+    assert res.per_variant["bpaxos"].peak == pytest.approx(ALPHA / 2)
+    assert res.per_variant["bpaxos"].bottleneck == "dep_service"
+    # bucket rotation reaches the replica bound and ties mencius
+    assert res.per_variant["iss"].peak == pytest.approx(
+        res.per_variant["mencius"].peak)

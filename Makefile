@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke multileader-smoke examples-smoke docs-links check ci clean
+.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke multileader-smoke geo-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -38,6 +38,14 @@ shard-smoke:
 multileader-smoke:
 	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only multileader
 
+# the geo-replication plane, shrunk: the (config x region) latency
+# surface in one jitted geo_latency call, placement autotuning (hub
+# beats single-region for spread clients), per-region measured parity
+# under a WAN matrix, batched per-region lanes, the region-partition
+# transient, and the geo-stable measured calibration anchor
+geo-smoke:
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only geo
+
 # cheap figures + the sweep, transient and variant engines: exercises the
 # batched MVA kernel, the stochastic scan engine (failover benchmark), the
 # protocol-variant plane (BENCH_SMOKE=1 shrinks its transients), the
@@ -60,7 +68,7 @@ examples-smoke:
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test parity-smoke measured-smoke shard-smoke multileader-smoke bench-smoke examples-smoke
+check: docs-links test parity-smoke measured-smoke shard-smoke multileader-smoke geo-smoke bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
@@ -69,6 +77,7 @@ ci:
 	JAX_PLATFORMS=cpu $(MAKE) measured-smoke
 	JAX_PLATFORMS=cpu $(MAKE) shard-smoke
 	JAX_PLATFORMS=cpu $(MAKE) multileader-smoke
+	JAX_PLATFORMS=cpu $(MAKE) geo-smoke
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
 	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 

@@ -14,6 +14,8 @@
   multileader  BPaxos + ISS-bucket contenders: budget staircase, dep-service
             floor, mixed tensor, measured parity + rotation feedback
   shards  the shard axis: scaling, skew, budget splits, live resharding
+  geo  geo-replication plane: WAN latency surfaces, placement autotune,
+            per-region measured parity, region-partition transient
   roofline  dry-run roofline readout (40 cells x 2 meshes)
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -28,6 +30,7 @@ import traceback
 from . import (
     ablation,
     failover,
+    geo,
     latency_throughput,
     measured_surface,
     multileader,
@@ -54,6 +57,7 @@ MODULES = [
     ("variants", variants),
     ("multileader", multileader),
     ("shards", shards),
+    ("geo", geo),
     ("roofline", roofline_report),
 ]
 

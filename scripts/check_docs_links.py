@@ -31,7 +31,14 @@ Four checks over README.md, docs/*.md and benchmarks/README.md:
   to a def/class somewhere in ``repro.core``: the stdlib-only modules
   join the synthetic package, the JAX-importing ones (``sweep.py``,
   ``autotune.py``, ``transient.py``, ``batched_execution.py``) are
-  regex-scraped like the batched surface.
+  regex-scraped like the batched surface;
+* **geo-plane names** - every ``GeoSpec`` / ``Geo*`` citation
+  (``GeoLatencySurface``, ...) plus the placement-autotune surface
+  (``autotune_placement``, ``placement_candidates``,
+  ``region_partition_schedule``) must resolve to a def/class in
+  ``repro.core``, and every ``geo.<name>`` a doc cites must be a
+  top-level def/class in ``src/repro/core/geo.py`` or a ``GeoSpec``
+  field/method (so ``geo.region_of(...)`` snippets stay honest).
 
 The registry is loaded through a synthetic package (``api.py`` +
 ``analytical.py`` + ``execution.py`` and the correctness-plane modules it
@@ -95,6 +102,21 @@ SHARD_REF_RE = re.compile(r"\b(ShardingSpec|Sharded[A-Z][A-Za-z0-9]*)\b")
 # a source scrape covers both without importing anything
 SHARD_SOURCE_MODULES = ("api", "sharding", "execution", "sweep",
                         "autotune", "transient", "batched_execution")
+# geo-plane citations: GeoSpec plus the Geo* family (GeoLatency,
+# GeoLatencySurface, ...) and the placement-autotune / region-partition
+# surface.  The surface spans stdlib-only modules (api, geo, execution)
+# and JAX-importing ones (sweep, autotune, transient,
+# batched_execution); the same source scrape covers both.
+GEO_REF_RE = re.compile(
+    r"\b(GeoSpec|Geo[A-Z][A-Za-z0-9]*|autotune_placement|"
+    r"placement_candidates|region_partition_schedule|"
+    r"PlacementChoice|PlacementAutotuneResult)\b")
+GEO_SOURCE_MODULES = ("api", "geo", "execution", "sweep", "autotune",
+                      "transient", "batched_execution")
+# docs cite the WAN lowering as geo.<name>: must be a top-level
+# def/class in src/repro/core/geo.py or a GeoSpec field/method
+# (geo.region_of(...), geo.rtt, ... in worked examples)
+GEO_MODREF_RE = re.compile(r"\bgeo\.(?!py\b)([A-Za-z_][A-Za-z0-9_]*)")
 
 
 def batched_api() -> set[str]:
@@ -110,6 +132,30 @@ def shard_api() -> set[str]:
     for mod in SHARD_SOURCE_MODULES:
         names |= set(DEF_OR_CLASS_RE.findall((core / f"{mod}.py").read_text()))
     return names
+
+
+def geo_api() -> tuple[set[str], set[str]]:
+    """(plane-wide def/class names, geo.<name>-citable names).
+
+    The second set is the surface a ``geo.<name>`` citation may touch:
+    top-level def/class in geo.py plus GeoSpec fields and methods
+    (scraped from the class body in api.py).
+    """
+    core = ROOT / "src" / "repro" / "core"
+    names: set[str] = set()
+    for mod in GEO_SOURCE_MODULES:
+        names |= set(DEF_OR_CLASS_RE.findall((core / f"{mod}.py").read_text()))
+    members = set(DEF_OR_CLASS_RE.findall((core / "geo.py").read_text()))
+    api_src = (core / "api.py").read_text()
+    m = re.search(r"class GeoSpec\b[\s\S]*?(?=\n(?:class |def |@)|\Z)",
+                  api_src)
+    if m:
+        block = m.group(0)
+        members |= set(re.findall(
+            r"^\s+def\s+([A-Za-z_][A-Za-z0-9_]*)", block, re.MULTILINE))
+        members |= set(re.findall(
+            r"^    ([A-Za-z_][A-Za-z0-9_]*)\s*:", block, re.MULTILINE))
+    return names, members
 
 
 def registered_labels() -> set[str]:
@@ -148,6 +194,7 @@ def main() -> int:
     variants, executables = registry_variants()
     batched_names = batched_api()
     shard_names = shard_api()
+    geo_names, geo_members = geo_api()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -202,6 +249,20 @@ def main() -> int:
                                 f"{name} (no such def/class in any shard-"
                                 f"plane module: "
                                 f"{', '.join(SHARD_SOURCE_MODULES)})"))
+        for name in sorted(set(GEO_REF_RE.findall(text))):
+            checked += 1
+            if name not in geo_names:
+                missing.append((doc.relative_to(ROOT),
+                                f"{name} (no such def/class in any geo-"
+                                f"plane module: "
+                                f"{', '.join(GEO_SOURCE_MODULES)})"))
+        for name in sorted(set(GEO_MODREF_RE.findall(text))):
+            checked += 1
+            if name not in geo_members:
+                missing.append((doc.relative_to(ROOT),
+                                f"geo.{name} (not a def/class in "
+                                f"src/repro/core/geo.py nor a GeoSpec "
+                                f"field/method)"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

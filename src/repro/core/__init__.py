@@ -26,6 +26,18 @@ batched_execution.* lowers those execution planes into the transient
 plane's jitted scan - run_variant_batched / CompiledSweep.execute run a
 whole (config x seed) grid of closed-loop clients in one device call and
 emit measured msgs/cmd + latency histograms (validate_batched for parity).
+
+Geo plane: api.GeoSpec (regions + RTT matrix + placement + client
+weights) threads one WAN description through all three planes - geo.*
+lowers each variant's message flow to per-region critical-path wire
+latency (predict_geo_latency / wan_offsets), CompiledSweep.geo_latency
+composes it with the jitted MVA queueing into a (config x region)
+surface, autotune.autotune_placement searches placements under a budget,
+execution.run_variant(geo=...) realizes the matrix on the real cluster
+(per-region measured-vs-predicted parity via validate_variant), and
+execute_configs(geo=...) fans the batched plane into per-region lanes;
+transient.region_partition_schedule scripts a region dropping off the
+WAN.
 """
 from .api import (
     MIXED_50_50,
@@ -33,6 +45,7 @@ from .api import (
     UNSHARDED,
     WRITE_ONLY,
     ExecutableSpec,
+    GeoSpec,
     Knob,
     ShardingSpec,
     VariantSpec,
@@ -80,12 +93,15 @@ from .batched_execution import (
 )
 from .autotune import (
     AutotuneResult,
+    PlacementAutotuneResult,
+    PlacementChoice,
     ShardChoice,
     ShardedAutotuneResult,
     TraceStep,
     VariantAutotuneResult,
     VariantChoice,
     autotune,
+    autotune_placement,
     autotune_sharded,
     autotune_variants,
     bottleneck_trace,
@@ -107,6 +123,16 @@ from .execution import (
     validate_sharded,
     validate_variant,
     workload_ops,
+)
+from .geo import (
+    GeoLatency,
+    geo_station_kinds,
+    geo_variants,
+    placement_candidates,
+    predict_geo_latency,
+    register_geo_path,
+    wan_offsets,
+    zero_rtt,
 )
 from .history import History, Operation
 from .iss import IssDeployment, iss_model
@@ -147,6 +173,7 @@ from .simulator import (
 from .spaxos import SPaxosDeployment
 from .sweep import (
     CompiledSweep,
+    GeoLatencySurface,
     SweepSpec,
     compile_models,
     compile_sweep,
@@ -161,6 +188,7 @@ from .transient import (
     burst_events,
     failover_schedule,
     mencius_skip_storm_schedule,
+    region_partition_schedule,
     resharding_schedule,
     scale_schedule,
     schedule_from_demands,
@@ -177,16 +205,19 @@ __all__ = [
     "BatchedParityReport", "CRASH", "Command",
     "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
     "DeploymentConfig", "DeploymentModel", "Event", "ExecutableSpec",
-    "ExecutionTrace", "GridQuorums", "History", "IssDeployment",
+    "ExecutionTrace", "GeoLatency", "GeoLatencySurface", "GeoSpec",
+    "GridQuorums", "History", "IssDeployment",
     "KVStore", "Knob", "MajorityQuorums", "MenciusDeployment", "Network",
-    "Node", "Operation", "ParityReport", "Register", "SPaxosDeployment",
+    "Node", "Operation", "ParityReport", "PlacementAutotuneResult",
+    "PlacementChoice", "Register", "SPaxosDeployment",
     "STATION_ORDER", "ShardChoice", "ShardedAutotuneResult",
     "ShardedDeployment", "ShardedExecutionTrace", "ShardedParityReport",
     "ShardingSpec", "Station", "StationParity", "SweepSpec", "TraceStep",
     "TransientResult",
     "UnreplicatedStateMachine", "VARIANT_MODELS", "VariantAutotuneResult",
     "VariantChoice", "VariantSpec", "Workload",
-    "ablation_steps", "as_f_write", "autotune", "autotune_sharded",
+    "ablation_steps", "as_f_write", "autotune", "autotune_placement",
+    "autotune_sharded",
     "autotune_variants",
     "bottleneck_trace", "bpaxos_model", "build_schedule", "burst_events",
     "calibrate_alpha",
@@ -199,14 +230,17 @@ __all__ = [
     "effective_batch_size", "executable_variants",
     "failover_schedule", "flatten_shards",
     "fluid_throughput", "fluid_throughput_batch",
-    "full_compartmentalized", "grids_under", "iss_model", "knob",
+    "full_compartmentalized", "geo_station_kinds", "geo_variants",
+    "grids_under", "iss_model", "knob",
     "make_state_machine",
     "mencius_model", "mencius_skip_storm_schedule", "mixed_workload_speedup",
     "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command",
-    "partition_history", "partition_ops", "read_scalability_law",
-    "register_executable", "register_variant", "registered_variants",
-    "resharding_schedule", "resolve_workload",
+    "partition_history", "partition_ops", "placement_candidates",
+    "predict_geo_latency", "read_scalability_law",
+    "register_executable", "register_geo_path", "register_variant",
+    "registered_variants",
+    "region_partition_schedule", "resharding_schedule", "resolve_workload",
     "run_sharded", "run_variant", "run_variant_batched",
     "scale_schedule", "schedule_from_demands",
     "shard_column", "shard_demands", "shard_weights", "simulate_transient",
@@ -217,5 +251,6 @@ __all__ = [
     "validate_batched", "validate_sharded", "validate_variant",
     "vanilla_mencius_model", "vanilla_multipaxos",
     "vanilla_spaxos_model",
-    "variant_candidate_configs", "variant_spec", "workload_ops",
+    "variant_candidate_configs", "variant_spec", "wan_offsets",
+    "workload_ops", "zero_rtt",
 ]

@@ -46,7 +46,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from .api import (
     STATION_INDEX,
@@ -557,7 +557,8 @@ def calibrate_alpha(anchor_throughput: float = PAPER_MULTIPAXOS_UNBATCHED,
                     f_write: float = 1.0,
                     measured: bool = False,
                     n_commands: int = 40,
-                    seed: int = 0) -> float:
+                    seed: int = 0,
+                    geo: Optional[Any] = None) -> float:
     """alpha such that the anchor deployment peaks at ``anchor_throughput``
     (vanilla MultiPaxos = 25k cmd/s, paper Fig. 28).
 
@@ -569,7 +570,18 @@ def calibrate_alpha(anchor_throughput: float = PAPER_MULTIPAXOS_UNBATCHED,
     measured per-server messages per command of its bottleneck station
     become the calibration denominator - the 25k anchor then rests on the
     correctness plane, not on the table it is meant to validate.
-    ``measured=True`` requires the default anchor (``model=None``)."""
+    ``measured=True`` requires the default anchor (``model=None``).
+
+    ``geo`` (a :class:`~repro.core.api.GeoSpec`, ``measured=True`` only)
+    calibrates off a geo-deployed anchor while keeping alpha a *local*
+    per-node rate: WAN round trips stretch the run's wall-clock but add
+    no per-server work, so the measured-vs-table deviation of the
+    bottleneck demand is rescaled by the fraction of the measured mean
+    latency that modeled WAN wire time (:func:`repro.core.geo.
+    wan_offsets`) does NOT explain - ``d_corr = d_pred + (d_meas -
+    d_pred) * r_local / r_total``.  With ``geo=None`` or a uniform
+    matrix the correction is exactly the identity, pinning the
+    historical calibration value."""
     if measured:
         if model is not None:
             raise TypeError(
@@ -578,8 +590,27 @@ def calibrate_alpha(anchor_throughput: float = PAPER_MULTIPAXOS_UNBATCHED,
         # lazy import: execution imports this module (no cycle at import)
         from .execution import run_variant
         trace = run_variant("multipaxos", workload=Workload(f_write=f_write),
-                            n_commands=n_commands, seed=seed)
-        return anchor_throughput * max(trace.station_msgs.values())
+                            n_commands=n_commands, seed=seed, geo=geo)
+        d_meas = max(trace.station_msgs.values())
+        if geo is None or geo.is_uniform:
+            return anchor_throughput * d_meas
+        from .geo import wan_offsets
+        _, d_pred = multipaxos_model().bottleneck(f_write)
+        counts = {name: w + r for name, (w, r) in trace.region_ops.items()}
+        total = max(sum(counts.values()), 1)
+        r_total = sum(trace.region_latency[name] * n
+                      for name, n in counts.items()) / total
+        off = wan_offsets({"variant": "multipaxos"}, geo,
+                          workload=Workload(f_write=f_write),
+                          n_clients=trace.geo_n_clients)
+        wan = sum(off[list(geo.regions).index(name)] * n
+                  for name, n in counts.items()) / total
+        r_local = max(r_total - wan, 1e-12)
+        d_corr = d_pred + (d_meas - d_pred) * r_local / max(r_total, 1e-12)
+        return anchor_throughput * d_corr
+    if geo is not None:
+        raise TypeError("calibrate_alpha: geo= requires measured=True "
+                        "(the table path has no cluster to deploy on)")
     model = model or multipaxos_model()
     _, d = model.bottleneck(f_write)
     return anchor_throughput * d

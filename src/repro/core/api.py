@@ -308,6 +308,224 @@ UNSHARDED = ShardingSpec(n_shards=1)
 
 
 # ---------------------------------------------------------------------------
+# GeoSpec: the geo axis, as one value
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GeoSpec:
+    """A geo-replicated deployment as one value: named regions, a
+    symmetric per-region-pair RTT matrix, a placement (which region hosts
+    each station replica) and per-region client weights.
+
+    One spec drives every plane:
+
+    * **analytical / sweep** - ``repro.core.geo`` lowers each registered
+      variant's message flow into critical-path WAN round trips per op
+      class (write commit path, read-quorum path, CRAQ chain hops),
+      producing per-region latency offsets that compose with the jitted
+      MVA queueing latencies (``CompiledSweep.geo_latency``);
+    * **execution** - :meth:`latency_fn` realizes the same matrix on the
+      deterministic message-level network, so ``run_variant`` measures
+      per-region latencies that parity-check against the analytical
+      critical path (``validate_variant(geo=...)``);
+    * **batched execution** - ``execute_configs(geo=...)`` fans every
+      config into per-region lanes (one closed-loop client population
+      per region) whose latency histograms carry the WAN offsets.
+
+    Conventions: ``rtt[i][j]`` is the *round-trip* time between regions
+    ``i`` and ``j`` in the same virtual-time units as the network's
+    ``default_latency`` (must be square, symmetric, zero-diagonal,
+    non-negative); a one-way hop costs ``local_delay + rtt/2`` (local
+    hops, including self-sends, cost ``local_delay`` - the uniform
+    all-zero matrix therefore reproduces today's single-delay numbers
+    exactly).  ``placement`` maps a station kind (the ``role`` part of a
+    ``role/<i>`` address) to a cycle of region indices: replica ``i`` of
+    kind ``k`` lives in ``placement[k][i % len(placement[k])]``; kinds
+    without an entry default to the round-robin cycle ``i % n_regions``.
+    Clients are split into contiguous blocks by ``client_weights``
+    (largest-remainder apportionment; uniform when ``None``).
+    """
+
+    regions: Tuple[str, ...]
+    rtt: Tuple[Tuple[float, ...], ...]
+    placement: Tuple[Tuple[str, Tuple[int, ...]], ...] = ()
+    client_weights: Optional[Tuple[float, ...]] = None
+    local_delay: float = 1.0
+
+    def __post_init__(self) -> None:
+        regions = tuple(str(r) for r in self.regions)
+        if not regions:
+            raise ValueError("GeoSpec needs at least one region")
+        if len(set(regions)) != len(regions):
+            raise ValueError(f"GeoSpec region names must be unique: {regions}")
+        object.__setattr__(self, "regions", regions)
+        n = len(regions)
+        rtt = tuple(tuple(float(x) for x in row) for row in self.rtt)
+        if len(rtt) != n or any(len(row) != n for row in rtt):
+            raise ValueError(
+                f"GeoSpec.rtt must be a {n}x{n} matrix for regions {regions}")
+        for i in range(n):
+            if rtt[i][i] != 0.0:
+                raise ValueError(
+                    f"GeoSpec.rtt diagonal must be zero: rtt[{i}][{i}]="
+                    f"{rtt[i][i]}")
+            for j in range(n):
+                if rtt[i][j] < 0.0:
+                    raise ValueError(
+                        f"GeoSpec.rtt must be non-negative: rtt[{i}][{j}]="
+                        f"{rtt[i][j]}")
+                if rtt[i][j] != rtt[j][i]:
+                    raise ValueError(
+                        f"GeoSpec.rtt must be symmetric: rtt[{i}][{j}]="
+                        f"{rtt[i][j]} != rtt[{j}][{i}]={rtt[j][i]}")
+        object.__setattr__(self, "rtt", rtt)
+        placement = tuple(
+            (str(kind), tuple(int(r) for r in cycle))
+            for kind, cycle in self.placement)
+        for kind, cycle in placement:
+            if not cycle:
+                raise ValueError(
+                    f"GeoSpec.placement[{kind!r}] must be a non-empty "
+                    f"region-index cycle")
+            for r in cycle:
+                if not 0 <= r < n:
+                    raise ValueError(
+                        f"GeoSpec.placement[{kind!r}] region index {r} out "
+                        f"of range for {n} regions")
+        if len(set(k for k, _ in placement)) != len(placement):
+            raise ValueError("GeoSpec.placement kinds must be unique")
+        object.__setattr__(self, "placement", placement)
+        if self.client_weights is not None:
+            w = tuple(float(x) for x in self.client_weights)
+            if len(w) != n:
+                raise ValueError(
+                    f"GeoSpec.client_weights must have {n} entries: "
+                    f"got {len(w)}")
+            if any(x < 0.0 for x in w) or sum(w) <= 0.0:
+                raise ValueError(
+                    f"GeoSpec.client_weights must be non-negative with a "
+                    f"positive sum: {w}")
+            object.__setattr__(self, "client_weights", w)
+        if self.local_delay < 0.0:
+            raise ValueError(
+                f"GeoSpec.local_delay must be non-negative: "
+                f"{self.local_delay}")
+
+    @classmethod
+    def uniform(cls, n_regions: int = 3, local_delay: float = 1.0,
+                **kwargs: Any) -> "GeoSpec":
+        """An all-zero-RTT matrix over ``n_regions`` regions: region
+        labels exist but every hop costs ``local_delay`` - byte-identical
+        behaviour to a geo-less deployment."""
+        names = tuple(f"r{i}" for i in range(n_regions))
+        zero = tuple((0.0,) * n_regions for _ in range(n_regions))
+        return cls(regions=names, rtt=zero, local_delay=local_delay,
+                   **kwargs)
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.regions)
+
+    @property
+    def is_uniform(self) -> bool:
+        """True when every inter-region RTT is zero (the degenerate case
+        that must reproduce single-delay numbers exactly)."""
+        return all(x == 0.0 for row in self.rtt for x in row)
+
+    def one_way(self, i: int, j: int) -> float:
+        """WAN half-RTT between regions ``i`` and ``j`` (0 for i == j);
+        the *extra* delay a hop pays on top of ``local_delay``."""
+        return 0.0 if i == j else self.rtt[i][j] / 2.0
+
+    def hop_delay(self, i: int, j: int) -> float:
+        """Total one-way message delay between regions ``i`` and ``j``."""
+        return self.local_delay + self.one_way(i, j)
+
+    def region_of(self, kind: str, index: int) -> int:
+        """Region index hosting replica ``index`` of station ``kind``."""
+        for k, cycle in self.placement:
+            if k == kind:
+                return cycle[index % len(cycle)]
+        return index % self.n_regions
+
+    def resolved_client_weights(self) -> Tuple[float, ...]:
+        """Per-region client traffic fractions, normalized to sum to 1."""
+        if self.client_weights is None:
+            return (1.0 / self.n_regions,) * self.n_regions
+        total = sum(self.client_weights)
+        return tuple(x / total for x in self.client_weights)
+
+    def client_counts(self, n_clients: int) -> Tuple[int, ...]:
+        """How many of ``n_clients`` closed-loop clients sit in each
+        region (largest-remainder apportionment of the weights)."""
+        w = self.resolved_client_weights()
+        quotas = [x * n_clients for x in w]
+        counts = [int(q) for q in quotas]
+        rem = n_clients - sum(counts)
+        order = sorted(range(len(w)), key=lambda i: quotas[i] - counts[i],
+                       reverse=True)
+        for i in order[:rem]:
+            counts[i] += 1
+        return tuple(counts)
+
+    def client_region(self, index: int, n_clients: int) -> int:
+        """Region of client ``index``: clients form contiguous blocks in
+        region order, sized by :meth:`client_counts`."""
+        counts = self.client_counts(n_clients)
+        edge = 0
+        for r, c in enumerate(counts):
+            edge += c
+            if index < edge:
+                return r
+        return self.n_regions - 1
+
+    def latency_fn(self, n_clients: int) -> Callable[[str, str], float]:
+        """The network's per-message delay function realizing this spec:
+        ``delay(src, dst) = local_delay + one_way(region(src),
+        region(dst))``.  Client addresses split into contiguous
+        per-region blocks; station addresses follow :meth:`region_of`."""
+        def region_of_addr(addr: str) -> int:
+            kind, _, idx = addr.partition("/")
+            i = int(idx) if idx.isdigit() else 0
+            if kind == "client":
+                return self.client_region(i, n_clients)
+            return self.region_of(kind, i)
+
+        def delay(src: str, dst: str) -> float:
+            return self.local_delay + self.one_way(
+                region_of_addr(src), region_of_addr(dst))
+
+        return delay
+
+    def relabeled(self, perm: Sequence[int]) -> "GeoSpec":
+        """The same physical deployment with regions renumbered by
+        ``perm`` (``perm[new] = old``).  Placement-autotune results must
+        be invariant under this transformation (up to the relabeling)."""
+        p = tuple(int(i) for i in perm)
+        if sorted(p) != list(range(self.n_regions)):
+            raise ValueError(
+                f"relabeled() needs a permutation of range({self.n_regions})"
+                f": got {p}")
+        inv = [0] * len(p)
+        for new, old in enumerate(p):
+            inv[old] = new
+        return GeoSpec(
+            regions=tuple(self.regions[old] for old in p),
+            rtt=tuple(tuple(self.rtt[a][b] for b in p) for a in p),
+            placement=tuple((kind, tuple(inv[r] for r in cycle))
+                            for kind, cycle in self.placement),
+            client_weights=(None if self.client_weights is None else
+                            tuple(self.client_weights[old] for old in p)),
+            local_delay=self.local_delay)
+
+    def describe(self) -> str:
+        w = ", ".join(f"{x:g}" for x in self.resolved_client_weights())
+        return (f"{self.n_regions} regions ({', '.join(self.regions)}; "
+                f"client weights {w})")
+
+
+# ---------------------------------------------------------------------------
 # Knobs + VariantSpec + ExecutableSpec: a protocol variant as a declaration
 # ---------------------------------------------------------------------------
 
@@ -344,6 +562,11 @@ class ExecutableSpec:
     * ``reads_as_writes`` - the protocol has no separate read path (the
       paper's vanilla baselines: reads go through the log like writes),
       so the harness drives reads as writes to match the table;
+    * ``latency_tolerance`` bounds the relative error of the measured
+      per-region mean latency vs the ``repro.core.geo`` critical-path
+      prediction when ``validate_variant`` runs under a :class:`GeoSpec`
+      (queueing and slot-ordering waits sit on top of the WAN path, so
+      these are looser than the msgs/cmd tolerances);
     * ``n_clients`` is the default closed-loop client population.
     """
 
@@ -354,6 +577,7 @@ class ExecutableSpec:
     station_tolerances: Tuple[Tuple[str, float], ...] = ()
     exact_stations: Tuple[str, ...] = ()
     reads_as_writes: bool = False
+    latency_tolerance: float = 0.35
     n_clients: int = 3
     description: str = ""
 

@@ -539,3 +539,113 @@ def autotune_sharded(budget: int, alpha: float, sharding: "ShardingSpec",
         machines=sum(c.machines for c in shards),
         n_candidates=len(compiled),
     )
+
+
+# ---------------------------------------------------------------------------
+# placement search (geo plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlacementChoice:
+    """Best deployment under one placement of stations onto regions."""
+
+    placement: str             # candidate name: "spread", "single/<r>", ...
+    geo: "GeoSpec"             # the GeoSpec carrying that placement
+    config: Config
+    index: int                 # row in the compiled candidate sweep
+    machines: int
+    worst_p99: float           # max p99 over client-bearing regions
+    blended_p99: float         # client-weighted mean p99
+    region_p50: Tuple[float, ...]
+    region_p99: Tuple[float, ...]
+    peak: float                # bottleneck-law peak (cmds/s)
+
+
+@dataclass(frozen=True)
+class PlacementAutotuneResult:
+    """Which placement (and which config under it) wins at budget B?
+
+    ``single_region_best`` is the best fully-pinned candidate - the
+    baseline a geo-aware placement has to beat for spread clients."""
+
+    best: PlacementChoice
+    per_placement: Dict[str, PlacementChoice]
+    single_region_best: Optional[PlacementChoice]
+    budget: int
+    n_candidates: int          # feasible configs per placement
+    regions: Tuple[str, ...]
+
+
+def autotune_placement(budget: int, alpha: float, geo: "GeoSpec",
+                       workload: Optional[Union[Workload, float]] = None,
+                       f_write: Optional[float] = None, f: int = 1,
+                       variant: str = "compartmentalized",
+                       n_clients: int = 64,
+                       compiled: Optional[CompiledSweep] = None,
+                       ) -> PlacementAutotuneResult:
+    """Search station placements under a machine budget, ranking by the
+    *worst client-bearing region's* blended p99 latency.
+
+    The candidate family (:func:`repro.core.geo.placement_candidates`) is
+    ``spread`` (round-robin), ``single/<region>`` (everything pinned) and
+    ``hub/<region>`` (ordering core pinned, replica tier spread).  For
+    each placement one :meth:`CompiledSweep.geo_latency` call scores every
+    config x region at once; the per-placement winner minimizes worst-
+    region p99, breaking ties toward blended p99 and then fewer machines.
+    The throughput-shaped knobs (how many proxies, grid shape) and the
+    latency-shaped placement compose: the same compiled candidate space
+    serves both axes.  Batched candidates are dropped (no WAN lowering).
+
+    The search first canonicalizes the region labeling (sorted by region
+    name, via :meth:`GeoSpec.relabeled`), so the result is invariant
+    under region relabeling: the default round-robin cycles behind the
+    ``spread`` / ``hub`` candidates walk the regions tuple in order, and
+    without canonicalization two labelings of the same physical WAN
+    would score physically different deployments.  Results are keyed by
+    region *name* throughout, so callers never see the canonical frame.
+    """
+    from .geo import placement_candidates
+    w = resolve_workload(workload, f_write, where="autotune_placement")
+    canon = tuple(sorted(range(geo.n_regions), key=lambda i: geo.regions[i]))
+    geo = geo.relabeled(canon)
+    if compiled is None:
+        configs = [c for c in variant_candidate_configs(budget, f, (variant,))
+                   if not c.get("n_batchers") and not c.get("n_unbatchers")]
+        compiled = compile_models([model_for(c) for c in configs], configs)
+    if compiled.configs is None:
+        raise ValueError(
+            "autotune_placement needs a config-bearing sweep; compile with "
+            "compile_sweep(spec) rather than compile_models(models)")
+    feasible = compiled.machines <= budget
+    if not feasible.any():
+        raise ValueError(
+            f"no placement candidate fits in budget={budget} "
+            f"(smallest candidate uses {int(compiled.machines.min())})")
+    peaks = compiled.peak_throughput(alpha, w)
+    per: Dict[str, PlacementChoice] = {}
+    for name, placed in placement_candidates(variant, geo).items():
+        surf = compiled.geo_latency(alpha, placed, workload=w,
+                                    n_clients=n_clients)
+        worst = surf.worst_p99()
+        blend = surf.blended_p99()
+        score = np.where(feasible, worst, np.inf)
+        i = int(np.lexsort((compiled.machines, blend, score))[0])
+        per[name] = PlacementChoice(
+            placement=name, geo=placed, config=dict(compiled.configs[i]),
+            index=i, machines=int(compiled.machines[i]),
+            worst_p99=float(worst[i]), blended_p99=float(blend[i]),
+            region_p50=tuple(float(x) for x in surf.p50[i]),
+            region_p99=tuple(float(x) for x in surf.p99[i]),
+            peak=float(peaks[i]))
+
+    def rank(c: PlacementChoice) -> Tuple[float, float, int]:
+        return (c.worst_p99, c.blended_p99, c.machines)
+
+    best = min(per.values(), key=rank)
+    singles = [c for n, c in per.items() if n.startswith("single/")]
+    single_best = min(singles, key=rank) if singles else None
+    return PlacementAutotuneResult(
+        best=best, per_placement=per, single_region_best=single_best,
+        budget=budget, n_candidates=int(feasible.sum()),
+        regions=tuple(geo.regions))

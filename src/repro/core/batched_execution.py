@@ -299,6 +299,16 @@ class BatchedExecutionResult:
     lane_config: Optional[np.ndarray] = None   # [M] config index
     lane_shard: Optional[np.ndarray] = None    # [M] shard index
     lane_commands: Optional[np.ndarray] = None  # [M] per-lane op budget
+    # Geo axis (``geo=`` runs only, mutually exclusive with sharding):
+    # rows become M_cfg x n_regions lanes in config-major order - one
+    # closed-loop client population per region, command budgets split by
+    # the region client weights.  ``wan_offset[m]`` is the lane's
+    # analytical WAN latency excess (repro.core.geo.wan_offsets; zero for
+    # a uniform matrix), already folded into latency_mean/p50/p99 and
+    # bin_edges.
+    geo: Optional[Any] = None
+    lane_region: Optional[np.ndarray] = None   # [M] region index
+    wan_offset: Optional[np.ndarray] = None    # [M]
 
     def __len__(self) -> int:
         return len(self.configs)
@@ -307,11 +317,30 @@ class BatchedExecutionResult:
         return config_variant(self.configs[m])
 
     def shard_lanes(self, config_index: int = 0) -> np.ndarray:
-        """Row indices of config ``config_index``'s shard lanes (the
-        whole row range when the run was unsharded)."""
+        """Row indices of config ``config_index``'s shard (or region)
+        lanes - the whole row range when the run was neither sharded nor
+        geo-replicated."""
         if self.lane_config is None:
             return np.asarray([config_index])
         return np.nonzero(self.lane_config == config_index)[0]
+
+    def region_latency(self, config_index: int = 0,
+                       which: str = "p99") -> Dict[str, float]:
+        """Seed-mean latency per client-bearing region for one config
+        (geo runs only).  ``which`` is ``"mean"``, ``"p50"`` or
+        ``"p99"``."""
+        if self.geo is None or self.lane_region is None:
+            raise ValueError("region_latency needs a geo= run")
+        stat = {"mean": self.latency_mean, "p50": self.latency_p50,
+                "p99": self.latency_p99}[which]
+        out: Dict[str, float] = {}
+        for lane in self.shard_lanes(config_index):
+            if self.lane_commands is not None \
+                    and self.lane_commands[lane] == 0:
+                continue  # no clients in this region
+            region = self.geo.regions[int(self.lane_region[lane])]
+            out[region] = float(stat[lane].mean())
+        return out
 
     def sharded_throughput(self, config_index: int = 0) -> np.ndarray:
         """Aggregate cmds/s of one config across its shard lanes, per
@@ -352,6 +381,7 @@ def execute_configs(
     state_machine: str = "kv",
     max_steps: int = 200_000,
     sharding: Optional[ShardingSpec] = None,
+    geo: Optional[Any] = None,
 ) -> BatchedExecutionResult:
     """Execute a grid of registered-variant configs as one batched device
     call of closed-loop client populations.
@@ -376,9 +406,24 @@ def execute_configs(
     population.  Rows of the result are then (config x shard) in
     config-major order; ``lane_config`` / ``lane_shard`` /
     ``lane_commands`` map them back and
-    :meth:`BatchedExecutionResult.sharded_throughput` aggregates."""
+    :meth:`BatchedExecutionResult.sharded_throughput` aggregates.
+
+    With a :class:`~repro.core.api.GeoSpec` (mutually exclusive with
+    sharding) each config instead expands to ``n_regions`` lanes - one
+    closed-loop client population per region, command budgets split by
+    the region client weights - and every lane's latency statistics
+    (mean/p50/p99/histogram edges) carry the analytical WAN latency
+    *excess* of its region (:func:`repro.core.geo.wan_offsets`, same
+    units as ``1 / alpha``; exactly zero for a uniform matrix, so
+    uniform-geo lanes read today's numbers unchanged).  The queueing
+    part stays measured; the WAN part is deterministic wire time the
+    step engine has no wires for."""
     if not configs:
         raise ValueError("execute_configs: empty config list")
+    if geo is not None and sharding is not None:
+        raise ValueError(
+            "execute_configs: geo= and sharding= are mutually exclusive "
+            "(region lanes and shard lanes both multiply the row axis)")
     w = resolve_workload(workload, where="execute_configs")
     if isinstance(seeds, (int, np.integer)):
         seeds_arr = np.arange(int(seeds), dtype=np.int32)
@@ -392,15 +437,31 @@ def execute_configs(
     a = alpha if alpha is not None else calibrate_alpha()
 
     sharded = sharding is not None and sharding.n_shards > 1
-    n_sh = sharding.n_shards if sharded else 1
+    geoed = geo is not None and geo.n_regions > 1
+    n_sh = (sharding.n_shards if sharded
+            else geo.n_regions if geoed else 1)
     if sharded:
         lane_n = np.tile(split_counts(n_commands, shard_weights(sharding, w)),
                          n_cfg).astype(np.int64)
+    elif geoed:
+        lane_n = np.tile(
+            split_counts(n_commands,
+                         np.asarray(geo.resolved_client_weights())),
+            n_cfg).astype(np.int64)
     else:
         lane_n = np.full((n_cfg,), n_commands, dtype=np.int64)
     m = n_cfg * n_sh
     lane_cfg = np.repeat(np.arange(n_cfg), n_sh)
     lane_shard = np.tile(np.arange(n_sh), n_cfg)
+
+    wan_off = np.zeros((m,))
+    if geo is not None:
+        from .geo import wan_offsets
+        for i, raw in enumerate(configs):
+            cfg = dict(raw)
+            cfg.setdefault("variant", "compartmentalized")
+            off = wan_offsets(cfg, geo, workload=w, n_clients=n_clients)
+            wan_off[i * n_sh:(i + 1) * n_sh] = np.asarray(off)[:n_sh]
 
     cost_w = np.zeros((n_cfg, k))
     cost_r = np.zeros((n_cfg, k))
@@ -507,6 +568,12 @@ def execute_configs(
                                    jnp.asarray(lanes_fin),
                                    jnp.asarray(lane_edges)))
     hist = hist.reshape(m, s, n_bins)
+    if geo is not None:
+        # shift the (geometric) bin edges by each lane's deterministic WAN
+        # offset AFTER binning: a sample in [e_k, e_k+1) is in
+        # [e_k + wan, e_k+1 + wan) of the shifted edges, so histogram and
+        # quantiles both read as total (wire + queueing) latency
+        edges = edges + wan_off[:, None]
 
     lat_np = np.asarray(lat, dtype=np.float64)
     fin_np = np.asarray(fin)
@@ -529,7 +596,7 @@ def execute_configs(
         cost_write=cost_w,
         cost_read=cost_r,
         throughput=lane_n[:, None] / np.maximum(t_last, 1e-30),
-        latency_mean=lat_sum / np.maximum(done, 1),
+        latency_mean=lat_sum / np.maximum(done, 1) + wan_off[:, None],
         latency_p50=_quantile_from_hist(hist, edges, 0.50),
         latency_p99=_quantile_from_hist(hist, edges, 0.99),
         completed=done.astype(np.float64),
@@ -539,9 +606,12 @@ def execute_configs(
         n_steps=n_steps,
         alpha=a,
         sharding=sharding if sharded else None,
-        lane_config=lane_cfg if sharded else None,
+        lane_config=lane_cfg if (sharded or geoed) else None,
         lane_shard=lane_shard if sharded else None,
-        lane_commands=lane_n if sharded else None,
+        lane_commands=lane_n if (sharded or geoed) else None,
+        geo=geo,
+        lane_region=lane_shard if geoed else None,
+        wan_offset=wan_off if geo is not None else None,
     )
 
 
@@ -634,10 +704,22 @@ def validate_batched(name: str,
                             n_commands=n_commands,
                             seed=kwargs.get("probe_seed", 7919))
         model_cfg = exe.model_feedback(dict(model_cfg), probe)
-    realized = replace(w, f_write=float(res.n_writes[0]) / n_commands)
+    if res.geo is not None and res.lane_config is not None:
+        # geo runs fan the config into region lanes; parity is against the
+        # command-weighted aggregate (regions share the config's costs)
+        lanes = res.shard_lanes(0)
+        weights = res.lane_commands[lanes].astype(float)
+        nw = float(res.n_writes[lanes].sum())
+        agg = ((res.station_msgs[lanes] * weights[:, None]).sum(axis=0)
+               / max(weights.sum(), 1.0))
+        measured = {STATION_ORDER[j]: float(v)
+                    for j, v in enumerate(agg) if v > 0.0}
+    else:
+        nw = float(res.n_writes[0])
+        measured = res.station_row(0)
+    realized = replace(w, f_write=nw / n_commands)
     predicted = spec.build(model_cfg).demands(realized)
 
-    measured = res.station_row(0)
     stations = list(measured)
     stations += [s for s, d in predicted.items()
                  if s not in measured and d > 0.0]

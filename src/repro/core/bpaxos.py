@@ -35,7 +35,7 @@ core edits.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .analytical import DeploymentModel, Station
 from .api import knob, register_executable, register_variant
@@ -98,12 +98,14 @@ class BPaxosProposer(Node):
 
     def __init__(self, addr: str, proposer_id: int,
                  dep_addrs: Sequence[str],
-                 replica_addrs: Sequence[str]) -> None:
+                 replica_addrs: Sequence[str],
+                 thrifty: bool = False) -> None:
         super().__init__(addr)
         self.proposer_id = proposer_id
         self.dep_addrs = list(dep_addrs)
         self.replica_addrs = list(replica_addrs)
         self.quorum = len(self.dep_addrs) // 2 + 1
+        self.thrifty = thrifty
         self.seq = 0
         # vertex -> [command, union-of-deps, n_acks, committed]
         self.pending: Dict[Vertex, List[Any]] = {}
@@ -114,8 +116,17 @@ class BPaxosProposer(Node):
             self.seq += 1
             self.pending[vertex] = [msg.command, set(), 0, False]
             key = _conflict_key(msg.command)
-            for d in self.dep_addrs:
-                self.send(d, DepRequest(vertex=vertex, key=key))
+            if self.thrifty:
+                # EPaxos-style thrifty: unicast to exactly a quorum of dep
+                # nodes - a rotating window so load stays even - instead
+                # of broadcasting and discarding the non-quorum replies
+                d = len(self.dep_addrs)
+                targets = [self.dep_addrs[(vertex[1] + j) % d]
+                           for j in range(self.quorum)]
+            else:
+                targets = self.dep_addrs
+            for t in targets:
+                self.send(t, DepRequest(vertex=vertex, key=key))
         elif isinstance(msg, DepReply):
             entry = self.pending.get(msg.vertex)
             if entry is None or entry[3]:
@@ -279,12 +290,14 @@ class BPaxosDeployment(BaseDeployment):
         state_machine: str = "kv",
         consistency: str = "linearizable",
         seed: int = 0,
+        thrifty: bool = False,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
         if n_dep_nodes < 2 * f + 1:
             raise ValueError(
                 f"n_dep_nodes must be >= 2f+1 = {2 * f + 1} (dependency "
                 f"quorums must intersect under f faults): {n_dep_nodes}")
-        self.net = Network(seed=seed)
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         self.proposer_addrs = [f"proposer/{i}" for i in range(n_proposers)]
         self.dep_addrs = [f"dep_service/{i}" for i in range(n_dep_nodes)]
@@ -296,7 +309,8 @@ class BPaxosDeployment(BaseDeployment):
             for i, addr in enumerate(self.replica_addrs)
         ]
         self.proposers = [
-            BPaxosProposer(addr, i, self.dep_addrs, self.replica_addrs)
+            BPaxosProposer(addr, i, self.dep_addrs, self.replica_addrs,
+                           thrifty=thrifty)
             for i, addr in enumerate(self.proposer_addrs)
         ]
         # empty acceptor/replica lists: reads take the proposer path too
@@ -317,14 +331,21 @@ class BPaxosDeployment(BaseDeployment):
 
 
 def bpaxos_model(n_proposers: int = 3, n_dep_nodes: int = 3,
-                 n_replicas: int = 3, f: int = 1) -> DeploymentModel:
+                 n_replicas: int = 3, f: int = 1,
+                 thrifty: bool = False) -> DeploymentModel:
     """BPaxos demand table (derivation in the module docstring).
 
     The proposer tier scales with ``p`` - sequencing is parallel - while
     the dependency service is the protocol's structural floor: every dep
     node sees every command (2 msgs/cmd), the same ceiling the paper's
     compartmentalized leader has, but bought with parallel proposers
-    instead of proxy offload.  Reads cost what writes cost."""
+    instead of proxy offload.  Reads cost what writes cost.
+
+    ``thrifty`` (EPaxos-style) unicasts DepRequest to exactly a rotating
+    quorum ``q = d//2 + 1`` instead of broadcasting to all ``d``: the
+    proposer stops paying for (and discarding) the ``d - q`` non-quorum
+    replies, and each dep node's demand drops from 2 to ``2q/d``
+    msgs/cmd - the protocol's structural floor moves."""
     p, d, n = n_proposers, n_dep_nodes, n_replicas
     if p < 1:
         raise ValueError(f"n_proposers must be >= 1: {p}")
@@ -333,14 +354,17 @@ def bpaxos_model(n_proposers: int = 3, n_dep_nodes: int = 3,
             f"n_dep_nodes must be >= 2f+1 = {2 * f + 1}: {d}")
     if n < 1:
         raise ValueError(f"n_replicas must be >= 1: {n}")
-    proposer = (1.0 + 2.0 * d + n) / p
+    q = d // 2 + 1 if thrifty else d
+    proposer = (1.0 + 2.0 * q + n) / p
+    dep = 2.0 * q / d
     replica = 1.0 + 1.0 / n
     stations = (
         Station("proposer", p, proposer, proposer),
-        Station("dep_service", d, 2.0, 2.0),
+        Station("dep_service", d, dep, dep),
         Station("replica", n, replica, replica),
     )
-    return DeploymentModel(name=f"bpaxos(p={p},d={d},n={n})",
+    tag = ",thrifty" if thrifty else ""
+    return DeploymentModel(name=f"bpaxos(p={p},d={d},n={n}{tag})",
                            stations=stations)
 
 
@@ -355,16 +379,20 @@ def _bpaxos_candidates(budget: int, f: int) -> Dict[str, tuple]:
         "n_proposers": tuple(range(1, min(max_prop, 8) + 1)),
         "n_dep_nodes": (d,),
         "n_replicas": tuple(range(f + 1, min(max_replicas, f + 7) + 1)),
+        "thrifty": (False, True),
     }
 
 
 def _bpaxos_deployment(n_proposers: int = 3, n_dep_nodes: int = 3,
                        n_replicas: int = 3, f: int = 1, n_clients: int = 3,
-                       seed: int = 0,
-                       state_machine: str = "kv") -> BPaxosDeployment:
+                       seed: int = 0, state_machine: str = "kv",
+                       thrifty: bool = False,
+                       latency_fn: Optional[Callable[[str, str], float]]
+                       = None) -> BPaxosDeployment:
     return BPaxosDeployment(n_proposers=n_proposers, n_dep_nodes=n_dep_nodes,
                             n_replicas=n_replicas, f=f, n_clients=n_clients,
-                            state_machine=state_machine, seed=seed)
+                            state_machine=state_machine, seed=seed,
+                            thrifty=thrifty, latency_fn=latency_fn)
 
 
 register_variant(
@@ -375,6 +403,7 @@ register_variant(
         knob("n_proposers", (3,)),
         knob("n_dep_nodes", (3,)),
         knob("n_replicas", (3,)),
+        knob("thrifty", (False,)),
     ),
     takes_f=True,
     candidate_knobs=_bpaxos_candidates,

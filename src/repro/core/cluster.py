@@ -85,6 +85,7 @@ class Network:
         default_latency: float = 1.0,
         jitter: float = 0.0,
         drop_rate: float = 0.0,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
         self.rng = random.Random(seed)
         self.nodes: Dict[str, Node] = {}
@@ -98,8 +99,12 @@ class Network:
         self.partitions: List[Tuple[Set[str], Set[str]]] = []
         self.delivered: int = 0
         self.dropped: int = 0
-        # optional per-(src,dst) latency override
-        self.latency_fn: Optional[Callable[[str, str], float]] = None
+        # optional per-(src,dst) latency override (e.g. a GeoSpec's WAN
+        # matrix).  Only consulted when `send` gets no explicit delay, so
+        # self-addressed Timer deliveries (set_timer passes delay=) stay
+        # local; jitter stacks on top of the matrix delay, never replaces
+        # it.
+        self.latency_fn = latency_fn
 
     # -- topology -------------------------------------------------------------
     def add_node(self, node: Node) -> Node:

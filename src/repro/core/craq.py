@@ -13,7 +13,7 @@ more often, funnelling reads to the tail.
 from __future__ import annotations
 
 import random
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .cluster import Network, Node
 from .history import History
@@ -226,8 +226,10 @@ class CraqClient(Node):
 
 class CraqDeployment(BaseDeployment):
     def __init__(self, n_nodes: int = 3, n_clients: int = 2,
-                 reads_anywhere: bool = True, seed: int = 0) -> None:
-        self.net = Network(seed=seed)
+                 reads_anywhere: bool = True, seed: int = 0,
+                 latency_fn: Optional[Callable[[str, str], float]] = None,
+                 ) -> None:
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         self.chain_addrs = [f"chain/{i}" for i in range(n_nodes)]
         self.nodes = [ChainNode(a, i, self.chain_addrs, reads_anywhere)

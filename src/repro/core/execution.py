@@ -38,7 +38,7 @@ the bottom of this module; runtime variants attach theirs with
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Tuple, Union
 
 from .api import (
@@ -53,6 +53,7 @@ from .api import (
     variant_spec,
 )
 from .craq import CraqDeployment
+from .geo import predict_geo_latency
 from .history import History
 from .linearizability import check_linearizable, check_slot_order
 from .mencius import MenciusDeployment, VanillaMenciusDeployment
@@ -128,6 +129,16 @@ class ExecutionTrace:
     linearizable: bool
     checker: str
     violations: Tuple[str, ...] = ()
+    # geo plane (run_variant(geo=...)): the active spec, the client count
+    # the latency_fn split clients by, and measured mean client latency
+    # (virtual time units) per region - overall and per op class - with
+    # the realized (writes, reads) counts behind each mean
+    geo: Optional[Any] = None
+    geo_n_clients: int = 0
+    region_latency: Dict[str, float] = field(default_factory=dict)
+    region_write_latency: Dict[str, float] = field(default_factory=dict)
+    region_read_latency: Dict[str, float] = field(default_factory=dict)
+    region_ops: Dict[str, Tuple[int, int]] = field(default_factory=dict)
 
     @property
     def n_writes(self) -> int:
@@ -209,10 +220,15 @@ def _executable_of(name: str) -> ExecutableSpec:
 
 
 def _build_deployment(exe: ExecutableSpec, cfg: Config, n_clients: int,
-                      seed: int, state_machine: str) -> Any:
+                      seed: int, state_machine: str,
+                      latency_fn: Optional[Any] = None) -> Any:
     """Instantiate the executable's deployment and zero message counters
-    (setup traffic such as Phase 1 is not part of the per-command cost)."""
+    (setup traffic such as Phase 1 is not part of the per-command cost).
+    ``latency_fn`` (a GeoSpec matrix realization) is only forwarded when
+    set, so executables registered before the geo plane keep working."""
     build_cfg = {k: v for k, v in cfg.items() if k != "variant"}
+    if latency_fn is not None:
+        build_cfg["latency_fn"] = latency_fn
     dep = exe.deployment(**build_cfg, n_clients=n_clients, seed=seed,
                          state_machine=state_machine)
     for node in dep.net.nodes.values():
@@ -270,10 +286,44 @@ def _station_msgs(spec: Any, exe: ExecutableSpec, dep: Any,
     return msgs, totals, stations_present, nodes
 
 
+def _measured_region_latency(history: History, geo: Any, n_clients: int,
+                             ) -> Tuple[Dict[str, float], Dict[str, float],
+                                        Dict[str, float],
+                                        Dict[str, Tuple[int, int]]]:
+    """Mean measured client latency per region (blended, write, read)
+    plus the realized (writes, reads) counts: client ``i`` sits in
+    ``geo.client_region(i, n_clients)``, its latency is the virtual-time
+    span between invocation and response."""
+    sums: Dict[str, List[float]] = {}
+    for o in history.complete():
+        r = geo.regions[geo.client_region(o.client_id, n_clients)]
+        acc = sums.setdefault(r, [0.0, 0, 0.0, 0])  # [w_sum, w_n, r_sum, r_n]
+        d = o.response_time - o.invoke_time
+        if o.is_read:
+            acc[2] += d
+            acc[3] += 1
+        else:
+            acc[0] += d
+            acc[1] += 1
+    blended: Dict[str, float] = {}
+    writes: Dict[str, float] = {}
+    reads: Dict[str, float] = {}
+    counts: Dict[str, Tuple[int, int]] = {}
+    for r, (ws, wn, rs, rn) in sums.items():
+        counts[r] = (wn, rn)
+        blended[r] = (ws + rs) / (wn + rn)
+        if wn:
+            writes[r] = ws / wn
+        if rn:
+            reads[r] = rs / rn
+    return blended, writes, reads, counts
+
+
 def _trace_of(name: str, cfg: Config, w: Workload, dep: Any,
               n_commands: int, seed: int, steps: int,
               exhaustive_limit: int, state_machine: str,
-              per_key: bool = False) -> ExecutionTrace:
+              per_key: bool = False, geo: Optional[Any] = None,
+              geo_n_clients: int = 0) -> ExecutionTrace:
     """Measure + check one driven deployment into an ExecutionTrace.
 
     ``per_key=True`` decomposes the linearizability check by key
@@ -293,12 +343,21 @@ def _trace_of(name: str, cfg: Config, w: Workload, dep: Any,
         ok, checker, violations = _check_history(
             dep.history, sm_kind=state_machine,
             exhaustive_limit=exhaustive_limit)
+    blended: Dict[str, float] = {}
+    wlat: Dict[str, float] = {}
+    rlat: Dict[str, float] = {}
+    rops: Dict[str, Tuple[int, int]] = {}
+    if geo is not None:
+        blended, wlat, rlat, rops = _measured_region_latency(
+            dep.history, geo, geo_n_clients)
     return ExecutionTrace(
         variant=name, config=cfg, workload=w, n_commands=n_commands,
         seed=seed, deployment=dep, history=dep.history, station_msgs=msgs,
         station_totals=totals, station_servers=stations_present,
         station_nodes=nodes, steps=steps, linearizable=ok, checker=checker,
-        violations=violations)
+        violations=violations, geo=geo, geo_n_clients=geo_n_clients,
+        region_latency=blended, region_write_latency=wlat,
+        region_read_latency=rlat, region_ops=rops)
 
 
 def run_variant(name: str,
@@ -310,7 +369,8 @@ def run_variant(name: str,
                 max_steps: int = 2_000_000,
                 exhaustive_limit: int = 24,
                 jitter: float = 0.0,
-                state_machine: str = "kv") -> ExecutionTrace:
+                state_machine: str = "kv",
+                geo: Optional[Any] = None) -> ExecutionTrace:
     """Execute one config of a registered variant end to end.
 
     Builds the deployment from the variant's :class:`ExecutableSpec`,
@@ -319,13 +379,22 @@ def run_variant(name: str,
     round-robin across the closed-loop clients, runs the network to
     quiescence, checks linearizability, and buckets measured per-station
     msgs/cmd into canonical station slots.  Generic over the registry:
-    zero per-variant branches here."""
+    zero per-variant branches here.
+
+    ``geo`` (a :class:`~repro.core.api.GeoSpec`) realizes the WAN matrix
+    through the network's ``latency_fn`` hook: every message pays
+    ``local_delay + one_way(region(src), region(dst))``, timers stay
+    local, ``jitter`` stacks on top.  The trace then carries measured
+    per-region client latency (``region_latency`` et al.) - the measured
+    side of the latency parity rows ``validate_variant(geo=...)`` adds."""
     exe = _executable_of(name)
     cfg = dict(config) if config is not None else default_config(name)
     w = resolve_workload(workload, where="run_variant")
     n_cl = n_clients if n_clients is not None else exe.n_clients
 
-    dep = _build_deployment(exe, cfg, n_cl, seed, state_machine)
+    latency_fn = geo.latency_fn(n_cl) if geo is not None else None
+    dep = _build_deployment(exe, cfg, n_cl, seed, state_machine,
+                            latency_fn=latency_fn)
     if jitter:
         # reorder messages across links (seeded): linearizability must
         # hold regardless; message-count parity is unaffected (counts,
@@ -337,7 +406,8 @@ def run_variant(name: str,
     _assign_ops(dep, ops)
     steps = _drive(name, dep, max_steps)
     return _trace_of(name, cfg, w, dep, n_commands, seed, steps,
-                     exhaustive_limit, state_machine)
+                     exhaustive_limit, state_machine, geo=geo,
+                     geo_n_clients=n_cl)
 
 
 # ---------------------------------------------------------------------------
@@ -430,14 +500,53 @@ def validate_variant(name: str,
     ``model_feedback`` with statistics measured off this very run (e.g.
     Mencius' observed skip rate), so the comparison is apples-to-apples.
     One generic loop; every per-variant fact is declared data in the
-    :class:`ExecutableSpec`."""
+    :class:`ExecutableSpec`.
+
+    Passing ``geo=`` (forwarded to :func:`run_variant`) additionally
+    emits one ``wan_latency/<region>`` row per client-bearing region:
+    measured mean client latency against the critical-path prediction of
+    :func:`repro.core.geo.predict_geo_latency`, blended at the region's
+    *realized* write mix and judged by the executable's registered
+    ``latency_tolerance``."""
     cfg = dict(config) if config is not None else default_config(name)
     w = resolve_workload(workload, where="validate_variant")
     trace = run_variant(name, cfg, w, n_commands=n_commands, seed=seed,
                         **run_kwargs)
     rows, model_cfg = _parity_rows(name, cfg, w, trace)
+    if trace.geo is not None:
+        rows += _geo_latency_rows(name, cfg, trace)
     return ParityReport(variant=name, config=cfg, model_config=model_cfg,
                         workload=w, rows=tuple(rows), trace=trace)
+
+
+def _geo_latency_rows(name: str, cfg: Config, trace: ExecutionTrace,
+                      ) -> List[StationParity]:
+    """Measured-vs-predicted per-region latency rows (the latency
+    analogue of the msgs/cmd parity rows).
+
+    The prediction blends the critical-path write/read latencies at each
+    region's *realized* op counts, so the comparison is not polluted by
+    how the round-robin op split happened to land per region.  Variants
+    whose read path rides the write path (``reads_as_writes``) were
+    driven write-only, so the blend degenerates to the write path."""
+    exe = _executable_of(name)
+    geo = trace.geo
+    predicted = predict_geo_latency(
+        dict(cfg, variant=name), geo, n_clients=trace.geo_n_clients)
+    rows: List[StationParity] = []
+    for i, region in enumerate(geo.regions):
+        counts = trace.region_ops.get(region)
+        if not counts:
+            continue
+        wn, rn = counts
+        pred = (wn * predicted.write[i] + rn * predicted.read[i]) / (wn + rn)
+        m = trace.region_latency[region]
+        rel = abs(m - pred) / max(abs(pred), 1e-12)
+        tol = exe.latency_tolerance
+        rows.append(StationParity(
+            station=f"wan_latency/{region}", measured=m, predicted=pred,
+            rel_err=rel, tolerance=tol, exact=False, ok=rel <= tol))
+    return rows
 
 
 def _parity_rows(name: str, cfg: Config, w: Workload, trace: ExecutionTrace,
@@ -728,6 +837,7 @@ def _compartmentalized_deployment(f: int = 1, n_proxy_leaders: int = 10,
                                   n_batchers: int = 0, n_unbatchers: int = 0,
                                   n_clients: int = 3, seed: int = 0,
                                   state_machine: str = "kv",
+                                  latency_fn: Optional[Any] = None,
                                   ) -> CompartmentalizedMultiPaxos:
     # the (2f+1, 1) "grid" is the majority-quorum column: lower it to the
     # majority quorum system the deployment uses for that shape
@@ -736,7 +846,8 @@ def _compartmentalized_deployment(f: int = 1, n_proxy_leaders: int = 10,
     cfg = DeploymentConfig(f=f, n_proxy_leaders=n_proxy_leaders, grid=grid,
                            n_replicas=n_replicas, n_batchers=n_batchers,
                            n_unbatchers=n_unbatchers, batch_size=batch_size,
-                           state_machine=state_machine, seed=seed)
+                           state_machine=state_machine, seed=seed,
+                           latency_fn=latency_fn)
     return CompartmentalizedMultiPaxos(cfg, n_clients=n_clients)
 
 
@@ -771,13 +882,14 @@ def _compartmentalized_feedback(model_cfg: Config,
 def _multipaxos_deployment(f: int = 1, thrifty: bool = True,
                            n_clients: int = 2, seed: int = 0,
                            state_machine: str = "kv",
+                           latency_fn: Optional[Any] = None,
                            ) -> CompartmentalizedMultiPaxos:
     # vanilla: self-broadcast leader, majority quorums, and - matching the
     # fused-server accounting of multipaxos_model - a replica per machine
     del thrifty  # the deployment always contacts thrifty majorities
     cfg = DeploymentConfig(f=f, n_proxy_leaders=0, grid=None,
                            n_replicas=2 * f + 1, state_machine=state_machine,
-                           seed=seed)
+                           seed=seed, latency_fn=latency_fn)
     return CompartmentalizedMultiPaxos(cfg, n_clients=n_clients)
 
 
@@ -801,7 +913,9 @@ def _mencius_deployment(n_leaders: int = 3, f: int = 1,
                         announce_interval: Optional[float] = None,
                         skip_fraction: float = 0.0, skip_batch: float = 10.0,
                         n_clients: int = 3, seed: int = 0,
-                        state_machine: str = "kv") -> MenciusDeployment:
+                        state_machine: str = "kv",
+                        latency_fn: Optional[Any] = None,
+                        ) -> MenciusDeployment:
     # announce/skip knobs parameterize the *table*; the protocol's own
     # announce-every-command / range-skip behaviour is measured and fed
     # back by _mencius_feedback
@@ -810,7 +924,8 @@ def _mencius_deployment(n_leaders: int = 3, f: int = 1,
                              n_proxy_leaders=n_proxy_leaders,
                              grid=(grid_rows, grid_cols),
                              n_replicas=n_replicas, n_clients=n_clients,
-                             state_machine=state_machine, seed=seed)
+                             state_machine=state_machine, seed=seed,
+                             latency_fn=latency_fn)
 
 
 def _mencius_feedback(model_cfg: Config, trace: ExecutionTrace) -> Config:
@@ -836,14 +951,17 @@ def _spaxos_deployment(n_disseminators: int = 2, n_stabilizers: int = 3,
                        grid_rows: int = 2, grid_cols: int = 2,
                        n_replicas: int = 3, payload_factor: float = 1.0,
                        n_clients: int = 2, seed: int = 0,
-                       state_machine: str = "kv") -> SPaxosDeployment:
+                       state_machine: str = "kv",
+                       latency_fn: Optional[Any] = None,
+                       ) -> SPaxosDeployment:
     del payload_factor  # table-only knob: message *counts* are size-blind
     return SPaxosDeployment(f=f, n_disseminators=n_disseminators,
                             n_stabilizers=n_stabilizers,
                             n_proxy_leaders=n_proxy_leaders,
                             grid=(grid_rows, grid_cols),
                             n_replicas=n_replicas, n_clients=n_clients,
-                            state_machine=state_machine, seed=seed)
+                            state_machine=state_machine, seed=seed,
+                            latency_fn=latency_fn)
 
 
 def _vanilla_mencius_deployment(f: int = 1,
@@ -851,12 +969,14 @@ def _vanilla_mencius_deployment(f: int = 1,
                                 skip_fraction: float = 0.0,
                                 skip_batch: float = 10.0, n_clients: int = 3,
                                 seed: int = 0, state_machine: str = "kv",
+                                latency_fn: Optional[Any] = None,
                                 ) -> VanillaMenciusDeployment:
     # announce/skip knobs parameterize the table; the fused servers
     # announce every command and range-fill, measured back by feedback
     del announce_interval, skip_fraction, skip_batch
     return VanillaMenciusDeployment(f=f, n_clients=n_clients,
-                                    state_machine=state_machine, seed=seed)
+                                    state_machine=state_machine, seed=seed,
+                                    latency_fn=latency_fn)
 
 
 def _vanilla_mencius_feedback(model_cfg: Config,
@@ -878,10 +998,12 @@ def _vanilla_mencius_feedback(model_cfg: Config,
 def _vanilla_spaxos_deployment(f: int = 1, payload_factor: float = 1.0,
                                n_clients: int = 3, seed: int = 0,
                                state_machine: str = "kv",
+                               latency_fn: Optional[Any] = None,
                                ) -> VanillaSPaxosDeployment:
     del payload_factor  # table-only knob: message *counts* are size-blind
     return VanillaSPaxosDeployment(f=f, n_clients=n_clients,
-                                   state_machine=state_machine, seed=seed)
+                                   state_machine=state_machine, seed=seed,
+                                   latency_fn=latency_fn)
 
 
 def _vanilla_spaxos_station_of(addr: str, dep: Any) -> Optional[str]:
@@ -896,11 +1018,13 @@ def _vanilla_spaxos_station_of(addr: str, dep: Any) -> Optional[str]:
 def _craq_deployment(n_nodes: int = 3, skew_p: float = 0.0,
                      dirty_fraction: float = 0.5, n_clients: int = 2,
                      seed: int = 0, state_machine: str = "kv",
+                     latency_fn: Optional[Any] = None,
                      ) -> CraqDeployment:
     # skew/dirty parameterize the table; the run's actual forwarding
     # fraction is measured and fed back by _craq_feedback
     del skew_p, dirty_fraction, state_machine  # chain nodes are always kv
-    return CraqDeployment(n_nodes=n_nodes, n_clients=n_clients, seed=seed)
+    return CraqDeployment(n_nodes=n_nodes, n_clients=n_clients, seed=seed,
+                          latency_fn=latency_fn)
 
 
 def _craq_station_of(addr: str, dep: Any) -> Optional[str]:
@@ -932,12 +1056,14 @@ def _craq_feedback(model_cfg: Config, trace: ExecutionTrace) -> Config:
 def _unreplicated_deployment(n_clients: int = 2, seed: int = 0,
                              state_machine: str = "kv", batch_size: int = 1,
                              n_batchers: int = 0, n_unbatchers: int = 0,
+                             latency_fn: Optional[Any] = None,
                              ) -> UnreplicatedStateMachine:
     if n_batchers or n_unbatchers or batch_size != 1:
         raise ValueError("the unreplicated execution plane is unbatched; "
                          "batching knobs parameterize the table only")
     return UnreplicatedStateMachine(n_clients=n_clients, seed=seed,
-                                    state_machine=state_machine)
+                                    state_machine=state_machine,
+                                    latency_fn=latency_fn)
 
 
 # Parity notes per plane (all measured write-only unless stated):
@@ -985,6 +1111,9 @@ register_executable(
     model_feedback=_mencius_feedback,
     rel_tolerance=0.10,
     station_tolerances=(("proxy", 0.25),),
+    # slot-order execution waits are only partially captured by the wire
+    # model (geo.py) - give the WAN latency rows extra headroom
+    latency_tolerance=0.5,
     n_clients=3,
     description="MenciusDeployment (round-robin leaders + range skips)",
 )
@@ -1014,6 +1143,7 @@ register_executable(
     model_feedback=_vanilla_mencius_feedback,
     rel_tolerance=0.10,
     reads_as_writes=True,  # the fused table has no read path (paper Fig. 25)
+    latency_tolerance=0.5,  # slot-order skip echoes only partially modeled
     n_clients=3,
     description="VanillaMenciusDeployment (fused leader+acceptor+replica)",
 )

@@ -39,7 +39,7 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .analytical import DeploymentModel, Station
 from .api import knob, register_executable, register_variant
@@ -213,12 +213,13 @@ class IssDeployment(BaseDeployment):
         state_machine: str = "kv",
         consistency: str = "linearizable",
         seed: int = 0,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
         if n_buckets < 1:
             raise ValueError(f"n_buckets must be >= 1: {n_buckets}")
         if epoch_length < 1:
             raise ValueError(f"epoch_length must be >= 1: {epoch_length}")
-        self.net = Network(seed=seed)
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         self.n_leaders = n_leaders
         self.n_buckets = n_buckets
@@ -346,7 +347,9 @@ def _iss_deployment(n_leaders: int = 3, n_buckets: int = 4,
                     forward_fraction: Optional[float] = None,
                     rotations_per_cmd: float = 0.0, n_clients: int = 3,
                     seed: int = 0,
-                    state_machine: str = "kv") -> IssDeployment:
+                    state_machine: str = "kv",
+                    latency_fn: Optional[Callable[[str, str], float]] = None,
+                    ) -> IssDeployment:
     # forwarding/rotation knobs parameterize the *table*; the protocol's
     # own routing behaviour is measured and fed back by _iss_feedback
     del forward_fraction, rotations_per_cmd
@@ -355,7 +358,7 @@ def _iss_deployment(n_leaders: int = 3, n_buckets: int = 4,
                          n_proxy_leaders=n_proxy_leaders,
                          grid=(grid_rows, grid_cols), n_replicas=n_replicas,
                          n_clients=n_clients, state_machine=state_machine,
-                         seed=seed)
+                         seed=seed, latency_fn=latency_fn)
 
 
 def _iss_feedback(model_cfg: Dict[str, Any], trace: Any) -> Dict[str, Any]:

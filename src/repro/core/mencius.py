@@ -13,7 +13,7 @@ Coordinated Paxos sub-protocol the paper references.
 from __future__ import annotations
 
 import random
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 from .cluster import Network, Node
 from .history import History
@@ -111,8 +111,9 @@ class MenciusDeployment(BaseDeployment):
         state_machine: str = "kv",
         consistency: str = "linearizable",
         seed: int = 0,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
-        self.net = Network(seed=seed)
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         self.n_leaders = n_leaders
 
@@ -282,8 +283,9 @@ class VanillaMenciusDeployment(BaseDeployment):
         state_machine: str = "kv",
         consistency: str = "linearizable",
         seed: int = 0,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
-        self.net = Network(seed=seed)
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         m = 2 * f + 1
         self.n_servers = m

@@ -42,6 +42,9 @@ class DeploymentConfig:
     client_retries: bool = False
     # heartbeat-driven automatic leader failover (deterministic timers)
     auto_failover: bool = False
+    # per-(src, dst) message delay, e.g. a GeoSpec's WAN matrix (timers
+    # stay local; jitter stacks on top - see Network.send)
+    latency_fn: Optional[Any] = None
 
     @property
     def n_acceptors(self) -> int:
@@ -85,7 +88,8 @@ class CompartmentalizedMultiPaxos(BaseDeployment):
     def __init__(self, cfg: DeploymentConfig, n_clients: int = 1,
                  network: Optional[Network] = None) -> None:
         self.cfg = cfg
-        self.net = network or Network(seed=cfg.seed)
+        self.net = network or Network(seed=cfg.seed,
+                                      latency_fn=cfg.latency_fn)
         self.history = History()
 
         f = cfg.f
@@ -225,8 +229,9 @@ class _UnreplicatedServer(Node):
 
 class UnreplicatedStateMachine(BaseDeployment):
     def __init__(self, n_clients: int = 1, seed: int = 0,
-                 state_machine: str = "kv") -> None:
-        self.net = Network(seed=seed)
+                 state_machine: str = "kv",
+                 latency_fn: Optional[Any] = None) -> None:
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         self.server = _UnreplicatedServer("server/0", make_state_machine(state_machine))
         self.net.add_node(self.server)

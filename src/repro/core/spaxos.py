@@ -16,7 +16,7 @@ the leader stops being a bottleneck on the data path).
 from __future__ import annotations
 
 import random
-from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .cluster import Network, Node
 from .history import History
@@ -148,8 +148,9 @@ class SPaxosDeployment(BaseDeployment):
         state_machine: str = "kv",
         consistency: str = "linearizable",
         seed: int = 0,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
-        self.net = Network(seed=seed)
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
 
         if grid is not None:
@@ -334,8 +335,9 @@ class VanillaSPaxosDeployment(BaseDeployment):
         state_machine: str = "kv",
         consistency: str = "linearizable",
         seed: int = 0,
+        latency_fn: Optional[Callable[[str, str], float]] = None,
     ) -> None:
-        self.net = Network(seed=seed)
+        self.net = Network(seed=seed, latency_fn=latency_fn)
         self.history = History()
         n = 2 * f + 1
         self.n_servers = n

@@ -184,6 +184,41 @@ def config_variant(config: Config) -> str:
 
 
 @dataclass(frozen=True)
+class GeoLatencySurface:
+    """A (config x region) latency surface from ONE jitted MVA call.
+
+    ``wan[m, r]`` is the *extra* critical-path wire time the WAN matrix
+    adds for config ``m`` seen from region ``r`` on top of the
+    uniform-delay baseline (workload-blended, :func:`repro.core.geo.
+    wan_offsets` - exactly zero for a uniform matrix, so the surface then
+    reads identically to the plain MVA percentiles); ``queueing[m]`` the
+    closed-loop MVA residence time at the evaluated client population.
+    Assuming exponential queueing on top of a deterministic WAN offset,
+    the percentiles are ``p50 = wan + ln(2) * queueing`` and ``p99 = wan
+    + ln(100) * queueing``.  The RTT matrix must be expressed in the same
+    time unit as ``1 / alpha`` for the sum to be meaningful.
+    """
+
+    regions: Tuple[str, ...]
+    weights: np.ndarray    # [R] resolved client weights (rows sum to 1)
+    wan: np.ndarray        # [M, R]
+    queueing: np.ndarray   # [M]
+    mean: np.ndarray       # [M, R]
+    p50: np.ndarray        # [M, R]
+    p99: np.ndarray        # [M, R]
+
+    def worst_p99(self) -> np.ndarray:
+        """[M] max p99 over client-bearing regions (fairness objective:
+        the latency the worst-placed client population experiences)."""
+        mask = self.weights > 0
+        return self.p99[:, mask].max(axis=1)
+
+    def blended_p99(self) -> np.ndarray:
+        """[M] client-weighted mean p99 across regions."""
+        return self.p99 @ self.weights
+
+
+@dataclass(frozen=True)
 class CompiledSweep:
     """A grid of deployments lowered to dense demand tensors.
 
@@ -299,6 +334,41 @@ class CompiledSweep:
         if sharding is not None:
             d = flatten_shards(d)
         return mva_curves_from_demands(d / alpha, n_clients_max)
+
+    def geo_latency(self, alpha: float, geo: Any,
+                    workload: Optional[Union[Workload, float]] = None,
+                    f_write: Optional[float] = None,
+                    n_clients: int = 64) -> GeoLatencySurface:
+        """Per-region latency surface for the whole grid in ONE jitted call.
+
+        Composes the per-config WAN latency excess (:func:`repro.core.geo.
+        wan_offsets`, O(M) Python, no device work) with the batched MVA
+        queueing solve (one jitted call over all M configs) to a
+        (config x region) :class:`GeoLatencySurface`.  ``geo`` is a
+        :class:`~repro.core.api.GeoSpec`; its placement decides which
+        region each station sits in and its client weights decide the
+        per-region blend.  Batched configs have no WAN lowering and raise
+        ``ValueError``."""
+        from .geo import wan_offsets
+        if self.configs is None:
+            raise ValueError(
+                "CompiledSweep.geo_latency needs per-row configs; compile "
+                "with compile_sweep(spec) rather than compile_models(models)")
+        w = resolve_workload(workload, f_write,
+                             where="CompiledSweep.geo_latency")
+        _, _, resid = self.mva(alpha, n_clients_max=n_clients, workload=w)
+        queueing = np.asarray(resid[:, -1], dtype=float)
+        regions = tuple(geo.regions)
+        weights = np.asarray(geo.resolved_client_weights(), dtype=float)
+        wan = np.empty((len(self), len(regions)), dtype=float)
+        for i, cfg in enumerate(self.configs):
+            wan[i] = wan_offsets(cfg, geo, workload=w, n_clients=n_clients)
+        mean = wan + queueing[:, None]
+        p50 = wan + float(np.log(2.0)) * queueing[:, None]
+        p99 = wan + float(np.log(100.0)) * queueing[:, None]
+        return GeoLatencySurface(regions=regions, weights=weights, wan=wan,
+                                 queueing=queueing, mean=mean, p50=p50,
+                                 p99=p99)
 
     def fluid(self, alpha: float, n_clients: int,
               workload: Optional[Union[Workload, float]] = None,

@@ -58,7 +58,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Any, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +66,7 @@ import numpy as np
 
 from .analytical import (
     STATION_INDEX,
+    STATION_ORDER,
     DeploymentModel,
     mencius_model,
     spaxos_model,
@@ -318,6 +319,55 @@ def resharding_schedule(
     mig[:, hot * k:(hot + 1) * k] *= migration_factor
     return schedule_from_demands([pre, mig, post], [0.0, start, stop],
                                  n_steps)
+
+
+def region_partition_schedule(
+    base: np.ndarray,
+    model: DeploymentModel,
+    geo: "Any",
+    region: Union[str, int],
+    start: float = 0.4,
+    stop: float = 0.6,
+    n_steps: int = 4000,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """A whole region drops off the WAN during [start, stop), then heals.
+
+    For each station with ``c`` servers of which ``m`` sit in the
+    partitioned region (per the :class:`~repro.core.api.GeoSpec`'s
+    placement cycles), the surviving ``c - m`` servers absorb the
+    station's full traffic - demand per surviving server rises by
+    ``c / (c - m)``.  A station entirely inside the region freezes
+    (:data:`CRASH`) until the partition heals: that is the failure
+    mode a ``single/<region>`` placement risks and a spread placement
+    amortizes, so this schedule is how the placement autotuner's
+    choices get stress-tested under faults.
+
+    ``base`` is the deployment's per-command demand row ([K] or
+    [1, K]) already divided by ``alpha``; ``model`` supplies the
+    per-station server counts.  Returns ``(demands[W, M, K],
+    step_bounds[W])`` for :func:`simulate_transient`."""
+    if not 0.0 < start < stop < 1.0:
+        raise ValueError(
+            f"need 0 < start < stop < 1: start={start}, stop={stop}")
+    if isinstance(region, str):
+        r = list(geo.regions).index(region)
+    else:
+        r = int(region)
+        if not 0 <= r < geo.n_regions:
+            raise ValueError(
+                f"region index {r} out of range for {geo.n_regions} regions")
+    _, _, servers = model.demand_slots()
+    events: List[Event] = []
+    for k, c in enumerate(servers):
+        if c <= 0:
+            continue
+        kind = STATION_ORDER[k]
+        lost = sum(1 for i in range(c) if geo.region_of(kind, i) == r)
+        if lost == 0:
+            continue
+        factor = CRASH if lost >= c else c / float(c - lost)
+        events.append(Event(k, start, stop, factor))
+    return build_schedule(base, events, n_steps)
 
 
 # ---------------------------------------------------------------------------

@@ -10,7 +10,7 @@ with zero test edits, and can never break an unrelated hand-pinned list.
 """
 import pytest
 
-from repro.core import executable_variants
+from repro.core import GeoSpec, executable_variants
 
 
 def pytest_generate_tests(metafunc):
@@ -23,3 +23,16 @@ def pytest_generate_tests(metafunc):
 def registered_executables():
     """The registry's executable-variant names, resolved at test time."""
     return tuple(executable_variants())
+
+
+@pytest.fixture
+def geo3():
+    """A 3-region WAN (us<->eu 8, us<->ap 16, eu<->ap 12 ticks round
+    trip) for the registry-derived geo conformance suite: small enough
+    that no protocol retry timer fires (the tightest is the proxy
+    leader's p2 retry at 40 ticks), so message counts stay
+    delay-invariant and every executable variant must hold msgs/cmd
+    parity, linearizability AND per-region measured-vs-predicted
+    latency under it."""
+    return GeoSpec(regions=("us", "eu", "ap"),
+                   rtt=((0, 8, 16), (8, 0, 12), (16, 12, 0)))

@@ -1,0 +1,358 @@
+"""Geo plane: WAN matrices, placement autotuning, cross-plane parity.
+
+The ISSUE-mandated properties:
+
+* **registry-derived conformance** - every executable variant holds
+  msgs/cmd parity, linearizability AND per-region measured-vs-predicted
+  latency under the 3-region ``geo3`` matrix (conftest fixture), with
+  zero per-variant test edits;
+* **uniform-RTT degenerates exactly** - a uniform (all-zero) matrix
+  reproduces today's numbers bit-for-bit on all three planes: executed
+  traces, the MVA queueing surface, and the batched lanes;
+* **placement-autotune invariance under region relabeling** -
+  ``autotune_placement`` canonicalizes the labeling, so every
+  permutation of the same physical WAN yields bit-identical scores;
+* **timer locality / jitter stacking** - a ``latency_fn`` on the wire
+  never stretches self-addressed timers, and jitter adds on top of the
+  matrix delay rather than replacing it;
+* **calibration regression pin** - ``calibrate_alpha(measured=True)``
+  is exactly unchanged by a uniform matrix and drifts < 5% under a
+  spread one (the modeled-RTT subtraction at work);
+* **thrifty bpaxos** - the EPaxos-style dependency-quorum knob is
+  message-exact on both execution planes.
+"""
+import itertools
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GeoSpec,
+    STATION_ORDER,
+    SweepSpec,
+    Workload,
+    autotune_placement,
+    calibrate_alpha,
+    compile_sweep,
+    execute_configs,
+    geo_variants,
+    region_partition_schedule,
+    run_variant,
+    validate_batched,
+    validate_variant,
+    wan_offsets,
+)
+from repro.core.cluster import Network, Node
+
+W = Workload(f_write=0.5)
+# planetary-scale RTTs: analytical-only paths (surfaces, autotune,
+# transient schedules) - too large for executed runs, where retry
+# timers would fire and break message-count delay-invariance
+GEO_WAN = GeoSpec(regions=("us", "eu", "ap"),
+                  rtt=((0, 80, 160), (80, 0, 120), (160, 120, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Registry-derived conformance: every executable, one 3-region matrix
+# ---------------------------------------------------------------------------
+
+
+def test_geo_conformance(executable_variant, geo3):
+    """Parity + linearizability + per-region latency, per executable."""
+    rep = validate_variant(executable_variant, workload=W, n_commands=30,
+                           seed=0, geo=geo3)
+    assert rep.passed, str(rep)
+    assert rep.trace.linearizable, rep.trace.violations
+    lat = [r for r in rep.rows if r.station.startswith("wan_latency/")]
+    # one row per *client-bearing* region (variants with few clients may
+    # leave a region empty; never more rows than regions)
+    rows = {r.station.split("/")[1] for r in lat}
+    assert 2 <= len(rows) <= 3 and rows <= set(geo3.regions)
+    for r in lat:
+        assert r.measured > 0.0 and r.predicted > 0.0, r
+
+
+# ---------------------------------------------------------------------------
+# Uniform-RTT degenerates exactly to today's numbers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["compartmentalized", "bpaxos"])
+def test_uniform_geo_trace_is_identical(name):
+    """A uniform matrix puts ``local_delay`` (== the Network default) on
+    every link: the executed trace must match a no-geo run exactly."""
+    plain = run_variant(name, workload=W, n_commands=24, seed=3)
+    uni = run_variant(name, workload=W, n_commands=24, seed=3,
+                      geo=GeoSpec.uniform(3))
+    assert uni.linearizable
+    assert uni.station_msgs == plain.station_msgs
+    assert uni.region_latency is not None
+
+
+def test_uniform_surface_is_plain_mva():
+    """wan == 0 and queueing == the plain MVA residence, bit-for-bit."""
+    grid = compile_sweep(SweepSpec(n_proxy_leaders=(2, 4, 6),
+                                   n_replicas=(2, 4)))
+    alpha = calibrate_alpha()
+    surf = grid.geo_latency(alpha, GeoSpec.uniform(3), workload=W,
+                            n_clients=32)
+    assert surf.wan.shape == (len(grid), 3)
+    assert np.all(surf.wan == 0.0)
+    _, _, resid = grid.mva(alpha, n_clients_max=32, workload=W)
+    np.testing.assert_array_equal(surf.queueing, resid[:, -1])
+    np.testing.assert_array_equal(surf.mean, surf.queueing[:, None]
+                                  + surf.wan)
+
+
+def test_uniform_wan_offsets_zero_for_every_variant():
+    uni = GeoSpec.uniform(3)
+    names = geo_variants()
+    assert len(names) >= 8
+    for name in names:
+        off = wan_offsets({"variant": name}, uni, workload=W)
+        assert np.allclose(off, 0.0), (name, off)
+
+
+# ---------------------------------------------------------------------------
+# The (config x region) latency surface
+# ---------------------------------------------------------------------------
+
+
+def test_geo_latency_surface_composition():
+    """p50/p99 are the WAN offset plus ln(2)/ln(100) queueing quantiles;
+    worst/blended reductions follow the client weights."""
+    grid = compile_sweep(SweepSpec(n_proxy_leaders=(2, 4, 6),
+                                   n_replicas=(2, 4)))
+    assert len(grid) >= 6
+    alpha = calibrate_alpha()
+    surf = grid.geo_latency(alpha, GEO_WAN, workload=W, n_clients=32)
+    assert surf.p99.shape == (len(grid), 3)
+    np.testing.assert_allclose(
+        surf.p99, surf.wan + math.log(100.0) * surf.queueing[:, None])
+    np.testing.assert_allclose(
+        surf.p50, surf.wan + math.log(2.0) * surf.queueing[:, None])
+    assert np.all(surf.wan > 0.0)  # every region pays some WAN excess
+    np.testing.assert_allclose(surf.blended_p99(), surf.p99 @ surf.weights)
+    np.testing.assert_array_equal(surf.worst_p99(), surf.p99.max(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Placement autotuning
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_placement_beats_single_region():
+    """For spread clients the winner must strictly beat every
+    fully-pinned placement on worst client-bearing region p99."""
+    tune = autotune_placement(budget=12, alpha=calibrate_alpha(),
+                              geo=GEO_WAN, workload=Workload(f_write=0.2),
+                              n_clients=64)
+    assert tune.best.machines <= 12
+    assert tune.single_region_best is not None
+    assert tune.best.worst_p99 < tune.single_region_best.worst_p99
+    assert len(tune.best.region_p99) == len(GEO_WAN.regions)
+    assert tune.best.worst_p99 == max(tune.best.region_p99)
+
+
+def test_autotune_placement_invariant_under_relabeling():
+    """Exhaustive over all 3! relabelings of the same physical WAN: the
+    winner and every per-placement score are bit-identical (the search
+    canonicalizes the labeling before generating candidates)."""
+    alpha = calibrate_alpha()
+    w = Workload(f_write=0.2)
+    base = autotune_placement(budget=9, alpha=alpha, geo=GEO_WAN,
+                              workload=w, n_clients=32)
+    for perm in itertools.permutations(range(3)):
+        tune = autotune_placement(budget=9, alpha=alpha,
+                                  geo=GEO_WAN.relabeled(perm),
+                                  workload=w, n_clients=32)
+        assert tune.best.placement == base.best.placement
+        assert tune.best.worst_p99 == base.best.worst_p99  # bit-exact
+        assert set(tune.per_placement) == set(base.per_placement)
+        for name, choice in base.per_placement.items():
+            assert tune.per_placement[name].worst_p99 == choice.worst_p99
+            assert tune.per_placement[name].machines == choice.machines
+
+
+def test_relabeled_validates_and_round_trips():
+    perm = (2, 0, 1)
+    g = GEO_WAN.relabeled(perm)
+    assert g.regions == ("ap", "us", "eu")
+    assert g.rtt[g.regions.index("us")][g.regions.index("eu")] == 80
+    inv = tuple(perm.index(i) for i in range(3))
+    assert g.relabeled(inv) == GEO_WAN
+    with pytest.raises(ValueError):
+        GEO_WAN.relabeled((0, 0, 2))
+
+
+# ---------------------------------------------------------------------------
+# Wire semantics: timers stay local, jitter stacks
+# ---------------------------------------------------------------------------
+
+
+class _Probe(Node):
+    def __init__(self, addr):
+        super().__init__(addr)
+        self.arrivals = []
+
+    def on_message(self, src, msg):
+        self.arrivals.append((src, msg, self.net.now))
+
+
+def test_latency_fn_never_stretches_timers():
+    """A WAN matrix on the wire must not slow self-addressed timer
+    deliveries: set_timer passes an explicit delay, which wins."""
+    net = Network(latency_fn=lambda s, d: 50.0)
+    a, b = _Probe("a"), _Probe("b")
+    net.add_nodes([a, b])
+    a.send("b", "wire")
+    a.set_timer("tick", 2.0)
+    net.run()
+    assert b.arrivals[0][2] == 50.0       # matrix delay on the wire
+    (_, timer, t), = [x for x in a.arrivals]
+    assert t == 2.0                       # timer fired at its local delay
+
+
+def test_jitter_stacks_on_matrix_delay():
+    net = Network(seed=7, jitter=3.0, latency_fn=lambda s, d: 50.0)
+    a, b = _Probe("a"), _Probe("b")
+    net.add_nodes([a, b])
+    for _ in range(16):
+        a.send("b", "x")
+    net.run()
+    times = [t for _, _, t in b.arrivals]
+    assert all(50.0 <= t < 53.0 for t in times), times
+    assert max(times) > 50.0              # jitter actually drawn
+
+
+# ---------------------------------------------------------------------------
+# Batched plane: per-region lanes
+# ---------------------------------------------------------------------------
+
+
+def test_batched_geo_lanes():
+    cfgs = [{"variant": "compartmentalized", "n_proxy_leaders": 2,
+             "n_replicas": 2}]
+    geo = GeoSpec(regions=("us", "eu", "ap"),
+                  rtt=((0, 8, 16), (8, 0, 12), (16, 12, 0)))
+    res = execute_configs(cfgs, workload=W, n_commands=24, seeds=2, geo=geo)
+    assert len(res) == 3                  # one lane per region
+    assert res.lane_region is not None and res.wan_offset is not None
+    assert np.all(res.wan_offset > 0.0)
+    lat = res.region_latency(0, "p99")
+    assert set(lat) == set(geo.regions)
+    assert all(v > 0.0 for v in lat.values())
+    # lane command split follows the client weights (uniform -> even-ish)
+    lanes = res.shard_lanes(0)
+    assert int(res.lane_commands[lanes].sum()) == 24
+
+
+def test_batched_uniform_geo_matches_plain():
+    """Uniform matrix: zero WAN offset, and the per-station measured
+    msgs/cmd aggregate to the same totals as a no-geo run."""
+    cfg = {"variant": "compartmentalized", "n_proxy_leaders": 2,
+           "n_replicas": 2}
+    plain = execute_configs([cfg], workload=W, n_commands=24, seeds=2)
+    uni = execute_configs([cfg], workload=W, n_commands=24, seeds=2,
+                          geo=GeoSpec.uniform(3))
+    assert np.all(uni.wan_offset == 0.0)
+    lanes = uni.shard_lanes(0)
+    agg = uni.station_msgs[lanes].sum(axis=0) * (1.0 / len(lanes))
+    # same engine, same per-command behavior: station totals agree
+    np.testing.assert_allclose(agg.sum(), plain.station_msgs[0].sum(),
+                               rtol=0.2)
+
+
+def test_validate_batched_under_geo():
+    rep = validate_batched("compartmentalized", workload=W, n_commands=24,
+                           seeds=2,
+                           geo=GeoSpec(regions=("us", "eu", "ap"),
+                                       rtt=((0, 8, 16), (8, 0, 12),
+                                            (16, 12, 0))))
+    assert rep.passed, str(rep)
+
+
+def test_batched_geo_and_sharding_are_exclusive():
+    from repro.core import ShardingSpec
+    with pytest.raises(ValueError):
+        execute_configs([{"variant": "compartmentalized"}], workload=W,
+                        n_commands=8, seeds=1,
+                        sharding=ShardingSpec(n_shards=2),
+                        geo=GeoSpec.uniform(3))
+
+
+# ---------------------------------------------------------------------------
+# Region-partition transient schedule
+# ---------------------------------------------------------------------------
+
+
+def test_region_partition_schedule_factors():
+    """Survivors absorb c/(c-m); a fully-pinned station freezes."""
+    from repro.core import compile_models, model_for
+    cfg = {"variant": "compartmentalized", "n_proxy_leaders": 2,
+           "n_replicas": 2}
+    model = model_for(cfg)
+    base = compile_models([model], [cfg]).demands(W) / 2e5
+    # pin the leader tier entirely inside us; everything else round-robin
+    geo = GeoSpec(regions=("us", "eu", "ap"),
+                  rtt=((0, 80, 160), (80, 0, 120), (160, 120, 0)),
+                  placement=(("leader", (0,)),))
+    sched, bounds = region_partition_schedule(base, model, geo, "us",
+                                              start=0.4, stop=0.6,
+                                              n_steps=1000)
+    assert sched.shape[0] == len(bounds) == 3      # pre / during / post
+    np.testing.assert_array_equal(sched[0], sched[2])  # heals exactly
+    np.testing.assert_array_equal(sched[0], np.asarray(base))
+    k_leader = STATION_ORDER.index("leader")
+    k_proxy = STATION_ORDER.index("proxy")
+    assert sched[1, 0, k_leader] > 1e6 * sched[0, 0, k_leader]  # CRASH
+    # 2 proxies round-robin -> one lost -> survivors double up
+    np.testing.assert_allclose(sched[1, 0, k_proxy],
+                               2.0 * sched[0, 0, k_proxy])
+    with pytest.raises(ValueError):
+        region_partition_schedule(base, model, geo, "nowhere")
+    with pytest.raises(ValueError):
+        region_partition_schedule(base, model, geo, "us", start=0.7,
+                                  stop=0.2)
+
+
+# ---------------------------------------------------------------------------
+# Calibration regression pin
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_alpha_geo_regression_pin(geo3):
+    """The measured anchor is exactly unchanged by a uniform matrix and
+    drifts < 5% under a spread one (modeled-RTT subtraction); the
+    analytical anchor refuses a geo matrix outright."""
+    a0 = calibrate_alpha(measured=True)
+    assert calibrate_alpha(measured=True, geo=GeoSpec.uniform(3)) == a0
+    a_geo = calibrate_alpha(measured=True, geo=geo3)
+    assert abs(a_geo - a0) / a0 < 0.05
+    with pytest.raises(TypeError):
+        calibrate_alpha(measured=False, geo=geo3)
+
+
+# ---------------------------------------------------------------------------
+# Thrifty bpaxos: message-exact on both planes
+# ---------------------------------------------------------------------------
+
+
+def test_bpaxos_thrifty_parity_both_planes():
+    rep = validate_variant("bpaxos", {"thrifty": True}, workload=W,
+                           n_commands=30, seed=0)
+    assert rep.passed, str(rep)
+    brep = validate_batched("bpaxos", {"thrifty": True}, workload=W,
+                            n_commands=24, seeds=2)
+    assert brep.passed, str(brep)
+
+
+def test_bpaxos_thrifty_sends_fewer_dep_messages():
+    full = run_variant("bpaxos", {"thrifty": False}, workload=W,
+                       n_commands=24, seed=0)
+    thrifty = run_variant("bpaxos", {"thrifty": True}, workload=W,
+                          n_commands=24, seed=0)
+    assert thrifty.linearizable
+    assert (thrifty.station_msgs["dep_service"]
+            < full.station_msgs["dep_service"])

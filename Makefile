@@ -4,7 +4,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke multileader-smoke geo-smoke examples-smoke docs-links check ci clean
+.PHONY: test bench-smoke parity-smoke measured-smoke shard-smoke multileader-smoke geo-smoke autoscale-smoke examples-smoke docs-links check ci clean
 
 test:
 	$(PYTHON) -m pytest -x -q
@@ -46,6 +46,15 @@ multileader-smoke:
 geo-smoke:
 	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only geo
 
+# the elastic control loop, shrunk: the diurnal policy search (autoscaled
+# must beat static-peak machine-hours >= 25% at equal-or-better worst-
+# window p99), flash-crowd re-provisioning under a machine budget, the
+# (config x policy) CompiledSweep.autoscale grid, and the run_autoscaled
+# execution replay (linearizable across every resize, warm-phase dips
+# parity-checked against the transient prediction)
+autoscale-smoke:
+	BENCH_SMOKE=1 $(PYTHON) -m benchmarks.run --only autoscale
+
 # cheap figures + the sweep, transient and variant engines: exercises the
 # batched MVA kernel, the stochastic scan engine (failover benchmark), the
 # protocol-variant plane (BENCH_SMOKE=1 shrinks its transients), the
@@ -68,7 +77,7 @@ examples-smoke:
 docs-links:
 	$(PYTHON) scripts/check_docs_links.py
 
-check: docs-links test parity-smoke measured-smoke shard-smoke multileader-smoke geo-smoke bench-smoke examples-smoke
+check: docs-links test parity-smoke measured-smoke shard-smoke multileader-smoke geo-smoke autoscale-smoke bench-smoke examples-smoke
 
 ci:
 	JAX_PLATFORMS=cpu $(MAKE) docs-links
@@ -78,6 +87,7 @@ ci:
 	JAX_PLATFORMS=cpu $(MAKE) shard-smoke
 	JAX_PLATFORMS=cpu $(MAKE) multileader-smoke
 	JAX_PLATFORMS=cpu $(MAKE) geo-smoke
+	JAX_PLATFORMS=cpu $(MAKE) autoscale-smoke
 	JAX_PLATFORMS=cpu $(MAKE) bench-smoke
 	JAX_PLATFORMS=cpu $(MAKE) examples-smoke
 

@@ -16,6 +16,9 @@
   shards  the shard axis: scaling, skew, budget splits, live resharding
   geo  geo-replication plane: WAN latency surfaces, placement autotune,
             per-region measured parity, region-partition transient
+  autoscale  elastic control loop: diurnal policy search (autoscaled vs
+            static-peak machine-hours at equal p99), flash crowd,
+            execution-plane replay with dip parity
   roofline  dry-run roofline readout (40 cells x 2 meshes)
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -29,6 +32,7 @@ import traceback
 
 from . import (
     ablation,
+    autoscale,
     failover,
     geo,
     latency_throughput,
@@ -58,6 +62,7 @@ MODULES = [
     ("multileader", multileader),
     ("shards", shards),
     ("geo", geo),
+    ("autoscale", autoscale),
     ("roofline", roofline_report),
 ]
 
@@ -116,6 +121,20 @@ benchmarks (label: paper target, typical runtime on one CPU core):
             pre-split level), and a measured 4-shard deployment with
             per-shard parity + per-key-partition linearizability;
             BENCH_SMOKE=1 shrinks = make shard-smoke            (~10 s)
+  geo       geo plane: the (config x region) WAN latency surface in one
+            CompiledSweep.geo_latency call, placement autotuning (hub
+            beats every pinned placement for spread clients), per-region
+            measured parity under the WAN matrix, batched region lanes,
+            region-partition transient, calibration stability;
+            BENCH_SMOKE=1 shrinks = make geo-smoke              (~15 s)
+  autoscale elastic control loop: diurnal policy search in one batched
+            replay (autoscaled beats static-peak machine-hours >= 25%
+            at equal-or-better worst-window p99, BENCH_autoscale.json),
+            flash-crowd re-provisioning under a machine budget, the
+            (config x policy) CompiledSweep.autoscale grid, and the
+            run_autoscaled execution replay - linearizable across every
+            resize, dips parity-checked against the transient;
+            BENCH_SMOKE=1 shrinks = make autoscale-smoke        (~60 s)
   roofline  dry-run roofline readout, needs results/dryrun/     (<1 s)
 
 run a subset:    python -m benchmarks.run --only fig28,sweep

@@ -38,7 +38,15 @@ Four checks over README.md, docs/*.md and benchmarks/README.md:
   ``region_partition_schedule``) must resolve to a def/class in
   ``repro.core``, and every ``geo.<name>`` a doc cites must be a
   top-level def/class in ``src/repro/core/geo.py`` or a ``GeoSpec``
-  field/method (so ``geo.region_of(...)`` snippets stay honest).
+  field/method (so ``geo.region_of(...)`` snippets stay honest);
+* **autoscale-plane names** - every ``AutoscalePolicy`` /
+  ``Controller`` / ``run_autoscaled`` / ``autoscale_grid`` /
+  ``autotune_policy`` / ``reconfiguration_schedule`` /
+  ``measured_capacity`` citation (the whole elastic-control surface)
+  must resolve to a def/class in ``repro.core``, and every
+  ``autoscale.<name>`` must be a top-level def/class in
+  ``src/repro/core/autoscale.py`` or an ``AutoscalePolicy``
+  field/method.
 
 The registry is loaded through a synthetic package (``api.py`` +
 ``analytical.py`` + ``execution.py`` and the correctness-plane modules it
@@ -117,6 +125,24 @@ GEO_SOURCE_MODULES = ("api", "geo", "execution", "sweep", "autotune",
 # def/class in src/repro/core/geo.py or a GeoSpec field/method
 # (geo.region_of(...), geo.rtt, ... in worked examples)
 GEO_MODREF_RE = re.compile(r"\bgeo\.(?!py\b)([A-Za-z_][A-Za-z0-9_]*)")
+# autoscale-plane citations: the policy/controller/trace types plus the
+# live-resize and policy-search surface.  Spans stdlib-only modules
+# (api, execution) and JAX-importing ones (autoscale, sweep, autotune,
+# transient, batched_execution) - same source scrape.
+AUTOSCALE_REF_RE = re.compile(
+    r"\b(AutoscalePolicy|AutoscaleTrace|AutoscaleAction|"
+    r"AutoscaledExecutionTrace|Controller|PolicyChoice|"
+    r"PolicyAutotuneResult|autoscale_grid|autotune_policy|"
+    r"run_autoscaled|resizable_stations|resize_config|station_knob_map|"
+    r"reconfiguration_schedule|diurnal_load|flash_crowd_load|"
+    r"measured_capacity)\b")
+AUTOSCALE_SOURCE_MODULES = ("api", "autoscale", "execution", "sweep",
+                            "autotune", "transient", "batched_execution")
+# docs cite the control loop as autoscale.<name>: must be a top-level
+# def/class in src/repro/core/autoscale.py or an AutoscalePolicy
+# field/method (autoscale.diurnal_load(...), policy.target_high, ...)
+AUTOSCALE_MODREF_RE = re.compile(
+    r"\bautoscale\.(?!py\b)([A-Za-z_][A-Za-z0-9_]*)")
 
 
 def batched_api() -> set[str]:
@@ -149,6 +175,31 @@ def geo_api() -> tuple[set[str], set[str]]:
     api_src = (core / "api.py").read_text()
     m = re.search(r"class GeoSpec\b[\s\S]*?(?=\n(?:class |def |@)|\Z)",
                   api_src)
+    if m:
+        block = m.group(0)
+        members |= set(re.findall(
+            r"^\s+def\s+([A-Za-z_][A-Za-z0-9_]*)", block, re.MULTILINE))
+        members |= set(re.findall(
+            r"^    ([A-Za-z_][A-Za-z0-9_]*)\s*:", block, re.MULTILINE))
+    return names, members
+
+
+def autoscale_api() -> tuple[set[str], set[str]]:
+    """(plane-wide def/class names, autoscale.<name>-citable names).
+
+    The second set is the surface an ``autoscale.<name>`` citation may
+    touch: top-level def/class in autoscale.py plus AutoscalePolicy
+    fields and methods (scraped from the class body in api.py)."""
+    core = ROOT / "src" / "repro" / "core"
+    names: set[str] = set()
+    for mod in AUTOSCALE_SOURCE_MODULES:
+        names |= set(DEF_OR_CLASS_RE.findall((core / f"{mod}.py").read_text()))
+    members = set(DEF_OR_CLASS_RE.findall(
+        (core / "autoscale.py").read_text()))
+    api_src = (core / "api.py").read_text()
+    m = re.search(
+        r"class AutoscalePolicy\b[\s\S]*?(?=\n(?:class |def |@)|\Z)",
+        api_src)
     if m:
         block = m.group(0)
         members |= set(re.findall(
@@ -195,6 +246,7 @@ def main() -> int:
     batched_names = batched_api()
     shard_names = shard_api()
     geo_names, geo_members = geo_api()
+    autoscale_names, autoscale_members = autoscale_api()
     for doc in DOC_FILES:
         if not doc.exists():
             missing.append((doc.relative_to(ROOT), "(doc file itself)"))
@@ -263,6 +315,20 @@ def main() -> int:
                                 f"geo.{name} (not a def/class in "
                                 f"src/repro/core/geo.py nor a GeoSpec "
                                 f"field/method)"))
+        for name in sorted(set(AUTOSCALE_REF_RE.findall(text))):
+            checked += 1
+            if name not in autoscale_names:
+                missing.append((doc.relative_to(ROOT),
+                                f"{name} (no such def/class in any "
+                                f"autoscale-plane module: "
+                                f"{', '.join(AUTOSCALE_SOURCE_MODULES)})"))
+        for name in sorted(set(AUTOSCALE_MODREF_RE.findall(text))):
+            checked += 1
+            if name not in autoscale_members:
+                missing.append((doc.relative_to(ROOT),
+                                f"autoscale.{name} (not a def/class in "
+                                f"src/repro/core/autoscale.py nor an "
+                                f"AutoscalePolicy field/method)"))
     if missing:
         print("dangling doc references:")
         for doc, ref in missing:

@@ -38,12 +38,28 @@ execution.run_variant(geo=...) realizes the matrix on the real cluster
 execute_configs(geo=...) fans the batched plane into per-region lanes;
 transient.region_partition_schedule scripts a region dropping off the
 WAN.
+
+Autoscale plane: api.AutoscalePolicy (utilization band, hysteresis
+guard, cooldown, floors/ceilings, machine budget) drives
+autoscale.Controller / autoscale_grid - a closed loop on the transient
+engine's own measured signals that resizes stations one server at a
+time, each resize paying a transient.reconfiguration_schedule demand
+spike; CompiledSweep.autoscale evaluates a whole (config x policy) grid
+with one batched replay, autotune.autotune_policy ranks policies
+against the frozen static baseline, and execution.run_autoscaled
+replays the emitted plan on a real registered-variant cluster
+(registry-derived live resize via resize_config / station_knob_map,
+linearizable across every epoch, warm-phase dips parity-checked
+against the transient prediction);
+batched_execution.measured_capacity anchors the utilization law on the
+execution plane.
 """
 from .api import (
     MIXED_50_50,
     READ_HEAVY,
     UNSHARDED,
     WRITE_ONLY,
+    AutoscalePolicy,
     ExecutableSpec,
     GeoSpec,
     Knob,
@@ -84,10 +100,19 @@ from .analytical import (
     vanilla_mencius_model,
     vanilla_spaxos_model,
 )
+from .autoscale import (
+    AutoscaleAction,
+    AutoscaleTrace,
+    Controller,
+    autoscale_grid,
+    diurnal_load,
+    flash_crowd_load,
+)
 from .batched_execution import (
     BatchedExecutionResult,
     BatchedParityReport,
     execute_configs,
+    measured_capacity,
     run_variant_batched,
     validate_batched,
 )
@@ -95,6 +120,8 @@ from .autotune import (
     AutotuneResult,
     PlacementAutotuneResult,
     PlacementChoice,
+    PolicyAutotuneResult,
+    PolicyChoice,
     ShardChoice,
     ShardedAutotuneResult,
     TraceStep,
@@ -102,6 +129,7 @@ from .autotune import (
     VariantChoice,
     autotune,
     autotune_placement,
+    autotune_policy,
     autotune_sharded,
     autotune_variants,
     bottleneck_trace,
@@ -111,6 +139,7 @@ from .bpaxos import BPaxosDeployment, bpaxos_model
 from .cluster import Network, Node
 from .craq import CraqDeployment
 from .execution import (
+    AutoscaledExecutionTrace,
     ExecutionTrace,
     ParityReport,
     ShardedDeployment,
@@ -118,8 +147,12 @@ from .execution import (
     ShardedParityReport,
     StationParity,
     default_config,
+    resizable_stations,
+    resize_config,
+    run_autoscaled,
     run_sharded,
     run_variant,
+    station_knob_map,
     validate_sharded,
     validate_variant,
     workload_ops,
@@ -188,6 +221,7 @@ from .transient import (
     burst_events,
     failover_schedule,
     mencius_skip_storm_schedule,
+    reconfiguration_schedule,
     region_partition_schedule,
     resharding_schedule,
     scale_schedule,
@@ -200,24 +234,28 @@ from .statemachine import AppendLog, KVStore, Register, make_state_machine
 
 __all__ = [
     "MIXED_50_50", "READ_HEAVY", "UNSHARDED", "WRITE_ONLY",
-    "AppendLog", "AutotuneResult", "BPaxosDeployment",
+    "AppendLog", "AutoscaleAction", "AutoscalePolicy", "AutoscaleTrace",
+    "AutoscaledExecutionTrace", "AutotuneResult", "BPaxosDeployment",
     "BatchedExecutionResult",
     "BatchedParityReport", "CRASH", "Command",
-    "CompartmentalizedMultiPaxos", "CompiledSweep", "CraqDeployment",
+    "CompartmentalizedMultiPaxos", "CompiledSweep", "Controller",
+    "CraqDeployment",
     "DeploymentConfig", "DeploymentModel", "Event", "ExecutableSpec",
     "ExecutionTrace", "GeoLatency", "GeoLatencySurface", "GeoSpec",
     "GridQuorums", "History", "IssDeployment",
     "KVStore", "Knob", "MajorityQuorums", "MenciusDeployment", "Network",
     "Node", "Operation", "ParityReport", "PlacementAutotuneResult",
-    "PlacementChoice", "Register", "SPaxosDeployment",
+    "PlacementChoice", "PolicyAutotuneResult", "PolicyChoice", "Register",
+    "SPaxosDeployment",
     "STATION_ORDER", "ShardChoice", "ShardedAutotuneResult",
     "ShardedDeployment", "ShardedExecutionTrace", "ShardedParityReport",
     "ShardingSpec", "Station", "StationParity", "SweepSpec", "TraceStep",
     "TransientResult",
     "UnreplicatedStateMachine", "VARIANT_MODELS", "VariantAutotuneResult",
     "VariantChoice", "VariantSpec", "Workload",
-    "ablation_steps", "as_f_write", "autotune", "autotune_placement",
-    "autotune_sharded",
+    "ablation_steps", "as_f_write", "autoscale_grid", "autotune",
+    "autotune_placement",
+    "autotune_policy", "autotune_sharded",
     "autotune_variants",
     "bottleneck_trace", "bpaxos_model", "build_schedule", "burst_events",
     "calibrate_alpha",
@@ -226,24 +264,28 @@ __all__ = [
     "compartmentalized_model", "compile_models", "compile_sweep",
     "config_variant", "craq_chain_model", "craq_model",
     "craq_station_demands", "default_config", "des_throughput",
+    "diurnal_load",
     "execute_configs",
     "effective_batch_size", "executable_variants",
-    "failover_schedule", "flatten_shards",
+    "failover_schedule", "flash_crowd_load", "flatten_shards",
     "fluid_throughput", "fluid_throughput_batch",
     "full_compartmentalized", "geo_station_kinds", "geo_variants",
     "grids_under", "iss_model", "knob",
-    "make_state_machine",
+    "make_state_machine", "measured_capacity",
     "mencius_model", "mencius_skip_storm_schedule", "mixed_workload_speedup",
     "model_for", "multipaxos_model", "mva_curve", "mva_curves_batch",
     "mva_curves_from_demands", "noop_command",
     "partition_history", "partition_ops", "placement_candidates",
     "predict_geo_latency", "read_scalability_law",
+    "reconfiguration_schedule",
     "register_executable", "register_geo_path", "register_variant",
     "registered_variants",
-    "region_partition_schedule", "resharding_schedule", "resolve_workload",
-    "run_sharded", "run_variant", "run_variant_batched",
+    "region_partition_schedule", "resharding_schedule", "resizable_stations",
+    "resize_config", "resolve_workload",
+    "run_autoscaled", "run_sharded", "run_variant", "run_variant_batched",
     "scale_schedule", "schedule_from_demands",
     "shard_column", "shard_demands", "shard_weights", "simulate_transient",
+    "station_knob_map",
     "spaxos_model", "spaxos_payload_ramp_schedule",
     "split_counts", "split_weights", "stack_demands",
     "temporary_variants", "transient_throughput", "unregister_variant",

@@ -315,7 +315,7 @@ UNSHARDED = ShardingSpec(n_shards=1)
 @dataclass(frozen=True)
 class GeoSpec:
     """A geo-replicated deployment as one value: named regions, a
-    symmetric per-region-pair RTT matrix, a placement (which region hosts
+    directed per-region-pair RTT matrix, a placement (which region hosts
     each station replica) and per-region client weights.
 
     One spec drives every plane:
@@ -333,10 +333,13 @@ class GeoSpec:
       config into per-region lanes (one closed-loop client population
       per region) whose latency histograms carry the WAN offsets.
 
-    Conventions: ``rtt[i][j]`` is the *round-trip* time between regions
-    ``i`` and ``j`` in the same virtual-time units as the network's
-    ``default_latency`` (must be square, symmetric, zero-diagonal,
-    non-negative); a one-way hop costs ``local_delay + rtt/2`` (local
+    Conventions: ``rtt[i][j]`` is the *round-trip* time for a message
+    leaving region ``i`` toward ``j`` and its reply, in the same
+    virtual-time units as the network's ``default_latency`` (must be
+    square, zero-diagonal, non-negative; asymmetric matrices are allowed
+    - e.g. a healing path after a region outage - and :attr:`symmetric`
+    reports whether the matrix is direction-free); a one-way hop costs
+    ``local_delay + rtt/2`` (local
     hops, including self-sends, cost ``local_delay`` - the uniform
     all-zero matrix therefore reproduces today's single-delay numbers
     exactly).  ``placement`` maps a station kind (the ``role`` part of a
@@ -375,10 +378,6 @@ class GeoSpec:
                     raise ValueError(
                         f"GeoSpec.rtt must be non-negative: rtt[{i}][{j}]="
                         f"{rtt[i][j]}")
-                if rtt[i][j] != rtt[j][i]:
-                    raise ValueError(
-                        f"GeoSpec.rtt must be symmetric: rtt[{i}][{j}]="
-                        f"{rtt[i][j]} != rtt[{j}][{i}]={rtt[j][i]}")
         object.__setattr__(self, "rtt", rtt)
         placement = tuple(
             (str(kind), tuple(int(r) for r in cycle))
@@ -432,6 +431,16 @@ class GeoSpec:
         """True when every inter-region RTT is zero (the degenerate case
         that must reproduce single-delay numbers exactly)."""
         return all(x == 0.0 for row in self.rtt for x in row)
+
+    @property
+    def symmetric(self) -> bool:
+        """True when ``rtt[i][j] == rtt[j][i]`` for every pair - the
+        direction-free case ``wan_offsets`` keeps exact.  Directed
+        matrices (a congested heal path after a region outage) are
+        legal; each hop reads its own directed half-RTT."""
+        n = self.n_regions
+        return all(self.rtt[i][j] == self.rtt[j][i]
+                   for i in range(n) for j in range(i + 1, n))
 
     def one_way(self, i: int, j: int) -> float:
         """WAN half-RTT between regions ``i`` and ``j`` (0 for i == j);
@@ -523,6 +532,124 @@ class GeoSpec:
         w = ", ".join(f"{x:g}" for x in self.resolved_client_weights())
         return (f"{self.n_regions} regions ({', '.join(self.regions)}; "
                 f"client weights {w})")
+
+
+# ---------------------------------------------------------------------------
+# AutoscalePolicy: the elastic-control contract, as one value
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """An elastic-scaling policy as one declarative value.
+
+    The policy is the *contract* the autoscale controller
+    (``repro.core.autoscale.Controller``) enforces per control window:
+
+    * ``target_low`` / ``target_high`` - the per-station utilization
+      band.  A station above ``target_high`` gains one server; a station
+      below ``target_low`` loses one, but only when the *predicted*
+      post-drain utilization ``u * c / (c - 1)`` stays at or under
+      ``target_high`` (the hysteresis guard: a drain whose inverse add
+      would immediately re-trigger is never taken, so constant load
+      converges to zero actions);
+    * ``queue_high`` - mean queue depth per server that forces an add
+      even inside the utilization band (the queue-based load-leveling
+      signal; ``0`` disables it);
+    * ``cooldown_windows`` - control windows that must pass after any
+      action before the next one (reconfiguration has a modelled demand
+      spike; back-to-back resizes would stack spikes);
+    * ``min_counts`` / ``max_counts`` - per-station floors/ceilings as
+      ``(station, count)`` pairs; stations without an entry fall back to
+      1 / unbounded.  Floors also thread through
+      ``autotune.variant_candidate_configs`` so the tuner never proposes
+      a config the policy would be unable to hold;
+    * ``machine_budget`` - total-machine ceiling across all stations
+      (``None`` = unbounded); adds that would exceed it are skipped;
+    * ``spike_factor`` / ``spike_fraction`` - the modelled cost of a
+      resize: the resized station's demand is multiplied by
+      ``spike_factor`` for the first ``spike_fraction`` of the window
+      the action lands in (``transient.reconfiguration_schedule``).
+
+    Stdlib-only on purpose - the policy travels to the JAX-free
+    execution plane (``execution.run_autoscaled``) unchanged.
+    """
+
+    target_low: float = 0.45
+    target_high: float = 0.75
+    queue_high: float = 0.0
+    cooldown_windows: int = 1
+    min_counts: Tuple[Tuple[str, int], ...] = ()
+    max_counts: Tuple[Tuple[str, int], ...] = ()
+    machine_budget: Optional[int] = None
+    spike_factor: float = 1.5
+    spike_fraction: float = 0.25
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.target_low < self.target_high <= 1.0:
+            raise ValueError(
+                f"AutoscalePolicy needs 0 < target_low < target_high <= 1: "
+                f"got ({self.target_low}, {self.target_high})")
+        if self.queue_high < 0.0:
+            raise ValueError(
+                f"AutoscalePolicy.queue_high must be non-negative: "
+                f"{self.queue_high}")
+        if self.cooldown_windows < 0:
+            raise ValueError(
+                f"AutoscalePolicy.cooldown_windows must be >= 0: "
+                f"{self.cooldown_windows}")
+        for label, pairs in (("min_counts", self.min_counts),
+                             ("max_counts", self.max_counts)):
+            norm = tuple((str(s), int(c)) for s, c in pairs)
+            if any(c < 1 for _, c in norm):
+                raise ValueError(
+                    f"AutoscalePolicy.{label} entries must be >= 1: {norm}")
+            if len(set(s for s, _ in norm)) != len(norm):
+                raise ValueError(
+                    f"AutoscalePolicy.{label} stations must be unique: "
+                    f"{norm}")
+            object.__setattr__(self, label, norm)
+        for s, lo in self.min_counts:
+            hi = self.max_for(s)
+            if hi is not None and lo > hi:
+                raise ValueError(
+                    f"AutoscalePolicy: min_counts[{s!r}]={lo} exceeds "
+                    f"max_counts[{s!r}]={hi}")
+        if self.machine_budget is not None and self.machine_budget < 1:
+            raise ValueError(
+                f"AutoscalePolicy.machine_budget must be >= 1 or None: "
+                f"{self.machine_budget}")
+        if self.spike_factor < 1.0:
+            raise ValueError(
+                f"AutoscalePolicy.spike_factor must be >= 1 (a resize "
+                f"never makes the window cheaper): {self.spike_factor}")
+        if not 0.0 <= self.spike_fraction <= 1.0:
+            raise ValueError(
+                f"AutoscalePolicy.spike_fraction must be in [0, 1]: "
+                f"{self.spike_fraction}")
+
+    def min_for(self, station: str) -> int:
+        """The policy's floor for ``station`` (1 when unpinned)."""
+        for s, c in self.min_counts:
+            if s == station:
+                return c
+        return 1
+
+    def max_for(self, station: str) -> Optional[int]:
+        """The policy's ceiling for ``station`` (None = unbounded)."""
+        for s, c in self.max_counts:
+            if s == station:
+                return c
+        return None
+
+    def describe(self) -> str:
+        bits = [f"band [{self.target_low:g}, {self.target_high:g}]",
+                f"cooldown {self.cooldown_windows}w"]
+        if self.queue_high > 0.0:
+            bits.append(f"queue>{self.queue_high:g}")
+        if self.machine_budget is not None:
+            bits.append(f"budget {self.machine_budget}")
+        return ", ".join(bits)
 
 
 # ---------------------------------------------------------------------------

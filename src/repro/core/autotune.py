@@ -28,7 +28,14 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from .analytical import DeploymentModel, multipaxos_model
-from .api import ShardingSpec, Workload, resolve_workload, variant_spec
+from .api import (
+    STATION_INDEX,
+    AutoscalePolicy,
+    ShardingSpec,
+    Workload,
+    resolve_workload,
+    variant_spec,
+)
 from .sweep import (
     CompiledSweep,
     Config,
@@ -333,9 +340,28 @@ def autotune(budget: int, alpha: float,
 # ---------------------------------------------------------------------------
 
 
+def _meets_floors(model: DeploymentModel,
+                  policy: Optional[AutoscalePolicy]) -> bool:
+    """True when every station the deployment actually provisions sits
+    at or above the policy's pinned per-station floor.  Stations the
+    variant does not have (zero servers) are exempt - a floor on
+    ``proxy`` cannot disqualify a chain protocol."""
+    if policy is None or not policy.min_counts:
+        return True
+    srv = model.demand_slots()[2]
+    for station, lo in policy.min_counts:
+        col = STATION_INDEX.get(station)
+        if col is None or col >= len(srv):
+            continue
+        if 0 < srv[col] < lo:
+            return False
+    return True
+
+
 def variant_candidate_configs(budget: int, f: int = 1,
                               variants: Tuple[str, ...] = (
                                   "compartmentalized", "mencius", "spaxos"),
+                              policy: Optional[AutoscalePolicy] = None,
                               ) -> List[Config]:
     """The per-variant discrete config spaces under one machine budget.
 
@@ -348,13 +374,21 @@ def variant_candidate_configs(budget: int, f: int = 1,
     default knob product (a single config for the knobless baselines).
     Over-budget combinations are kept (the batched eval masks them by
     ``machines``) so one compiled space serves nearby budgets too.
-    Runtime-registered variants ride this search with no edits here."""
+    Runtime-registered variants ride this search with no edits here.
+
+    An :class:`~repro.core.api.AutoscalePolicy` with pinned
+    ``min_counts`` prunes configs provisioned *below* a floor up front:
+    the autotuner's fewer-machines tie-break would otherwise hand the
+    elastic controller a starting point it could never legally reach by
+    draining (floors bind drains, so they must bind the search too)."""
     configs: List[Config] = []
     for variant in variants:
         spec = variant_spec(variant)
         overrides = (spec.candidate_knobs(budget, f)
                      if spec.candidate_knobs is not None else {})
         configs.extend(spec.configs(f=f, overrides=overrides))
+    if policy is not None and policy.min_counts:
+        configs = [c for c in configs if _meets_floors(model_for(c), policy)]
     return configs
 
 
@@ -365,6 +399,7 @@ def autotune_variants(budget: int, alpha: float,
                       variants: Tuple[str, ...] = (
                           "compartmentalized", "mencius", "spaxos"),
                       compiled: Optional[CompiledSweep] = None,
+                      policy: Optional[AutoscalePolicy] = None,
                       ) -> VariantAutotuneResult:
     """Search across protocol variants under one machine budget.
 
@@ -374,16 +409,24 @@ def autotune_variants(budget: int, alpha: float,
     :class:`~repro.core.api.Workload`, and reports the best deployment of
     each variant plus the overall winner - the paper's "a technique, not
     a protocol" claim as a search result.  Ties break toward fewer
-    machines, like :func:`autotune`."""
+    machines, like :func:`autotune` - unless an autoscale ``policy``
+    pins per-station ``min_counts``, in which case deployments below a
+    floor are infeasible however few machines they use (the controller
+    could never drain back up to legality)."""
     w = resolve_workload(workload, f_write, where="autotune_variants")
     if compiled is None:
-        configs = variant_candidate_configs(budget, f=f, variants=variants)
+        configs = variant_candidate_configs(budget, f=f, variants=variants,
+                                            policy=policy)
         compiled = compile_models([model_for(c) for c in configs], configs)
     if compiled.configs is None:
         raise ValueError(
             "compiled sweep carries no configs - build it with compile_sweep "
             "(or pass configs to compile_models)")
     feasible = compiled.machines <= budget
+    if policy is not None and policy.min_counts:
+        floors_ok = np.asarray([_meets_floors(m, policy)
+                                for m in compiled.models])
+        feasible = feasible & floors_ok
     peaks = np.where(feasible, compiled.peak_throughput(alpha, w),
                      -np.inf)
     order = np.lexsort((compiled.machines, -peaks))
@@ -418,6 +461,91 @@ def autotune_variants(budget: int, alpha: float,
     return VariantAutotuneResult(winner=winner, per_variant=per_variant,
                                  budget=budget,
                                  n_candidates=int(feasible.sum()))
+
+
+# ---------------------------------------------------------------------------
+# Policy search: which autoscale policy saves the most machine-hours?
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PolicyChoice:
+    """One policy's scorecard on the load schedule (``policy`` None is
+    the frozen static baseline)."""
+
+    policy: Optional[AutoscalePolicy]
+    trace: "object"            # AutoscaleTrace (full evidence)
+    machine_time: float        # machine x run-fraction integral
+    peak_p99: float            # worst-window p99, seconds
+    peak_machines: int
+
+
+@dataclass(frozen=True)
+class PolicyAutotuneResult:
+    """Verdict of :func:`autotune_policy`: the cheapest policy whose
+    worst-window p99 stays within ``p99_slack`` of the static baseline."""
+
+    winner: PolicyChoice
+    static: PolicyChoice
+    choices: Tuple[PolicyChoice, ...]
+    p99_slack: float
+
+    def describe(self) -> str:
+        saved = 1.0 - self.winner.machine_time / self.static.machine_time
+        pol = (self.winner.policy.describe() if self.winner.policy
+               else "static")
+        return (f"winner {pol}: machine_time "
+                f"{self.winner.machine_time:.2f} vs static "
+                f"{self.static.machine_time:.2f} ({saved:.0%} saved), "
+                f"peak p99 {self.winner.peak_p99:.3e}s vs "
+                f"{self.static.peak_p99:.3e}s "
+                f"(slack {self.p99_slack:.2f})")
+
+
+def autotune_policy(policies: Tuple[AutoscalePolicy, ...],
+                    base: np.ndarray, servers: np.ndarray,
+                    load: np.ndarray, *,
+                    p99_slack: float = 1.10,
+                    budget: Optional[int] = None,
+                    **kwargs) -> PolicyAutotuneResult:
+    """Search an :class:`~repro.core.api.AutoscalePolicy` grid on one
+    deployment and load schedule: every policy (plus the frozen static
+    baseline) becomes one lane of a single
+    :func:`repro.core.autoscale.autoscale_grid` run - shared probes, one
+    batched full-horizon replay - and the winner is the policy with the
+    smallest machine-time integral whose worst-window p99 stays within
+    ``p99_slack`` x the static baseline's (and whose peak provisioning
+    fits ``budget``, when given).  The same feasibility-mask +
+    ``lexsort`` idiom as the budget autotuners; if no policy qualifies,
+    the static baseline wins."""
+    from .autoscale import autoscale_grid
+    if not policies:
+        raise ValueError("autotune_policy needs at least one policy")
+    if p99_slack <= 0.0:
+        raise ValueError(f"p99_slack must be positive: {p99_slack}")
+    lanes: List[Optional[AutoscalePolicy]] = list(policies) + [None]
+    base = np.asarray(base, dtype=np.float64)
+    servers = np.asarray(servers)
+    bases = np.repeat(base[None, :], len(lanes), axis=0)
+    srv = np.repeat(servers[None, :], len(lanes), axis=0)
+    traces = autoscale_grid(bases, srv, lanes, load, **kwargs)
+    choices = tuple(PolicyChoice(
+        policy=t.policy, trace=t, machine_time=t.machine_time,
+        peak_p99=t.peak_p99(), peak_machines=t.peak_machines)
+        for t in traces)
+    static = choices[-1]
+    cap = p99_slack * static.peak_p99
+    pool = [c for c in choices[:-1]
+            if c.peak_p99 <= cap
+            and (budget is None or c.peak_machines <= budget)]
+    if not pool:
+        winner = static
+    else:
+        mt = np.asarray([c.machine_time for c in pool])
+        p9 = np.asarray([c.peak_p99 for c in pool])
+        winner = pool[int(np.lexsort((p9, mt))[0])]
+    return PolicyAutotuneResult(winner=winner, static=static,
+                                choices=choices, p99_slack=p99_slack)
 
 
 # ---------------------------------------------------------------------------

@@ -67,7 +67,7 @@ from ..kernels.ops import latency_hist
 
 __all__ = [
     "BatchedExecutionResult", "BatchedParityReport", "execute_configs",
-    "run_variant_batched", "validate_batched",
+    "measured_capacity", "run_variant_batched", "validate_batched",
 ]
 
 
@@ -634,6 +634,32 @@ def run_variant_batched(name: str,
     n_cl = n_clients if n_clients is not None else spec.executable.n_clients
     return execute_configs([cfg], workload=workload, n_commands=n_commands,
                            seeds=seeds, n_clients=n_cl, **kwargs)
+
+
+def measured_capacity(name: str,
+                      config: Optional[Config] = None,
+                      workload: Optional[Union[Workload, float]] = None,
+                      n_commands: int = 96,
+                      seeds: Union[int, Sequence[int]] = 3,
+                      n_clients: Optional[int] = None,
+                      **kwargs: Any) -> float:
+    """Saturated cmds/s of one variant config off the batched executor:
+    the execution-plane twin of the transient capacity anchor that
+    :func:`repro.core.autoscale.autoscale_grid` probes with
+    ``simulate_transient`` at the saturation population.
+
+    A closed population this deep pins the bottleneck station near full
+    utilization, so the seed-mean makespan rate IS the config's peak
+    service rate - the ``lam_peak`` an :class:`~repro.core.api.\
+AutoscalePolicy` band is anchored against, only measured on the
+    message-level cluster instead of the token simulator."""
+    spec = variant_spec(name)
+    n_cl = n_clients if n_clients is not None else max(
+        8, 2 * spec.executable.n_clients if spec.executable else 8)
+    res = run_variant_batched(name, config=config, workload=workload,
+                              n_commands=n_commands, seeds=seeds,
+                              n_clients=n_cl, **kwargs)
+    return float(res.throughput[0].mean())
 
 
 # ---------------------------------------------------------------------------

@@ -66,10 +66,12 @@ from .sharding import partition_history, partition_ops
 from .spaxos import SPaxosDeployment, VanillaSPaxosDeployment
 
 __all__ = [
-    "ExecutionTrace", "ParityReport", "ShardedDeployment",
-    "ShardedExecutionTrace", "ShardedParityReport", "StationParity",
-    "default_config", "run_sharded", "run_variant", "validate_sharded",
-    "validate_variant", "workload_ops",
+    "AutoscaledExecutionTrace", "ExecutionTrace", "ParityReport",
+    "ShardedDeployment", "ShardedExecutionTrace", "ShardedParityReport",
+    "StationParity", "default_config", "resizable_stations",
+    "resize_config", "run_autoscaled", "run_sharded", "run_variant",
+    "station_knob_map", "validate_sharded", "validate_variant",
+    "workload_ops",
 ]
 
 
@@ -823,6 +825,297 @@ def validate_sharded(name: str,
             trace=trace))
     return ShardedParityReport(variant=name, sharding=sharding, workload=w,
                                reports=tuple(reports), trace=strace)
+
+
+# ---------------------------------------------------------------------------
+# The autoscale replay: live station add/drain on a real cluster
+# ---------------------------------------------------------------------------
+
+
+def station_knob_map(name: str, config: Optional[Config] = None,
+                     workload: Optional[Union[Workload, float]] = None,
+                     ) -> Dict[str, str]:
+    """Which config key resizes which station - derived from the
+    registry, zero per-variant branches.
+
+    For every single-key integer knob the variant declares, build the
+    analytical model at ``knob`` and ``knob + 1`` and diff the
+    per-station server counts: a knob that moves exactly one station's
+    count by exactly one IS that station's resize handle
+    (compartmentalized: ``n_proxy_leaders`` -> ``proxy``,
+    ``n_replicas`` -> ``replica``).  Coupled knobs (acceptor grids) and
+    knobs that reshape several stations (``f``) are excluded - resizing
+    them is a reconfiguration, not an elastic add/drain.  Runtime
+    variants get their resize handles the moment they register knobs."""
+    spec = variant_spec(name)
+    cfg = dict(config) if config is not None else default_config(name)
+    cfg.pop("variant", None)
+    w = resolve_workload(workload, where="station_knob_map")
+    base_srv = spec.model(cfg, w).demand_slots()[2]
+    mapping: Dict[str, str] = {}
+    for kn in spec.knobs:
+        if len(kn.keys) != 1:
+            continue
+        key = kn.keys[0]
+        cur = cfg.get(key)
+        if not isinstance(cur, int) or isinstance(cur, bool):
+            continue
+        up = dict(cfg)
+        up[key] = cur + 1
+        try:
+            up_srv = spec.model(up, w).demand_slots()[2]
+        except Exception:
+            continue
+        diffs = [i for i in range(len(base_srv)) if up_srv[i] != base_srv[i]]
+        if (len(diffs) == 1
+                and up_srv[diffs[0]] == base_srv[diffs[0]] + 1):
+            mapping[STATION_ORDER[diffs[0]]] = key
+    return mapping
+
+
+def resizable_stations(name: str, config: Optional[Config] = None,
+                       ) -> Tuple[str, ...]:
+    """The stations :func:`run_autoscaled` can live-resize for this
+    variant (see :func:`station_knob_map`); empty for knobless variants
+    like ``unreplicated``."""
+    return tuple(sorted(station_knob_map(name, config)))
+
+
+def resize_config(name: str, config: Config, station: str, delta: int,
+                  ) -> Config:
+    """One elastic action lowered onto the config dict: the station's
+    registry-derived resize knob moves by ``delta`` (floor 1)."""
+    mapping = station_knob_map(name, config)
+    key = mapping.get(station)
+    if key is None:
+        raise ValueError(
+            f"variant {name!r} cannot resize station {station!r}; "
+            f"resizable: {sorted(mapping) or 'none'}")
+    cfg = dict(config)
+    new = int(cfg[key]) + int(delta)
+    if new < 1:
+        raise ValueError(
+            f"resize would drop {station!r} ({key}) below 1: {new}")
+    cfg[key] = new
+    return cfg
+
+
+@dataclass
+class AutoscaledExecutionTrace:
+    """One autoscale plan replayed live on a real registered-variant
+    cluster, epoch by epoch.
+
+    Each resize is an epoch boundary: the old deployment drains to
+    quiescence (stop routing + flush in-flight ops), a fresh deployment
+    at the resized config warms by replaying the committed KV state
+    (migration puts + continuity ``get`` probes, all paying virtual
+    time), and traffic resumes.  ``window_rates`` include that
+    reconfiguration overhead, ``serve_rates`` exclude it - their ratio
+    per action window is the *measured* dip the transient plane's
+    :meth:`~repro.core.autoscale.AutoscaleTrace.predicted_dip` is
+    parity-checked against (``dip_rows``), within
+    ``max(0.35, exe.latency_tolerance)``.  Safety is non-negotiable:
+    every epoch's history is per-key-partition linearizable and every
+    continuity probe returns the pre-resize committed value."""
+
+    variant: str
+    initial_config: Config
+    final_config: Config
+    plan: Tuple[Dict[str, Any], ...]
+    load: Tuple[float, ...]            # [W] multipliers
+    window_ops: Tuple[int, ...]        # [W] commands served per window
+    window_rates: Tuple[float, ...]    # [W] cmds per virtual time, incl.
+    serve_rates: Tuple[float, ...]     # [W] excl. reconfiguration cost
+    machines: Tuple[int, ...]          # [W] provisioned servers
+    machine_time: float
+    epochs: Tuple[Tuple[int, Config], ...]  # (start window, config)
+    dip_rows: Tuple[Dict[str, Any], ...]    # per action: measured vs
+    tolerance: float                        # predicted dip ratio
+    linearizable: bool
+    checkers: Tuple[str, ...]          # per epoch
+    continuity_ok: bool
+    continuity: Tuple[Tuple[str, Any, Any], ...]  # (key, want, got)
+    steps: int
+
+    @property
+    def dips_ok(self) -> bool:
+        return all(r["ok"] for r in self.dip_rows)
+
+    @property
+    def passed(self) -> bool:
+        return self.linearizable and self.continuity_ok and self.dips_ok
+
+    def describe(self) -> str:
+        acts = ", ".join(
+            f"w{a['window']} {'+' if a['delta'] > 0 else '-'}{a['station']}"
+            for a in self.plan) or "no actions"
+        dips = ", ".join(
+            f"w{r['window']} {r['measured']:.2f}/{r['predicted']:.2f}"
+            for r in self.dip_rows if r["predicted"] is not None)
+        return (f"{self.variant} autoscaled over {len(self.load)} windows "
+                f"({len(self.epochs)} epochs): {acts}; machine_time "
+                f"{self.machine_time:.2f}; dips meas/pred: {dips or 'n/a'}; "
+                f"linearizable={self.linearizable} "
+                f"continuity={self.continuity_ok}")
+
+
+def _last_committed_puts(history: History) -> Dict[Any, Any]:
+    """Last committed value per key, in response-time order - the state
+    an epoch hands its successor."""
+    last: Dict[Any, Any] = {}
+    for o in sorted(history.complete(), key=lambda o: o.response_time):
+        if o.op[0] == "put":
+            last[o.op[1]] = o.op[2]
+    return last
+
+
+def run_autoscaled(name: str,
+                   plan: Any,
+                   load: Optional[Any] = None,
+                   config: Optional[Config] = None,
+                   workload: Optional[Union[Workload, float]] = None,
+                   n_commands_per_window: int = 36,
+                   n_clients: Optional[int] = None,
+                   seed: int = 0,
+                   state_machine: str = "kv",
+                   exhaustive_limit: int = 24,
+                   max_steps: int = 2_000_000,
+                   ) -> AutoscaledExecutionTrace:
+    """Replay an autoscale plan against a real registered-variant
+    cluster, staying linearizable across every resize.
+
+    ``plan`` is an :class:`~repro.core.autoscale.AutoscaleTrace` (its
+    :meth:`plan`, ``load`` and per-action ``predicted_dip`` are used) or
+    a plain sequence of ``{"window", "station", "delta"}`` dicts.  Each
+    window serves a :func:`workload_ops` stream sized by its load
+    multiplier through the live deployment; a window with an action
+    first retires the old epoch - drain to quiescence, flush in-flight
+    ops - then builds the resized deployment via the registry-derived
+    :func:`resize_config` (zero core edits for any variant that declares
+    resize knobs) and warms it by replaying committed state, with the
+    whole drain+warm cost paid in measured virtual time.  The per-action
+    measured dip (rate including reconfiguration cost over rate without)
+    is compared to the transient plane's prediction within
+    ``max(0.35, latency_tolerance)`` - the same replay-parity discipline
+    as the failover and resharding replays."""
+    exe = _executable_of(name)
+    spec = variant_spec(name)
+    w = resolve_workload(workload, where="run_autoscaled")
+    cfg = dict(config) if config is not None else default_config(name)
+    n_cl = n_clients if n_clients is not None else exe.n_clients
+    tol = max(0.35, exe.latency_tolerance)
+
+    predicted: Dict[int, Optional[float]] = {}
+    if hasattr(plan, "plan"):                     # AutoscaleTrace duck type
+        if load is None:
+            load = [float(x) for x in plan.load]
+        actions = list(plan.plan())
+        for a in actions:
+            predicted[int(a["window"])] = plan.predicted_dip(
+                int(a["window"]))
+        plan_rows = tuple(dict(a) for a in actions)
+    else:
+        plan_rows = tuple(dict(a) for a in plan)
+    if load is None:
+        horizon = max((int(a["window"]) for a in plan_rows), default=0) + 2
+        load = [1.0] * horizon
+    load = [float(x) for x in load]
+    if not load or min(load) <= 0.0:
+        raise ValueError("load must be a non-empty positive vector")
+    peak = max(load)
+    by_window: Dict[int, List[Dict[str, Any]]] = {}
+    for a in plan_rows:
+        wdx = int(a["window"])
+        if not 0 <= wdx < len(load):
+            raise ValueError(
+                f"action window {wdx} outside the {len(load)}-window "
+                f"horizon")
+        by_window.setdefault(wdx, []).append(a)
+
+    dep = _build_deployment(exe, cfg, n_cl, seed, state_machine)
+    epochs: List[Tuple[int, Config]] = [(0, dict(cfg))]
+    checkers: List[str] = []
+    continuity: List[Tuple[str, Any, Any]] = []
+    window_ops: List[int] = []
+    window_rates: List[float] = []
+    serve_rates: List[float] = []
+    machines: List[int] = []
+    dip_rows: List[Dict[str, Any]] = []
+    lin_ok = True
+    steps = 0
+    committed: Dict[Any, Any] = {}
+
+    def _retire(dep: Any) -> None:
+        nonlocal lin_ok, steps
+        steps += dep.run_to_quiescence(max_steps=max_steps)  # flush
+        ok, checker, _ = _check_history_partitioned(
+            dep.history, sm_kind=state_machine,
+            exhaustive_limit=exhaustive_limit)
+        lin_ok = lin_ok and ok
+        checkers.append(checker)
+        committed.update(_last_committed_puts(dep.history))
+
+    op_mix = replace(w, f_write=1.0) if exe.reads_as_writes else w
+    for wdx in range(len(load)):
+        overhead = 0.0
+        if wdx in by_window:
+            _retire(dep)                         # drain + flush old epoch
+            for a in by_window[wdx]:
+                cfg = resize_config(name, cfg, str(a["station"]),
+                                    int(a["delta"]))
+            dep = _build_deployment(exe, cfg, n_cl, seed + len(epochs),
+                                    state_machine)
+            epochs.append((wdx, dict(cfg)))
+            if committed:                        # warm: migrate state
+                keys = sorted(committed, key=str)
+                t0 = dep.net.now
+                per = [[] for _ in dep.clients]
+                for i, k in enumerate(keys):
+                    per[i % len(per)].append(k)
+                for client, mine in zip(dep.clients, per):
+                    ops = ([("put", k, committed[k]) for k in mine]
+                           + [("get", k) for k in mine])
+                    if ops:
+                        client.run_ops(ops)
+                steps += _drive(name, dep, max_steps)
+                overhead = dep.net.now - t0
+                first_get: Dict[Any, Any] = {}
+                for o in sorted(dep.history.complete(),
+                                key=lambda o: o.response_time):
+                    if o.op[0] == "get" and o.op[1] not in first_get:
+                        first_get[o.op[1]] = o.result
+                for k in keys:
+                    continuity.append((str(k), committed[k],
+                                       first_get.get(k)))
+        n_ops = max(2, round(n_commands_per_window * load[wdx] / peak))
+        ops = workload_ops(op_mix, n_ops,
+                           seed=seed * 131 + 7 * wdx + len(epochs))
+        t0 = dep.net.now
+        _assign_ops(dep, ops)
+        steps += _drive(name, dep, max_steps)
+        serve = max(dep.net.now - t0, 1e-12)
+        window_ops.append(n_ops)
+        serve_rates.append(n_ops / serve)
+        window_rates.append(n_ops / (serve + overhead))
+        machines.append(sum(spec.model(cfg, w).demand_slots()[2]))
+        if wdx in by_window:
+            measured = serve / (serve + overhead)
+            pred = predicted.get(wdx)
+            ok = pred is None or abs(measured - pred) <= tol
+            dip_rows.append({"window": wdx, "measured": measured,
+                             "predicted": pred, "ok": ok})
+    _retire(dep)
+
+    cont_ok = all(got == want for _, want, got in continuity)
+    return AutoscaledExecutionTrace(
+        variant=name, initial_config=dict(epochs[0][1]),
+        final_config=dict(cfg), plan=plan_rows, load=tuple(load),
+        window_ops=tuple(window_ops), window_rates=tuple(window_rates),
+        serve_rates=tuple(serve_rates), machines=tuple(machines),
+        machine_time=sum(machines) / len(machines),
+        epochs=tuple(epochs), dip_rows=tuple(dip_rows), tolerance=tol,
+        linearizable=lin_ok, checkers=tuple(checkers),
+        continuity_ok=cont_ok, continuity=tuple(continuity), steps=steps)
 
 
 # ---------------------------------------------------------------------------

@@ -441,6 +441,46 @@ class CompiledSweep:
                                n_commands=n_commands, seeds=seeds,
                                sharding=sharding, **kwargs)
 
+    def autoscale(self, alpha: float, policies: Sequence[Any],
+                  load: np.ndarray,
+                  workload: Optional[Union[Workload, float]] = None,
+                  **kwargs):
+        """Close the elastic loop over the whole (config x policy) grid
+        (:func:`repro.core.autoscale.autoscale_grid`): every config row
+        crossed with every :class:`~repro.core.api.AutoscalePolicy`
+        (``None`` = the frozen static baseline) becomes one lane, probes
+        are shared batched calls, and the full-horizon replay - actions
+        lowered onto :func:`~repro.core.transient.
+        reconfiguration_schedule` demand spikes - evaluates ALL lanes in
+        ONE jitted device call, so policy search is one `lax.scan` shape
+        away.  Returns traces in config-major order
+        (``traces[m * len(policies) + p]``)."""
+        w = resolve_workload(workload, where="CompiledSweep.autoscale")
+        base = self.demands(w) / alpha
+        servers = np.asarray([m.demand_slots()[2] for m in self.models],
+                             dtype=np.int64)
+        n_m, n_p = base.shape[0], len(policies)
+        bases = np.repeat(base, n_p, axis=0)
+        srv = np.repeat(servers, n_p, axis=0)
+        pols = [policies[i % n_p] for i in range(n_m * n_p)]
+        if self.configs is not None:
+            labels = [f"{config_variant(self.configs[i // n_p])}/p{i % n_p}"
+                      for i in range(n_m * n_p)]
+            if "resizable" not in kwargs:
+                # restrict each config's actions to its registry-derived
+                # live-resizable stations, so every plan replays on the
+                # execution plane unchanged
+                from .execution import resizable_stations
+                per_cfg = [resizable_stations(config_variant(c), c)
+                           for c in self.configs]
+                kwargs["resizable"] = [per_cfg[i // n_p]
+                                       for i in range(n_m * n_p)]
+        else:
+            labels = [f"m{i // n_p}/p{i % n_p}" for i in range(n_m * n_p)]
+        from .autoscale import autoscale_grid
+        return autoscale_grid(bases, srv, pols, load, labels=labels,
+                              **kwargs)
+
     def subset(self, indices: Sequence[int]) -> "CompiledSweep":
         """Row-select a sweep (e.g. a shortlist for the expensive
         transient objective); carries configs when present."""

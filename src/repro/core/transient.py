@@ -48,7 +48,11 @@ Demands are piecewise-constant in time: ``demands[w]`` holds during steps
 * :func:`resharding_schedule` - a live hot-shard split under load over
   flattened ``(shard, station)`` columns: steady skewed traffic, a
   stop-the-world migration window, then the rebalanced (higher-peak)
-  post-split weights.
+  post-split weights;
+* :func:`reconfiguration_schedule` - an autoscale action plan lowered
+  onto a piecewise demand schedule: each add/drain pays a transient
+  demand spike on the resized station at the window it lands in (the
+  controller's modelled reconfiguration cost).
 
 Outputs: per-step completion traces (-> per-window throughput), post-
 warmup mean throughput, and latency mean / p50 / p99 from a log-spaced
@@ -321,6 +325,88 @@ def resharding_schedule(
                                  n_steps)
 
 
+def reconfiguration_schedule(
+    windows: Sequence[np.ndarray],
+    starts: Sequence[float],
+    n_steps: int,
+    *,
+    actions: Sequence[Tuple[int, Union[str, int]]] = (),
+    spike_factor: float = 1.5,
+    spike_fraction: float = 0.25,
+    extra_cuts: Sequence[float] = (),
+) -> Tuple[np.ndarray, np.ndarray]:
+    """An autoscale plan as a piecewise demand schedule, spikes included.
+
+    ``windows[w]`` ([M, K] or [K]) holds from run fraction ``starts[w]``
+    to the next start - the controller's post-action demand matrices
+    (resized stations already rescaled by ``c0 / c``).  Each ``actions``
+    entry ``(window, station)`` marks a resize landing at the start of
+    that window: the marked demand is additionally multiplied by
+    ``spike_factor`` during the first ``spike_fraction`` of the window
+    (state transfer / warm-up traffic riding the reconfiguration, the
+    ISS-style epoch-rotation cost).  ``station`` is a canonical station
+    name, a raw column index (flattened shard columns), or ``None`` to
+    spike the *whole row* - migration commands traverse every station of
+    the pipeline, which is what the execution plane's warm phase
+    (:func:`repro.core.execution.run_autoscaled`) actually replays.
+
+    ``extra_cuts`` forces additional window boundaries (run fractions)
+    even where no demand changes - lanes of a batched policy grid must
+    share ONE ``step_bounds`` vector, so the union of every lane's cut
+    fractions is passed to each lane's schedule.
+
+    Composes through :func:`schedule_from_demands`; returns
+    ``(demands[W', M, K], step_bounds[W'])`` for
+    :func:`simulate_transient`."""
+    if len(windows) != len(starts):
+        raise ValueError(f"{len(windows)} windows vs {len(starts)} starts")
+    if spike_factor < 1.0:
+        raise ValueError(f"spike_factor must be >= 1: {spike_factor}")
+    if not 0.0 <= spike_fraction <= 1.0:
+        raise ValueError(
+            f"spike_fraction must be in [0, 1]: {spike_fraction}")
+    mats = [_as_base(m) for m in windows]
+    base_starts = [float(s) for s in starts]
+    ends = base_starts[1:] + [1.0]
+
+    spans = []  # (spike_start, spike_stop, column)
+    for w, station in actions:
+        w = int(w)
+        if not 0 <= w < len(mats):
+            raise ValueError(
+                f"action window {w} out of range for {len(mats)} windows")
+        if station is None:
+            col = None
+        else:
+            col = (STATION_INDEX[station] if isinstance(station, str)
+                   else int(station))
+            if not 0 <= col < mats[w].shape[1]:
+                raise ValueError(
+                    f"action column {col} out of range for K="
+                    f"{mats[w].shape[1]}")
+        lo = base_starts[w]
+        hi = lo + spike_fraction * (ends[w] - lo)
+        spans.append((lo, hi, col))
+
+    cuts = set(base_starts)
+    cuts.update(hi for _, hi, _ in spans if hi < 1.0)
+    cuts.update(float(c) for c in extra_cuts if 0.0 <= float(c) < 1.0)
+    refined = sorted(cuts)
+
+    out = []
+    for f in refined:
+        w = max(i for i, s in enumerate(base_starts) if s <= f)
+        mat = mats[w].copy()
+        for lo, hi, col in spans:
+            if lo <= f < hi:
+                if col is None:
+                    mat *= spike_factor
+                else:
+                    mat[:, col] *= spike_factor
+        out.append(mat)
+    return schedule_from_demands(out, refined, n_steps)
+
+
 def region_partition_schedule(
     base: np.ndarray,
     model: DeploymentModel,
@@ -398,7 +484,7 @@ def _one_lane(demands_w, step_bounds, dt, entry, nxt, bin_edges, key,
               n_bins: int, exponential: bool):
     """Simulate one (deployment, seed) lane.  demands_w: [W, K] seconds;
     dt/entry scalars; nxt: [K]; bin_edges: [n_bins + 1]."""
-    k = demands_w.shape[1]
+    n_windows, k = demands_w.shape
     if exponential:
         draws = jax.random.exponential(key, (n_steps + 1, k))
     else:
@@ -414,7 +500,7 @@ def _one_lane(demands_w, step_bounds, dt, entry, nxt, bin_edges, key,
     work0 = jnp.zeros((k,)).at[entry].set(draws[0, entry])
 
     def step(state, xs):
-        stage, rank, enter_t, q, work, done, lat_sum, hist = state
+        stage, rank, enter_t, q, work, done, lat_sum, hist, qsum = state
         i, draw_i = xs
         t_end = (i + 1).astype(work.dtype) * dt
 
@@ -449,6 +535,11 @@ def _one_lane(demands_w, step_bounds, dt, entry, nxt, bin_edges, key,
         arrivals = (jnp.zeros_like(q)
                     .at[arrive_at].add(complete.astype(q.dtype)))
         q_new = q_dep + arrivals
+        # per-window queue-depth integral: the autoscale controller's
+        # second signal (utilization says "how busy", queue depth says
+        # "how far behind") - a [W, K] running sum is ~n_steps/W cheaper
+        # to carry out of the scan than per-step queue traces
+        qsum = qsum.at[w].add(q_new.astype(qsum.dtype))
         # new head enters service: carry the completion residual on a busy
         # server (unbiased long-run rate), fresh draw on an idle one
         fresh = (complete & (q_new > 0)) | (~busy & (arrivals > 0))
@@ -457,15 +548,16 @@ def _one_lane(demands_w, step_bounds, dt, entry, nxt, bin_edges, key,
 
         out_flow = jnp.sum(fin).astype(jnp.int32)
         return ((stage_new, rank_new, enter_new, q_new, work_new,
-                 done, lat_sum, hist), out_flow)
+                 done, lat_sum, hist, qsum), out_flow)
 
     state0 = (stage0, rank0, enter0, q0, work0,
               jnp.asarray(0, jnp.int32), jnp.asarray(0.0),
-              jnp.zeros((n_bins,), jnp.int32))
+              jnp.zeros((n_bins,), jnp.int32),
+              jnp.zeros((n_windows, k)))
     xs = (jnp.arange(n_steps, dtype=jnp.int32), draws[1:])
-    (_, _, _, _, _, done, lat_sum, hist), flows = jax.lax.scan(
+    (_, _, _, _, _, done, lat_sum, hist, qsum), flows = jax.lax.scan(
         step, state0, xs)
-    return flows, done, lat_sum, hist
+    return flows, done, lat_sum, hist, qsum
 
 
 @partial(jax.jit, static_argnames=("n_clients", "n_steps", "warmup_steps",
@@ -478,7 +570,7 @@ def _transient_batch(demands_w, step_bounds, dt, entry, nxt, bin_edges,
     demands_w: [W, M, K]; dt/entry: [M]; nxt: [M, K];
     bin_edges: [M, n_bins+1]; seeds: [S] int32.
     Returns (flows[M, S, n_steps] int32, done[M, S], lat_sum[M, S],
-    hist[M, S, n_bins])."""
+    hist[M, S, n_bins], qsum[M, S, W, K])."""
     keys = jax.vmap(lambda s: jax.random.fold_in(jax.random.key(0), s))(seeds)
 
     def per_deployment(d_w, dt_m, entry_m, nxt_m, edges_m):
@@ -516,6 +608,7 @@ class TransientResult:
     bin_edges: np.ndarray          # [M, n_bins + 1]
     n_steps: int
     warmup_steps: int
+    queue_sums: np.ndarray = None  # [M, S, W, K] per-window queue integral
 
     def throughput_trace(self, n_windows: int = 40
                          ) -> Tuple[np.ndarray, np.ndarray]:
@@ -547,6 +640,20 @@ class TransientResult:
             out.append(self.flows[:, :, lo:hi].sum(axis=2)
                        / ((hi - lo) * self.dt[:, None]))
         return np.stack(out, axis=-1)
+
+    def window_queue_depth(self, step_bounds: np.ndarray) -> np.ndarray:
+        """Mean queue depth per *schedule* window and station,
+        [M, S, W, K] commands - the controller's backlog signal.
+
+        ``queue_sums[..., w, k]`` integrates station k's queue over every
+        step of window w; dividing by the window's step count gives the
+        time-average depth (waiters + the one in service).  Pass the same
+        ``step_bounds`` the run was scheduled with."""
+        if self.queue_sums is None:
+            raise ValueError("this result carries no queue_sums surface")
+        bounds = [int(b) for b in step_bounds] + [self.n_steps]
+        steps = np.maximum(np.diff(np.asarray(bounds, dtype=np.float64)), 1.0)
+        return self.queue_sums / steps[None, None, :, None]
 
     def seed_mean_throughput(self) -> np.ndarray:
         """[M] post-warmup throughput averaged over seeds."""
@@ -647,7 +754,7 @@ def simulate_transient(
         seeds_arr = np.asarray(list(seeds), dtype=np.int32)
     warmup_steps = int(n_steps * warmup_frac)
 
-    flows, done, lat_sum, hist = _transient_batch(
+    flows, done, lat_sum, hist, qsum = _transient_batch(
         jnp.asarray(d), jnp.asarray(step_bounds), jnp.asarray(dt_arr),
         jnp.asarray(entry), jnp.asarray(nxt), jnp.asarray(bin_edges),
         jnp.asarray(seeds_arr), n_clients=n_clients, n_steps=n_steps,
@@ -657,6 +764,7 @@ def simulate_transient(
     done = np.asarray(done)
     lat_sum = np.asarray(lat_sum)
     hist = np.asarray(hist)
+    qsum = np.asarray(qsum)
 
     measured = dt_arr[:, None] * (n_steps - warmup_steps)
     return TransientResult(
@@ -671,6 +779,7 @@ def simulate_transient(
         bin_edges=bin_edges,
         n_steps=n_steps,
         warmup_steps=warmup_steps,
+        queue_sums=qsum,
     )
 
 

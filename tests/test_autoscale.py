@@ -1,0 +1,381 @@
+"""Autoscale-plane tests: the AutoscalePolicy contract, the arrival
+shapes, the reconfiguration-spike schedule, the closed-loop controller's
+convergence/monotonicity properties, the (config x policy) grid through
+CompiledSweep.autoscale, policy autotuning, and the min_counts floors
+threading through the variant autotuner."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoscalePolicy,
+    Controller,
+    SweepSpec,
+    Workload,
+    autoscale_grid,
+    autotune_policy,
+    autotune_variants,
+    calibrate_alpha,
+    compile_sweep,
+    diurnal_load,
+    flash_crowd_load,
+    reconfiguration_schedule,
+    variant_candidate_configs,
+)
+from repro.core.api import STATION_INDEX
+from repro.core.sweep import model_for
+
+ALPHA = calibrate_alpha()
+W1 = Workload(f_write=1.0)
+
+# a small synthetic 3-station lane: per-server demand seconds at the
+# initial provisioning (proxy is the bottleneck tier)
+BASE = np.array([30e-6, 12e-6, 20e-6])
+SRV = np.array([3, 2, 3])
+NAMES = ("proxy", "acceptor", "replica")
+FAST = dict(seeds=2, probe_steps=400, n_steps=1200, station_names=NAMES)
+
+
+# ---------------------------------------------------------------------------
+# AutoscalePolicy: the declarative contract
+# ---------------------------------------------------------------------------
+
+
+def test_policy_validates_and_normalizes():
+    p = AutoscalePolicy(min_counts=(("proxy", 2),),
+                        max_counts=(("proxy", 5), ("replica", 4)))
+    assert p.min_for("proxy") == 2
+    assert p.min_for("replica") == 1          # unpinned floor defaults to 1
+    assert p.max_for("proxy") == 5
+    assert p.max_for("acceptor") is None      # unpinned ceiling is unbounded
+    assert "band [0.45, 0.75]" in p.describe()
+    with pytest.raises(ValueError):
+        AutoscalePolicy(target_low=0.8, target_high=0.6)  # inverted band
+    with pytest.raises(ValueError):
+        AutoscalePolicy(target_high=1.5)                  # band beyond 1
+    with pytest.raises(ValueError):
+        AutoscalePolicy(queue_high=-1.0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(cooldown_windows=-1)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_counts=(("proxy", 0),))       # floor below 1
+    with pytest.raises(ValueError):
+        AutoscalePolicy(max_counts=(("proxy", 2), ("proxy", 3)))  # dup
+    with pytest.raises(ValueError):
+        AutoscalePolicy(min_counts=(("proxy", 5),),
+                        max_counts=(("proxy", 3),))       # floor > ceiling
+    with pytest.raises(ValueError):
+        AutoscalePolicy(machine_budget=0)
+    with pytest.raises(ValueError):
+        AutoscalePolicy(spike_factor=0.9)
+    with pytest.raises(TypeError):
+        Controller("not a policy")
+
+
+# ---------------------------------------------------------------------------
+# Arrival shapes
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_load_shape_and_sharpness():
+    load = diurnal_load(12, low=0.25, high=1.0)
+    assert load.shape == (12,)
+    assert np.isclose(load.min(), 0.25, atol=0.02)
+    assert np.isclose(load.max(), 1.0, atol=0.02)
+    assert load.argmax() in (5, 6)            # peak mid-run
+    # sharpness > 1 narrows the peak and widens the trough dwell, so the
+    # integral drops while the extremes stay put - the shape that makes
+    # elasticity pay
+    sharp = diurnal_load(12, low=0.25, sharpness=2.0)
+    assert sharp.sum() < load.sum()
+    assert np.isclose(sharp.max(), load.max(), atol=0.02)
+    with pytest.raises(ValueError):
+        diurnal_load(1)
+    with pytest.raises(ValueError):
+        diurnal_load(8, low=0.0)
+    with pytest.raises(ValueError):
+        diurnal_load(8, low=0.9, high=0.5)
+    with pytest.raises(ValueError):
+        diurnal_load(8, sharpness=0.0)
+
+
+def test_flash_crowd_load_plateau():
+    load = flash_crowd_load(16, base=0.3, peak=1.0, start=0.5, width=0.25)
+    assert load.shape == (16,)
+    assert np.isclose(load.min(), 0.3)
+    plateau = np.nonzero(load == 1.0)[0]
+    assert len(plateau) == 4                  # width * n_windows
+    assert np.array_equal(plateau, np.arange(8, 12))
+    with pytest.raises(ValueError):
+        flash_crowd_load(1)
+    with pytest.raises(ValueError):
+        flash_crowd_load(8, base=0.8, peak=0.5)
+
+
+# ---------------------------------------------------------------------------
+# The reconfiguration spike schedule
+# ---------------------------------------------------------------------------
+
+
+def test_reconfiguration_schedule_spikes_one_station_or_whole_row():
+    rows = [np.array([2e-5, 1e-5]), np.array([4e-5, 1e-5])]
+    starts = [0.0, 0.5]
+    # a per-station spike multiplies only that column during the first
+    # spike_fraction of the action window
+    dem, bounds = reconfiguration_schedule(
+        rows, starts, 1000, actions=[(1, "leader")],
+        spike_factor=2.0, spike_fraction=0.25)
+    assert dem.shape == (3, 1, 2)
+    assert np.array_equal(bounds, [0, 500, 625])
+    col = STATION_INDEX["leader"]
+    assert dem[1, 0, col] == pytest.approx(2.0 * rows[1][col])
+    assert dem[1, 0, 1 - col] == pytest.approx(rows[1][1 - col])
+    assert np.allclose(dem[2, 0], rows[1])    # spike over, plain window
+    # station=None spikes the WHOLE row - migration traffic traverses
+    # every station, which is what the execution plane's warm phase does
+    dem2, bounds2 = reconfiguration_schedule(
+        rows, starts, 1000, actions=[(1, None)],
+        spike_factor=2.0, spike_fraction=0.25)
+    assert np.array_equal(bounds2, bounds)
+    assert np.allclose(dem2[1, 0], 2.0 * rows[1])
+    assert np.allclose(dem2[2, 0], rows[1])
+    # extra_cuts force shared boundaries even without demand changes
+    _, bounds3 = reconfiguration_schedule(rows, starts, 1000,
+                                          extra_cuts=[0.25])
+    assert np.array_equal(bounds3, [0, 250, 500])
+    with pytest.raises(ValueError):
+        reconfiguration_schedule(rows, starts, 1000, actions=[(1, "tail")])
+    with pytest.raises(ValueError):
+        reconfiguration_schedule(rows, starts, 1000, spike_factor=0.5)
+
+
+# ---------------------------------------------------------------------------
+# The closed loop: one elastic lane next to the frozen static baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def two_lane():
+    pol = AutoscalePolicy(target_low=0.4, target_high=0.7,
+                          cooldown_windows=0, min_counts=(("proxy", 2),))
+    return autoscale_grid(
+        np.stack([BASE, BASE]), np.stack([SRV, SRV]), [pol, None],
+        diurnal_load(6, low=0.3, sharpness=2.0), **FAST)
+
+
+def test_elastic_lane_breathes_with_the_diurnal_cycle(two_lane):
+    el, st = two_lane
+    assert el.counts.shape == (6, 3)
+    assert len(el.actions) > 0
+    # drains into the trough, adds back toward the peak, cheaper overall
+    assert el.machines.min() < el.machines.max()
+    assert el.machine_time < st.machine_time
+    assert np.array_equal(el.machines, el.counts.sum(axis=1))
+    assert el.machine_time == pytest.approx(el.machines.mean())
+    # the proxy floor from min_counts is never violated
+    assert el.counts[:, 0].min() >= 2
+    # actions land on windows 1..W-1 (a decision in the last window
+    # could only take effect beyond the horizon)
+    assert all(1 <= a.window <= 5 for a in el.actions)
+    assert "drain" in el.describe() or "add" in el.describe()
+
+
+def test_static_lane_is_frozen(two_lane):
+    _, st = two_lane
+    assert st.policy is None
+    assert st.actions == ()
+    assert (st.counts == st.counts[0]).all()
+    assert st.machine_time == pytest.approx(float(SRV.sum()))
+
+
+def test_replay_grid_and_predicted_dips(two_lane):
+    el, st = two_lane
+    # one shared refined window grid across lanes, strictly increasing
+    assert np.array_equal(el.step_bounds, st.step_bounds)
+    assert np.all(np.diff(el.step_bounds) > 0)
+    assert el.replay_window.min() == 0 and el.replay_window.max() == 5
+    # every action window carries a spike segment whose predicted dip is
+    # a genuine slowdown ratio; windows without actions predict None
+    action_windows = {a.window for a in el.actions}
+    for w in range(6):
+        dip = el.predicted_dip(w)
+        if w in action_windows:
+            assert dip is not None and 0.0 < dip < 1.0
+        else:
+            assert dip is None
+    assert not st.replay_spike.any()
+    assert el.replay_spike.any()
+    assert el.replay_rates().shape == el.step_bounds.shape
+
+
+def test_plan_is_plain_data(two_lane):
+    el, _ = two_lane
+    plan = el.plan()
+    assert len(plan) == len(el.actions)
+    for row, act in zip(plan, el.actions):
+        assert set(row) == {"window", "station", "delta"}
+        assert row["station"] in NAMES
+        assert row["delta"] in (-1, 1)
+        assert row["window"] == act.window
+
+
+def test_grid_input_validation():
+    with pytest.raises(ValueError):
+        autoscale_grid(BASE[None, :], SRV[None, :], [None, None],
+                       diurnal_load(4))                    # lane mismatch
+    with pytest.raises(ValueError):
+        autoscale_grid(BASE[None, :], np.array([[3, 2]]), [None],
+                       diurnal_load(4))                    # shape mismatch
+    with pytest.raises(ValueError):
+        Controller(AutoscalePolicy()).run(BASE, SRV, np.array([1.0]))
+    with pytest.raises(ValueError):
+        Controller(AutoscalePolicy()).run(BASE, SRV,
+                                          np.array([0.5, -0.1, 0.5]))
+    with pytest.raises(ValueError):
+        Controller(AutoscalePolicy()).run(BASE, SRV, diurnal_load(4),
+                                          peak_utilization=1.5)
+    with pytest.raises(ValueError):
+        Controller(AutoscalePolicy()).run(BASE, SRV, diurnal_load(4),
+                                          station_names=("a", "b"))
+
+
+def test_constant_load_converges_to_zero_actions():
+    """The hysteresis guard: under constant offered load the controller
+    settles - after the initial ramp no window triggers another resize
+    (a drain is only taken when its inverse add cannot re-trigger)."""
+    pol = AutoscalePolicy(target_low=0.4, target_high=0.75,
+                          cooldown_windows=0)
+    tr = Controller(pol).run(BASE, SRV, np.full(8, 0.55), **FAST)
+    assert all(a.window <= 2 for a in tr.actions)
+    # and the settled provisioning holds to the horizon
+    assert (tr.counts[3:] == tr.counts[3]).all()
+
+
+def test_machine_budget_caps_total_provisioning():
+    pol = AutoscalePolicy(target_low=0.4, target_high=0.6,
+                          cooldown_windows=0, queue_high=1.0,
+                          machine_budget=int(SRV.sum()))
+    tr = Controller(pol).run(
+        BASE, SRV, flash_crowd_load(8, base=0.3, start=0.4, width=0.4),
+        **FAST)
+    assert tr.peak_machines <= int(SRV.sum())
+
+
+def test_resizable_restricts_actions_to_named_stations():
+    pol = AutoscalePolicy(target_low=0.4, target_high=0.7,
+                          cooldown_windows=0)
+    tr = Controller(pol).run(BASE, SRV, diurnal_load(6, low=0.3,
+                                                     sharpness=2.0),
+                             resizable=[("proxy",)], **FAST)
+    assert tr.actions and all(a.station == "proxy" for a in tr.actions)
+    # non-resizable columns never move
+    assert (tr.counts[:, 1] == SRV[1]).all()
+    assert (tr.counts[:, 2] == SRV[2]).all()
+
+
+# ---------------------------------------------------------------------------
+# Policy search + the band monotonicity property
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def band_sweep():
+    pols = (
+        AutoscalePolicy(target_low=0.3, target_high=0.55,
+                        cooldown_windows=0),
+        AutoscalePolicy(target_low=0.4, target_high=0.65,
+                        cooldown_windows=0),
+        AutoscalePolicy(target_low=0.5, target_high=0.8,
+                        cooldown_windows=0),
+    )
+    return autotune_policy(pols, BASE, SRV,
+                           diurnal_load(6, low=0.3, sharpness=2.0),
+                           p99_slack=10.0, **FAST)
+
+
+def test_machine_time_monotone_in_utilization_band(band_sweep):
+    """A hotter utilization target tolerates more load per server, so it
+    can never need MORE machines: machine-time is non-increasing as the
+    band rises."""
+    mts = [c.machine_time for c in band_sweep.choices[:-1]]
+    assert all(a >= b for a, b in zip(mts, mts[1:]))
+
+
+def test_autotune_policy_picks_cheapest_within_slack(band_sweep):
+    tune = band_sweep
+    assert len(tune.choices) == 4             # 3 policies + static
+    assert tune.static.policy is None
+    assert tune.static is tune.choices[-1]
+    assert tune.winner in tune.choices
+    # generous slack: the cheapest lane wins and beats static
+    assert tune.winner.machine_time == min(c.machine_time
+                                           for c in tune.choices)
+    assert tune.winner.machine_time < tune.static.machine_time
+    assert "saved" in tune.describe()
+
+
+def test_autotune_policy_falls_back_to_static_under_tight_slack():
+    pol = AutoscalePolicy(target_low=0.5, target_high=0.8,
+                          cooldown_windows=0)
+    tune = autotune_policy((pol,), BASE, SRV,
+                           diurnal_load(4, low=0.3, sharpness=2.0),
+                           p99_slack=1e-6, **FAST)
+    assert tune.winner.policy is None
+    assert tune.winner is tune.static
+    with pytest.raises(ValueError):
+        autotune_policy((), BASE, SRV, diurnal_load(4))
+    with pytest.raises(ValueError):
+        autotune_policy((pol,), BASE, SRV, diurnal_load(4), p99_slack=0.0)
+
+
+# ---------------------------------------------------------------------------
+# The (config x policy) grid through the compiled sweep
+# ---------------------------------------------------------------------------
+
+
+def test_compiled_sweep_autoscale_is_config_major():
+    pol = AutoscalePolicy(target_low=0.4, target_high=0.7,
+                          cooldown_windows=0)
+    grid = compile_sweep(SweepSpec(n_proxy_leaders=(3, 4), n_replicas=(3,)))
+    traces = grid.autoscale(ALPHA, [pol, None], diurnal_load(4, low=0.35),
+                            workload=W1, seeds=2, probe_steps=400,
+                            n_steps=1200)
+    assert len(traces) == 2 * len(grid)
+    assert [t.label for t in traces] == [
+        "compartmentalized/p0", "compartmentalized/p1",
+        "compartmentalized/p0", "compartmentalized/p1"]
+    for m in range(len(grid)):
+        assert traces[2 * m].policy is pol
+        assert traces[2 * m + 1].policy is None
+        assert traces[2 * m + 1].actions == ()
+        # lanes carry each config's own provisioning
+        srv = grid.models[m].demand_slots()[2]
+        assert int(traces[2 * m].servers0.sum()) == int(sum(srv))
+    # the two configs differ in proxies, so the lanes genuinely differ
+    assert not np.array_equal(traces[0].servers0, traces[2].servers0)
+
+
+# ---------------------------------------------------------------------------
+# min_counts floors thread through the variant autotuner (regression pin)
+# ---------------------------------------------------------------------------
+
+
+def test_min_counts_floor_filters_candidate_configs():
+    pol = AutoscalePolicy(min_counts=(("proxy", 6),))
+    free = variant_candidate_configs(14, variants=("compartmentalized",))
+    floored = variant_candidate_configs(14, variants=("compartmentalized",),
+                                        policy=pol)
+    assert 0 < len(floored) < len(free)
+    col = STATION_INDEX["proxy"]
+    for cfg in floored:
+        srv = model_for(cfg).demand_slots()[2]
+        # stations the config actually provisions must sit on the floor
+        assert srv[col] == 0 or srv[col] >= 6
+
+
+def test_autotune_variants_respects_policy_floors():
+    pol = AutoscalePolicy(min_counts=(("proxy", 6),))
+    res = autotune_variants(14, ALPHA, W1, variants=("compartmentalized",),
+                            policy=pol)
+    col = STATION_INDEX["proxy"]
+    assert res.winner.model.demand_slots()[2][col] >= 6
+    assert res.winner.machines <= 14

@@ -1,0 +1,177 @@
+"""Execution-plane autoscale tests: the registry-derived resize handles
+(station_knob_map / resize_config - zero per-variant branches), the
+run_autoscaled epoch replay on plain plans, and the pinned end-to-end
+loop: a Controller plan from the transient plane replayed live on a
+real compartmentalized cluster, linearizable across every resize, with
+measured warm-phase dips parity-checking the transient prediction."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AutoscalePolicy,
+    Controller,
+    Workload,
+    calibrate_alpha,
+    default_config,
+    diurnal_load,
+    resizable_stations,
+    resize_config,
+    run_autoscaled,
+    station_knob_map,
+    variant_spec,
+)
+from repro.core.api import STATION_ORDER
+
+W = Workload(f_write=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Registry-derived resize handles, over every executable variant
+# ---------------------------------------------------------------------------
+
+
+def test_station_knob_map_is_a_true_resize_handle(executable_variant):
+    """For every executable variant: each mapped knob moves exactly its
+    station's server count by exactly one and nothing else - the
+    property the map is derived from, re-checked against the variant's
+    own analytical model."""
+    name = executable_variant
+    mapping = station_knob_map(name)
+    assert resizable_stations(name) == tuple(sorted(mapping))
+    spec = variant_spec(name)
+    cfg = default_config(name)
+    base = list(spec.model(cfg, W).demand_slots()[2])
+    for station, key in mapping.items():
+        assert station in list(STATION_ORDER)
+        col = list(STATION_ORDER).index(station)
+        up = resize_config(name, cfg, station, +1)
+        assert up[key] == cfg[key] + 1
+        srv = list(spec.model(up, W).demand_slots()[2])
+        assert srv[col] == base[col] + 1
+        srv[col] -= 1
+        assert srv == base                     # no other station moved
+    if not mapping:
+        # knobless variants (unreplicated, the vanilla baselines) have
+        # no elastic handles - resize is a hard error, not a silent noop
+        with pytest.raises(ValueError):
+            resize_config(name, cfg, "proxy", +1)
+
+
+def test_resize_config_validation():
+    cfg = default_config("compartmentalized")
+    with pytest.raises(ValueError):
+        resize_config("compartmentalized", cfg, "acceptor", +1)  # coupled
+    with pytest.raises(ValueError):
+        resize_config("compartmentalized", cfg, "tail", +1)      # no such
+    small = dict(cfg, n_replicas=1)
+    with pytest.raises(ValueError):
+        resize_config("compartmentalized", small, "replica", -1)  # below 1
+    # the original dict is never mutated
+    out = resize_config("compartmentalized", cfg, "proxy", -1)
+    assert out["n_proxy_leaders"] == cfg["n_proxy_leaders"] - 1
+    assert cfg == default_config("compartmentalized")
+
+
+# ---------------------------------------------------------------------------
+# run_autoscaled on a plain-data plan
+# ---------------------------------------------------------------------------
+
+
+def test_run_autoscaled_plain_plan_adds_a_proxy():
+    exe = run_autoscaled(
+        "compartmentalized",
+        [{"window": 1, "station": "proxy", "delta": 1}],
+        load=[1.0, 1.0, 0.6], workload=W, n_commands_per_window=18, seed=1)
+    assert exe.passed and exe.linearizable and exe.continuity_ok
+    assert len(exe.epochs) == 2
+    assert (exe.final_config["n_proxy_leaders"]
+            == exe.initial_config["n_proxy_leaders"] + 1)
+    # machine accounting follows the resize from its window on
+    assert exe.machines[1] == exe.machines[0] + 1
+    assert exe.machines[2] == exe.machines[1]
+    # a plain plan carries no transient prediction: the dip row is
+    # recorded but trivially ok
+    assert len(exe.dip_rows) == 1
+    assert exe.dip_rows[0]["predicted"] is None and exe.dip_rows[0]["ok"]
+    # the warm phase costs real virtual time in the action window
+    assert exe.window_rates[1] < exe.serve_rates[1]
+    assert "autoscaled over 3 windows" in exe.describe()
+
+
+def test_every_resizable_variant_replays_linearizably(executable_variant):
+    """Zero core edits for any registry variant: every executable with
+    resize handles replays a one-action plan live - linearizable,
+    state-continuous, machine accounting moving with the resize."""
+    name = executable_variant
+    rz = resizable_stations(name)
+    if not rz:
+        pytest.skip(f"{name} declares no resize handles")
+    exe = run_autoscaled(name,
+                         [{"window": 1, "station": rz[0], "delta": 1}],
+                         load=[1.0, 1.0], workload=W,
+                         n_commands_per_window=12, seed=2)
+    assert exe.passed, exe.describe()
+    assert exe.machines[1] == exe.machines[0] + 1
+    assert len(exe.epochs) == 2
+
+
+def test_run_autoscaled_rejects_bad_plans():
+    with pytest.raises(ValueError):
+        run_autoscaled("compartmentalized",
+                       [{"window": 9, "station": "proxy", "delta": 1}],
+                       load=[1.0, 1.0], workload=W)
+    with pytest.raises(ValueError):
+        run_autoscaled("compartmentalized",
+                       [{"window": 1, "station": "acceptor", "delta": 1}],
+                       load=[1.0, 1.0], workload=W)
+    with pytest.raises(ValueError):
+        run_autoscaled("compartmentalized", [], load=[], workload=W)
+    with pytest.raises(ValueError):
+        run_autoscaled("vanilla_multipaxos",
+                       [{"window": 1, "station": "proxy", "delta": 1}],
+                       load=[1.0, 1.0], workload=W)
+
+
+# ---------------------------------------------------------------------------
+# The pinned end-to-end loop: transient plan -> live cluster replay
+# ---------------------------------------------------------------------------
+
+
+def test_controller_plan_replays_linearizably_with_dip_parity():
+    """The acceptance gate, shrunk: close the loop on the transient
+    plane for a small compartmentalized deployment over a diurnal cycle,
+    then replay the emitted plan on the real cluster.  Every resize must
+    stay linearizable and state-continuous, and each action window's
+    measured dip (serve rate over serve+reconfiguration rate) must match
+    the transient prediction within the replay tolerance."""
+    alpha = calibrate_alpha()
+    w = Workload(f_write=1.0)
+    exe_cfg = {"f": 1, "n_proxy_leaders": 4, "grid_rows": 2,
+               "grid_cols": 2, "n_replicas": 3}
+    ctl = Controller(AutoscalePolicy(target_low=0.45, target_high=0.75,
+                                     cooldown_windows=0))
+    plan = ctl.run_config(exe_cfg, diurnal_load(5, low=0.35), alpha=alpha,
+                          workload=w, seeds=2, probe_steps=500,
+                          n_steps=2000)
+    assert plan.label == "compartmentalized"
+    assert len(plan.actions) > 0
+    # run_config restricts actions to the registry's live-resizable set
+    allowed = set(resizable_stations("compartmentalized", exe_cfg))
+    assert {a.station for a in plan.actions} <= allowed
+
+    exe = run_autoscaled("compartmentalized", plan, config=exe_cfg,
+                         workload=w, n_commands_per_window=24, seed=3)
+    assert exe.passed, exe.describe()
+    assert exe.linearizable and exe.continuity_ok and exe.dips_ok
+    # one epoch per distinct action window, plus the initial one
+    assert len(exe.epochs) == len({a.window for a in plan.actions}) + 1
+    # machine accounting agrees with the transient plan window for window
+    assert list(exe.machines) == [int(m) for m in plan.machines]
+    # at least one dip row carries a genuine transient prediction and
+    # every one sits within tolerance
+    preds = [r for r in exe.dip_rows if r["predicted"] is not None]
+    assert preds
+    for r in preds:
+        assert abs(r["measured"] - r["predicted"]) <= exe.tolerance
+    # continuity probes returned the pre-resize committed values
+    assert all(got == want for _, want, got in exe.continuity)

@@ -186,6 +186,29 @@ def test_relabeled_validates_and_round_trips():
         GEO_WAN.relabeled((0, 0, 2))
 
 
+def test_directed_rtt_matrix_is_legal_and_reads_per_direction():
+    """Asymmetric matrices (a congested heal path after a region outage)
+    validate, and every hop reads its own directed half-RTT; the
+    ``symmetric`` property tells the two worlds apart."""
+    g = GeoSpec(regions=("us", "eu"), rtt=((0.0, 80.0), (120.0, 0.0)))
+    assert not g.symmetric
+    assert GEO_WAN.symmetric
+    assert g.one_way(0, 1) == 40.0
+    assert g.one_way(1, 0) == 60.0        # the slow return direction
+    assert g.one_way(0, 0) == 0.0
+    assert g.hop_delay(0, 1) == g.local_delay + 40.0
+    assert g.hop_delay(1, 0) == g.local_delay + 60.0
+    # relabeling transposes coherently: the directed pair swaps with it
+    r = g.relabeled((1, 0))
+    assert not r.symmetric
+    assert r.rtt[r.regions.index("eu")][r.regions.index("us")] == 120.0
+    # the usual shape validation still bites
+    with pytest.raises(ValueError):
+        GeoSpec(regions=("us", "eu"), rtt=((0.0, -1.0), (1.0, 0.0)))
+    with pytest.raises(ValueError):
+        GeoSpec(regions=("us", "eu"), rtt=((5.0, 80.0), (80.0, 0.0)))
+
+
 # ---------------------------------------------------------------------------
 # Wire semantics: timers stay local, jitter stacks
 # ---------------------------------------------------------------------------
